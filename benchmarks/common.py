@@ -1,0 +1,163 @@
+"""Shared benchmark utilities: data patterns, the CABA performance model,
+timing, table printing.
+
+Data patterns mirror the paper's workload taxonomy (6, Fig. 13): GPGPU
+kernels carry integer-heavy, low-dynamic-range, pointer-like and sparse
+data; ML systems add bf16 weights/activations/KV tensors.  Each pattern is
+a named generator so every figure benchmark sweeps the same corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.analysis import PEAK_FLOPS, HBM_BW, ICI_BW, DCN_BW
+
+
+# ---------------------------------------------------------------------------
+# data-pattern corpus
+# ---------------------------------------------------------------------------
+
+def _weights_bf16(rng, n):
+    return jnp.asarray(rng.standard_normal(n) * 0.02, jnp.bfloat16)
+
+
+DATA_PATTERNS: dict[str, Callable] = {
+    # paper-like integer patterns (GPGPU workload stand-ins)
+    "narrow_int": lambda rng, n: jnp.asarray(
+        (rng.integers(0, 100, n) + 1_000_000).astype(np.int32)),
+    "zeros": lambda rng, n: jnp.zeros(n, jnp.int32),
+    "repeated": lambda rng, n: jnp.asarray(
+        rng.integers(0, 2**30, 4)[rng.integers(0, 4, n)].astype(np.int32)),
+    "pointer_like": lambda rng, n: jnp.asarray(
+        (0x7F000000 + rng.integers(0, 1024, n) * 16).astype(np.int32)),
+    "sparse_int": lambda rng, n: jnp.asarray(
+        (rng.integers(0, 50, n) * (rng.random(n) < 0.1)).astype(np.int32)),
+    "noise_int": lambda rng, n: jnp.asarray(
+        rng.integers(0, 2**31, n).astype(np.int32)),
+    # ML-tensor patterns (the TPU CABA sites)
+    "weights_bf16": _weights_bf16,
+    "token_ids": lambda rng, n: jnp.asarray(
+        (rng.zipf(1.3, n) % 32000).astype(np.int32)),
+    "grads_f32": lambda rng, n: jnp.asarray(
+        (rng.standard_normal(n) * 1e-3).astype(np.float32)),
+    "kv_bf16": lambda rng, n: jnp.asarray(
+        rng.standard_normal(n).astype(np.float32), jnp.bfloat16),
+}
+
+
+# ---------------------------------------------------------------------------
+# CABA performance model (paper 7 designs, TPU terms)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellTerms:
+    """Roofline terms of one (arch x shape) cell, seconds per device."""
+    compute: float
+    memory: float
+    collective: float
+
+    @property
+    def step(self) -> float:
+        return max(self.compute, self.memory, self.collective)
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.compute, "memory": self.memory,
+             "collective": self.collective}
+        return max(t, key=t.get)
+
+
+# VPU throughput for decompression subroutines (ops/s, controller.py)
+VPU_OPS = 4 * 8 * 128 * 940e6
+
+
+def caba_design_step(terms: CellTerms, *, design: str, ratio: float,
+                     weight_frac: float, decomp_ops_per_byte: float = 1.0
+                     ) -> CellTerms:
+    """Model the paper's four designs on a memory roofline cell.
+
+    design: base | hw_mem (HW-BDI-Mem) | hw (HW-BDI) | caba (CABA-BDI) |
+            ideal (Ideal-BDI).
+    ratio: compression ratio on the compressible traffic fraction
+    weight_frac: fraction of the memory term that is compressible traffic
+    """
+    compressible = terms.memory * weight_frac
+    saved = compressible * (1 - 1 / ratio)
+    if design == "base":
+        return terms
+    if design in ("hw_mem", "hw", "ideal"):
+        # dedicated logic: no compute overhead (1-5 cycle latency amortized)
+        mem = terms.memory - saved
+        coll = terms.collective
+        if design == "hw":            # also compresses interconnect
+            coll = terms.collective * (1 - weight_frac * (1 - 1 / ratio))
+        if design == "ideal":
+            coll = terms.collective * (1 - weight_frac * (1 - 1 / ratio))
+        return CellTerms(terms.compute, mem, coll)
+    if design == "caba":
+        # decompression spends idle VPU flops: bytes * ops/byte / VPU rate
+        bytes_touched = compressible * HBM_BW / ratio
+        decomp_s = bytes_touched * decomp_ops_per_byte / VPU_OPS
+        mem = terms.memory - saved
+        coll = terms.collective * (1 - weight_frac * (1 - 1 / ratio))
+        return CellTerms(terms.compute + decomp_s, mem, coll)
+    raise ValueError(design)
+
+
+# ---------------------------------------------------------------------------
+# energy model (pJ; public per-op estimates, bf16 MAC + HBM/ICI transfers)
+# ---------------------------------------------------------------------------
+
+PJ_PER_FLOP = 0.4          # bf16 MAC on a 5nm-class MXU
+PJ_PER_HBM_BYTE = 30.0     # HBM3-class access energy
+PJ_PER_ICI_BYTE = 10.0
+PJ_PER_DCN_BYTE = 40.0
+
+
+def energy_joules(flops, hbm_bytes, ici_bytes=0.0, dcn_bytes=0.0) -> float:
+    return (flops * PJ_PER_FLOP + hbm_bytes * PJ_PER_HBM_BYTE
+            + ici_bytes * PJ_PER_ICI_BYTE
+            + dcn_bytes * PJ_PER_DCN_BYTE) * 1e-12
+
+
+# ---------------------------------------------------------------------------
+# timing + tables
+# ---------------------------------------------------------------------------
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def print_table(title: str, header: list, rows: list, fmt: str = "10.3f"):
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), 12) for h in header]
+    print(" | ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    print("-+-".join("-" * w for w in widths))
+    for row in rows:
+        cells = []
+        for v, w in zip(row, widths):
+            if isinstance(v, float):
+                cells.append(f"{v:{fmt}}".ljust(w))
+            else:
+                cells.append(str(v).ljust(w))
+        print(" | ".join(cells))
+
+
+def load_dryrun(path="experiments/dryrun_baseline/summary.json"):
+    import json, os
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [r for r in json.load(f)["results"] if "skipped" not in r]

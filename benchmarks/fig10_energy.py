@@ -1,0 +1,61 @@
+"""Paper Fig. 10/11: energy and energy-delay product.
+
+Energy model: per-op estimates (pJ/flop, pJ/HBM-byte, pJ/ICI-byte) applied
+to the dry-run terms before/after CABA compression.  Validation: energy
+drops on memory-bound cells (paper: -22.2% avg, DRAM power -29.5%) and EDP
+drops strictly more (paper: -45%).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (CellTerms, caba_design_step, energy_joules,
+                               load_dryrun, print_table)
+from benchmarks.fig8_performance import measured_weight_ratio
+from repro.roofline.analysis import HBM_BW, ICI_BW
+
+
+def run(dryrun_path="experiments/dryrun_baseline/summary.json"):
+    cells = [r for r in load_dryrun(dryrun_path)
+             if r["bottleneck"] == "memory" and r["mesh"].startswith("data")]
+    rows, ratios = [], []
+    for r in cells:
+        ratio = 0.5 * measured_weight_ratio(r["arch"]) + 0.5 * 2.0
+        wf = 0.85
+        terms = CellTerms(r["compute_s"], r["memory_s"], r["collective_s"])
+        caba = caba_design_step(terms, design="caba", ratio=ratio,
+                                weight_frac=wf)
+        e_base = energy_joules(r["hlo_flops_per_dev"],
+                               r["hlo_bytes_per_dev"],
+                               r["ici_GB"] * 1e9, r["dcn_GB"] * 1e9)
+        bytes_after = (r["hlo_bytes_per_dev"] * (1 - wf)
+                       + r["hlo_bytes_per_dev"] * wf / ratio)
+        decomp_flops = bytes_after * 1.0          # 1 VPU op / byte
+        e_caba = energy_joules(r["hlo_flops_per_dev"] + decomp_flops,
+                               bytes_after,
+                               r["ici_GB"] * 1e9 / ratio,
+                               r["dcn_GB"] * 1e9 / ratio)
+        edp_base = e_base * terms.step
+        edp_caba = e_caba * caba.step
+        rows.append([f"{r['arch']}.{r['shape']}", e_base, e_caba,
+                     e_caba / e_base, edp_caba / edp_base])
+        ratios.append((e_caba / e_base, edp_caba / edp_base))
+    print_table("Fig 10/11: J/step/device and EDP, base vs CABA",
+                ["cell", "E base (J)", "E caba (J)", "E ratio",
+                 "EDP ratio"], rows, fmt="9.4f")
+    return ratios
+
+
+def main():
+    ratios = run()
+    e_mean = float(np.mean([e for e, _ in ratios]))
+    edp_mean = float(np.mean([d for _, d in ratios]))
+    assert e_mean < 0.95, e_mean
+    assert edp_mean < e_mean          # EDP improves more than energy
+    print(f"\n[fig10/11] PASS: mean energy {100*(1-e_mean):.1f}% lower "
+          f"(paper: 22.2%), EDP {100*(1-edp_mean):.1f}% lower (paper: 45%)")
+    return ratios
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 14: sensitivity to peak memory bandwidth (0.5x / 1x / 2x).
+
+Validation: CABA at 1x bandwidth approaches Base at 2x bandwidth on
+memory-bound cells ("compression is often equivalent to doubling the
+off-chip bandwidth"), and the CABA win GROWS as bandwidth shrinks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CellTerms, caba_design_step, load_dryrun, \
+    print_table
+from benchmarks.fig8_performance import measured_weight_ratio
+
+
+def run(dryrun_path="experiments/dryrun_baseline/summary.json"):
+    cells = [r for r in load_dryrun(dryrun_path)
+             if r["bottleneck"] == "memory" and r["mesh"].startswith("data")]
+    rows, out = [], {}
+    for r in cells:
+        ratio = 0.5 * measured_weight_ratio(r["arch"]) + 0.5 * 2.0
+        row = [f"{r['arch']}.{r['shape']}"]
+        rec = {}
+        for bw_mult in (0.5, 1.0, 2.0):
+            terms = CellTerms(r["compute_s"], r["memory_s"] / bw_mult,
+                              r["collective_s"])
+            caba = caba_design_step(terms, design="caba", ratio=ratio,
+                                    weight_frac=0.85)
+            rec[bw_mult] = (terms.step, caba.step)
+            row += [terms.step * 1e3, caba.step * 1e3]
+        rows.append(row)
+        out[f"{r['arch']}.{r['shape']}"] = rec
+    print_table("Fig 14: step ms at 0.5x/1x/2x HBM bandwidth (base | caba)",
+                ["cell", "0.5x base", "0.5x caba", "1x base", "1x caba",
+                 "2x base", "2x caba"], rows, fmt="9.3f")
+    return out
+
+
+def main():
+    out = run()
+    grow, equiv = [], []
+    for rec in out.values():
+        sp_05 = rec[0.5][0] / rec[0.5][1]
+        sp_1 = rec[1.0][0] / rec[1.0][1]
+        sp_2 = rec[2.0][0] / rec[2.0][1]
+        grow.append(sp_05 >= sp_1 >= sp_2 - 1e-9)
+        # caba at 1x vs base at 2x
+        equiv.append(rec[1.0][1] / rec[2.0][0])
+    assert all(grow), "CABA win must grow as bandwidth shrinks"
+    m = float(np.mean(equiv))
+    print(f"\n[fig14] PASS: speedup grows at lower BW; CABA@1x step is "
+          f"{m:.2f}x of Base@2x step (1.0 = exactly 'doubled bandwidth')")
+    return out
+
+
+if __name__ == "__main__":
+    main()

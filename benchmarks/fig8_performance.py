@@ -1,0 +1,88 @@
+"""Paper Fig. 8: normalized performance of Base / HW-BDI-Mem / HW-BDI /
+CABA-BDI / Ideal-BDI.
+
+TPU retargeting: the five designs act on the roofline terms of each
+memory-bound dry-run cell (decode cells -- the regime where weight/KV
+streaming dominates, DESIGN.md 4).  Compression ratio is MEASURED on real
+reduced-model tensors (weights via BDI/planes, KV via int8); CABA's
+decompression cost is charged to the compute term at the per-scheme
+ops/byte rate; HW designs get dedicated-logic zero overhead; Ideal is
+overhead-free compression of both memory and interconnect traffic.
+
+Validation: CABA-BDI within a few percent of HW-BDI and Ideal-BDI (paper:
+2.8% from Ideal), large speedup over Base on memory-bound cells (paper:
++41.7% average).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (CellTerms, caba_design_step, load_dryrun,
+                               print_table)
+from repro.configs import ARCHS, reduced
+from repro.core.schemes import selector
+from repro.models.model import build_model
+
+DESIGNS = ("base", "hw_mem", "hw", "caba", "ideal")
+
+
+def measured_weight_ratio(arch_name: str) -> float:
+    """BestOfAll lossless ratio on real (reduced) model weights, plus the
+    int8 fixed-rate alternative the controller may pick for KV."""
+    cfg = reduced(ARCHS[arch_name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # sample the big 2-D projection tensors
+    mats = [p for p in jax.tree.leaves(params) if p.ndim >= 2][:6]
+    ratios = []
+    for m in mats:
+        best = selector.best_of_all(m, ("bdi", "planes"))
+        ratios.append(max(best.ratio, 1.0))
+    return float(np.mean(ratios))
+
+
+def run(dryrun_path="experiments/dryrun_baseline/summary.json"):
+    cells = [r for r in load_dryrun(dryrun_path)
+             if r["mesh"].startswith("data") and r["bottleneck"] == "memory"]
+    rows, speedups = [], {}
+    for r in cells:
+        terms = CellTerms(r["compute_s"], r["memory_s"], r["collective_s"])
+        # decode/serving traffic: weights+KV dominate the memory term.
+        # lossless BDI/planes on weights measured; int8 on KV fixed 2x.
+        w_ratio = measured_weight_ratio(r["arch"])
+        kv_ratio = 2.0
+        ratio = 0.5 * w_ratio + 0.5 * kv_ratio     # mixed traffic
+        weight_frac = 0.85                         # non-compressible: masks,
+        row = [f"{r['arch']}.{r['shape']}"]        # indices, activations
+        base = None
+        for d in DESIGNS:
+            t = caba_design_step(terms, design=d, ratio=ratio,
+                                 weight_frac=weight_frac)
+            if d == "base":
+                base = t.step
+            row.append(base / t.step)
+            speedups.setdefault(d, []).append(base / t.step)
+        rows.append(row)
+    header = ["cell"] + [f"{d} (x)" for d in DESIGNS]
+    print_table("Fig 8: normalized performance (memory-bound cells, "
+                "single-pod)", header, rows, fmt="8.3f")
+    means = {d: float(np.mean(v)) for d, v in speedups.items()}
+    print("  mean speedups:", {d: round(v, 3) for d, v in means.items()})
+    return means
+
+
+def main():
+    means = run()
+    assert means["caba"] > 1.15, means            # significant speedup
+    assert means["ideal"] >= means["hw"] >= means["caba"] > means["base"]
+    gap = (means["ideal"] - means["caba"]) / means["ideal"]
+    assert gap < 0.06, gap                        # paper: 2.8% from Ideal
+    print(f"\n[fig8] PASS: CABA-BDI mean speedup {means['caba']:.2f}x, "
+          f"{gap*100:.1f}% from Ideal (paper: 41.7% avg, 2.8% from Ideal)")
+    return means
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: CPU wall time of the scheme implementations +
+modeled TPU kernel time from the roofline (bytes/VPU-ops of each kernel).
+
+The wall numbers are CPU-interpreter artifacts (no TPU here); the modeled
+column is what the §Perf iteration reasons about.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, time_fn, VPU_OPS
+from repro.core.schemes import bdi, fpc, cpack, planes, quant
+from repro.roofline.analysis import HBM_BW
+
+N = 256 * 1024  # values
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x_int = jnp.asarray((rng.integers(0, 100, N) + 10000).astype(np.int32))
+    x_bf16 = jnp.asarray(rng.standard_normal(N) * 0.02, jnp.bfloat16)
+    rows = []
+
+    cases = [
+        ("bdi.compress_uniform", lambda: bdi.compress_uniform(x_int), 4 * N, 2.0),
+        ("bdi.decompress_uniform", None, 4 * N, 1.0),
+        ("fpc.compress", lambda: fpc.compress(x_int), 4 * N, 3.0),
+        ("cpack.compress", lambda: cpack.compress(x_int), 4 * N, 3.0),
+        ("planes.compress(bf16)", lambda: planes.compress(x_bf16), 2 * N, 2.0),
+        ("int8.quant", lambda: quant.compress(x_bf16, "int8"), 2 * N, 1.0),
+    ]
+    c_bdi = bdi.compress_uniform(x_int)
+    cases[1] = ("bdi.decompress_uniform",
+                lambda: bdi.decompress_uniform(c_bdi), 4 * N, 1.0)
+    for name, fn, byts, ops_per_byte in cases:
+        wall = time_fn(lambda: jax.tree.leaves(fn())[0])
+        # modeled TPU time: max(byte-stream time, VPU op time)
+        t_mem = byts / HBM_BW
+        t_vpu = byts * ops_per_byte / VPU_OPS
+        rows.append([name, wall * 1e3, byts / 1e6,
+                     max(t_mem, t_vpu) * 1e6,
+                     "vpu" if t_vpu > t_mem else "hbm"])
+    print_table("Kernel micro: CPU wall vs modeled TPU kernel time",
+                ["subroutine", "cpu ms", "MB", "tpu us (modeled)",
+                 "tpu bound"], rows, fmt="9.3f")
+    return rows
+
+
+def main():
+    rows = run()
+    assert all(r[3] > 0 for r in rows)
+    print("\n[kernel_micro] PASS")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

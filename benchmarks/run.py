@@ -1,0 +1,57 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,fig13]
+
+Each module prints its table and asserts its paper-validation bounds; a
+failed validation fails the run (EXPERIMENTS.md SS Paper-validation is
+generated from this output).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig2", "benchmarks.fig2_bottleneck"),
+    ("fig8", "benchmarks.fig8_performance"),
+    ("fig9", "benchmarks.fig9_bandwidth"),
+    ("fig12", "benchmarks.fig12_algorithms"),
+    ("fig13", "benchmarks.fig13_ratio"),
+    ("fig14", "benchmarks.fig14_bw_sensitivity"),
+    ("fig10", "benchmarks.fig10_energy"),
+    ("kernel_micro", "benchmarks.kernel_micro"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig8,fig13")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 72}\nRUNNING {name} ({modname})\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main()
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, str(e)))
+    print(f"\n{'=' * 72}")
+    if failures:
+        print(f"{len(failures)} benchmark(s) FAILED: "
+              f"{[n for n, _ in failures]}")
+        sys.exit(1)
+    print("ALL BENCHMARKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

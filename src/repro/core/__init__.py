@@ -1,0 +1,12 @@
+"""CABA core: the paper's contribution as a composable JAX feature.
+
+Assist Warp Store  -> registry.AssistRegistry
+Assist Warp Ctrl   -> controller.AssistController (roofline-driven)
+Assist subroutines -> schemes.{bdi,fpc,cpack,planes,quant}
+Site wiring        -> policy.CompressionPlan
+"""
+from repro.core.registry import AssistRegistry, REGISTRY, default_registry
+from repro.core.controller import (AssistController, RooflineTerms,
+                                   SiteDescriptor, SiteDecision)
+from repro.core.policy import (CompressionPlan, RAW_PLAN, CABA_BDI_PLAN,
+                               CABA_FULL_PLAN, sites_for_step)

@@ -1,0 +1,189 @@
+"""C-Pack compression (paper 5.1.4), with the paper's exact simplifications.
+
+Paper adaptations we reproduce:
+* encodings reduced to: zero value, full dictionary match, partial match
+  (only last byte mismatches), zero-extend (only last byte nonzero),
+  uncompressed-line fallback;
+* dictionary limited to 4 values -> FIXED compressed word size, so all words
+  in the line compress/decompress in parallel;
+* dictionary entries placed right after the metadata at the head of the line;
+* dictionary built serially from the front of the line: each word becomes an
+  entry if no existing entry covers it (paper Alg. 6) -- realized here as a
+  `lax.scan` over word positions, vectorized across blocks (the per-lane
+  predicate + global-AND structure of the paper maps to masked vector ops);
+* if >4 entries would be needed, the line is left uncompressed (paper: "the
+  cache line is left decompressed", a simplicity-vs-ratio trade).
+
+Word size: 4 bytes.  Fixed layout per compressible block of W words:
+  [dict: 4 x 4 B] [codes: 4 bits x W] [payload: 1 B x W]
+Codes: 0 zero | 1..4 full match d0..d3 | 5..8 partial match d0..d3 | 9 zext.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bytesops as bo
+
+WORD_BYTES = 4
+NDICT = 4
+
+CODE_ZERO = 0
+CODE_FULL0 = 1   # ..4
+CODE_PART0 = 5   # ..8
+CODE_ZEXT = 9
+
+
+def compressed_block_bytes(block_bytes: int) -> int:
+    W = block_bytes // WORD_BYTES
+    return NDICT * WORD_BYTES + W // 2 + W  # dict + nibble codes + payload
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("ok", "dict_", "codes", "payload", "raw"),
+         meta_fields=("shape", "dtype_name", "block_bytes", "pad"))
+@dataclasses.dataclass(frozen=True)
+class CPacked:
+    """Fixed-rate C-Pack. ``ok[i]`` selects compressed vs raw block ``i``.
+
+    Because the word size is fixed (paper's point), the compressed form has a
+    static layout; ``raw`` keeps the uncompressible blocks (fallback), and
+    accounting in :meth:`compressed_bytes` charges each block its true cost.
+    """
+    ok: jax.Array        # bool[nblocks]
+    dict_: jax.Array     # uint32[nblocks, 4]
+    codes: jax.Array     # uint8[nblocks, W/2]  (nibble-packed)
+    payload: jax.Array   # uint8[nblocks, W]
+    raw: jax.Array       # uint8[nblocks, B]  (zeros where ok)
+    shape: tuple
+    dtype_name: str
+    block_bytes: int
+    pad: int
+
+    @property
+    def nblocks(self):
+        return self.ok.shape[0]
+
+    def compressed_bytes(self) -> int:
+        nc = int(np.asarray(jnp.sum(self.ok)))
+        n = self.nblocks
+        cb = compressed_block_bytes(self.block_bytes)
+        return n + nc * cb + (n - nc) * self.block_bytes  # +1 B/blk metadata
+
+    def original_bytes(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.dtype_name).itemsize
+
+    def ratio(self) -> float:
+        return self.original_bytes() / max(self.compressed_bytes(), 1)
+
+
+def _covers(w: jax.Array, entry: jax.Array) -> jax.Array:
+    """Is word ``w`` covered by dictionary entry (full or partial match)?"""
+    full = w == entry
+    partial = (w >> jnp.uint32(8)) == (entry >> jnp.uint32(8))
+    return full | partial
+
+
+def _self_covered(w: jax.Array) -> jax.Array:
+    """zero or zero-extend words never consume a dictionary slot."""
+    return (w == 0) | ((w >> jnp.uint32(8)) == 0)
+
+
+def build_dictionary(w32: jax.Array):
+    """w32: uint32[nb, W] -> (dict uint32[nb, 4], n_entries int32[nb],
+    covered bool[nb, W]).  Serial front-to-back scan (paper Alg. 6)."""
+    nb, W = w32.shape
+
+    def step(carry, wi):
+        dict_, count = carry               # [nb,4] uint32, [nb] int32
+        covered = _self_covered(wi)
+        for k in range(NDICT):
+            covered = covered | _covers(wi, dict_[:, k]) & (count > k)
+        need = (~covered) & (count < NDICT)
+        # insert wi at position `count` where needed
+        onehot = (jnp.arange(NDICT)[None, :] == count[:, None]) & need[:, None]
+        dict_ = jnp.where(onehot, wi[:, None], dict_)
+        count = count + need.astype(jnp.int32)
+        return (dict_, count), None
+
+    init = (jnp.zeros((nb, NDICT), jnp.uint32), jnp.zeros((nb,), jnp.int32))
+    (dict_, count), _ = jax.lax.scan(step, init, w32.T)
+    return dict_, count
+
+
+def _assign_codes(w32: jax.Array, dict_: jax.Array, count: jax.Array):
+    """codes uint8[nb, W], payload uint8[nb, W], ok bool[nb]."""
+    nb, W = w32.shape
+    codes = jnp.full((nb, W), 255, jnp.uint8)
+    payload = jnp.zeros((nb, W), jnp.uint8)
+    valid = count[:, None] > jnp.arange(NDICT)[None, :]      # [nb, 4]
+    # priority: zero > full > zext > partial (cheapest information first)
+    # partial (fill first so higher-priority assignments overwrite)
+    for k in reversed(range(NDICT)):
+        hit = ((w32 >> 8) == (dict_[:, k:k + 1] >> 8)) & valid[:, k:k + 1]
+        codes = jnp.where(hit, jnp.uint8(CODE_PART0 + k), codes)
+        payload = jnp.where(hit, (w32 & 0xFF).astype(jnp.uint8), payload)
+    zext = (w32 >> 8) == 0
+    codes = jnp.where(zext, jnp.uint8(CODE_ZEXT), codes)
+    payload = jnp.where(zext, (w32 & 0xFF).astype(jnp.uint8), payload)
+    for k in reversed(range(NDICT)):
+        hit = (w32 == dict_[:, k:k + 1]) & valid[:, k:k + 1]
+        codes = jnp.where(hit, jnp.uint8(CODE_FULL0 + k), codes)
+        payload = jnp.where(hit, jnp.uint8(0), payload)
+    zero = w32 == 0
+    codes = jnp.where(zero, jnp.uint8(CODE_ZERO), codes)
+    payload = jnp.where(zero, jnp.uint8(0), payload)
+    ok = jnp.all(codes != 255, axis=-1)  # paper's global predicate AND
+    codes = jnp.where(ok[:, None], codes, 0)
+    return codes, payload, ok
+
+
+def _pack_nibbles(codes: jax.Array) -> jax.Array:
+    lo = codes[..., 0::2].astype(jnp.uint32)
+    hi = codes[..., 1::2].astype(jnp.uint32)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _unpack_nibbles(nib: jax.Array, W: int) -> jax.Array:
+    n = nib.astype(jnp.uint32)
+    out = jnp.stack([n & 0xF, (n >> 4) & 0xF], axis=-1)
+    return out.reshape(*nib.shape[:-1], W).astype(jnp.uint8)
+
+
+def compress(x: jax.Array, block_bytes: int = bo.DEFAULT_BLOCK_BYTES) -> CPacked:
+    """Fixed-rate C-Pack compression (jit-friendly end to end)."""
+    blocks, pad = bo.pad_to_blocks(bo.to_bytes(x), block_bytes)
+    w32 = bo.words_from_block(blocks, WORD_BYTES)
+    dict_, count = build_dictionary(w32)
+    codes, payload, ok = _assign_codes(w32, dict_, count)
+    raw = jnp.where(ok[:, None], jnp.uint8(0), blocks)
+    return CPacked(ok=ok, dict_=dict_, codes=_pack_nibbles(codes),
+                   payload=payload, raw=raw, shape=tuple(x.shape),
+                   dtype_name=str(x.dtype), block_bytes=block_bytes, pad=pad)
+
+
+def decompress(c: CPacked) -> jax.Array:
+    """Parallel decode (paper Alg. 5): dictionary loads with lane masks."""
+    B = c.block_bytes
+    W = B // WORD_BYTES
+    codes = _unpack_nibbles(c.codes, W).astype(jnp.int32)    # [nb, W]
+    pay = c.payload.astype(jnp.uint32)
+    # gather dictionary value per word
+    didx_full = jnp.clip(codes - CODE_FULL0, 0, NDICT - 1)
+    didx_part = jnp.clip(codes - CODE_PART0, 0, NDICT - 1)
+    dfull = jnp.take_along_axis(c.dict_, didx_full, axis=-1)
+    dpart = jnp.take_along_axis(c.dict_, didx_part, axis=-1)
+    w = jnp.zeros(codes.shape, jnp.uint32)
+    w = jnp.where((codes >= CODE_FULL0) & (codes < CODE_FULL0 + NDICT), dfull, w)
+    part = (dpart & jnp.uint32(0xFFFFFF00)) | pay
+    w = jnp.where((codes >= CODE_PART0) & (codes < CODE_PART0 + NDICT), part, w)
+    w = jnp.where(codes == CODE_ZEXT, pay, w)
+    dec = bo.block_from_words(w, WORD_BYTES, B)
+    blocks = jnp.where(c.ok[:, None], dec, c.raw)
+    flat = blocks.reshape(-1)
+    n = int(np.prod(c.shape)) * jnp.dtype(c.dtype_name).itemsize
+    return bo.from_bytes(flat[:n], c.dtype_name, c.shape)

@@ -1,0 +1,135 @@
+"""Byte-plane compression for float tensors (TPU-native CABA extension).
+
+Integer BDI rarely fires on float ML tensors: bf16/fp32 bit patterns of
+same-magnitude values differ in sign/exponent bits, so raw-byte deltas blow
+past the delta widths (our BDI correctly falls back to RAW there -- see
+tests).  The paper's framework explicitly sells *flexibility in algorithm
+choice* (5, Fig. 12: different data compresses better under different
+algorithms); this scheme is the float-data algorithm we register alongside
+BDI/FPC/C-Pack.
+
+Idea: split a bf16/fp32 tensor into byte planes.  The HIGH plane
+(sign+exponent, plus the top mantissa bit for bf16) has very low entropy
+within a block -- weights in a block share a handful of exponents -- so it
+compresses with a small per-block byte dictionary (a C-Pack-at-byte-
+granularity assist-warp subroutine).  The LOW plane (mantissa bytes) is
+near-uniform random and is stored raw.  Lossless by construction.
+
+Layout per block of V values (bf16: V = block_bytes/2):
+  hi plane: dict[NDICT bytes] + 4-bit codes (V/2 bytes)  if <= NDICT distinct
+            else raw V bytes
+  lo plane: raw V bytes (fp32: 3 raw planes)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bytesops as bo
+
+NDICT = 16  # byte dictionary entries (4-bit codes)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("ok", "dict_", "codes", "hi_raw", "lo"),
+         meta_fields=("shape", "dtype_name", "block_values", "pad"))
+@dataclasses.dataclass(frozen=True)
+class PlanesTensor:
+    ok: jax.Array        # bool[nblocks] -- hi plane fit in the dictionary?
+    dict_: jax.Array     # uint8[nblocks, NDICT]
+    codes: jax.Array     # uint8[nblocks, V/2] nibble-packed dict indices
+    hi_raw: jax.Array    # uint8[nblocks, V] raw hi plane where !ok
+    lo: jax.Array        # uint8[nblocks, V*(itemsize-1)] raw low planes
+    shape: tuple
+    dtype_name: str
+    block_values: int
+    pad: int
+
+    @property
+    def nblocks(self):
+        return self.ok.shape[0]
+
+    def compressed_bytes(self) -> int:
+        nc = int(np.asarray(jnp.sum(self.ok)))
+        n = self.nblocks
+        V = self.block_values
+        hi_c = NDICT + V // 2
+        return n + nc * hi_c + (n - nc) * V + self.lo.size
+
+    def original_bytes(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.dtype_name).itemsize
+
+    def ratio(self) -> float:
+        return self.original_bytes() / max(self.compressed_bytes(), 1)
+
+
+def _split_planes(x: jax.Array, block_values: int):
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if itemsize < 2:
+        raise ValueError("planes scheme needs >=2-byte dtypes")
+    b = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8)  # [n, itemsize]
+    n = b.shape[0]
+    nblocks = -(-n // block_values)
+    pad = nblocks * block_values - n
+    if pad:
+        b = jnp.concatenate([b, jnp.zeros((pad, itemsize), jnp.uint8)])
+    b = b.reshape(nblocks, block_values, itemsize)
+    hi = b[..., itemsize - 1]                      # little-endian: last = hi
+    lo = b[..., :itemsize - 1].reshape(nblocks, -1)
+    return hi, lo, pad
+
+
+def _build_byte_dict(hi: jax.Array):
+    """Serial front-to-back dictionary build over bytes (lax.scan)."""
+    nb, V = hi.shape
+
+    def step(carry, col):
+        dict_, count = carry
+        covered = jnp.zeros((nb,), bool)
+        for k in range(NDICT):
+            covered = covered | ((col == dict_[:, k]) & (count > k))
+        need = (~covered) & (count < NDICT)
+        onehot = (jnp.arange(NDICT)[None, :] == count[:, None]) & need[:, None]
+        dict_ = jnp.where(onehot, col[:, None], dict_)
+        count = count + need.astype(jnp.int32)
+        return (dict_, count), None
+
+    init = (jnp.zeros((nb, NDICT), jnp.uint8), jnp.zeros((nb,), jnp.int32))
+    (dict_, count), _ = jax.lax.scan(step, init, hi.T)
+    return dict_, count
+
+
+def compress(x: jax.Array, block_values: int = 256) -> PlanesTensor:
+    hi, lo, pad = _split_planes(x, block_values)
+    dict_, count = _build_byte_dict(hi)
+    # code per byte = index of first matching dict entry
+    valid = count[:, None, None] > jnp.arange(NDICT)[None, None, :]
+    match = (hi[:, :, None] == dict_[:, None, :]) & valid           # [nb,V,K]
+    anym = jnp.any(match, axis=-1)
+    idx = jnp.argmax(match, axis=-1).astype(jnp.uint8)
+    ok = jnp.all(anym, axis=-1)
+    idx = jnp.where(ok[:, None], idx, 0)
+    codes = (idx[:, 0::2] | (idx[:, 1::2] << 4)).astype(jnp.uint8)
+    hi_raw = jnp.where(ok[:, None], jnp.uint8(0), hi)
+    return PlanesTensor(ok=ok, dict_=dict_, codes=codes, hi_raw=hi_raw, lo=lo,
+                        shape=tuple(x.shape), dtype_name=str(x.dtype),
+                        block_values=block_values, pad=pad)
+
+
+def decompress(c: PlanesTensor) -> jax.Array:
+    nb, V = c.hi_raw.shape
+    n4 = c.codes.astype(jnp.int32)
+    idx = jnp.stack([n4 & 0xF, (n4 >> 4) & 0xF], axis=-1).reshape(nb, V)
+    from_dict = jnp.take_along_axis(c.dict_, idx, axis=-1)
+    hi = jnp.where(c.ok[:, None], from_dict, c.hi_raw)
+    itemsize = jnp.dtype(c.dtype_name).itemsize
+    lo = c.lo.reshape(nb, V, itemsize - 1)
+    full = jnp.concatenate([lo, hi[..., None]], axis=-1)   # little-endian
+    vals = jax.lax.bitcast_convert_type(
+        full.reshape(nb * V, itemsize), jnp.dtype(c.dtype_name))
+    n = int(np.prod(c.shape))
+    return vals.reshape(-1)[:n].reshape(c.shape)

@@ -1,0 +1,97 @@
+"""Fixed-rate block-scaled quantization: the in-jit CABA compression path.
+
+The paper's compression is lossless with runtime-variable line sizes; XLA
+needs static shapes, so tensors that are COMPRESSED INSIDE jit (KV-cache
+appends, gradients entering collectives, optimizer state, activation
+stashes) use fixed-rate block-scaled schemes instead (DESIGN.md 2, changed
+assumption 3).  This keeps the paper's core trade (spend idle VPU flops to
+move fewer HBM/ICI bytes) with a compile-time-known ratio.
+
+Schemes:
+* int8  : per-block absmax scale, symmetric round-to-nearest.  2x for bf16,
+          4x for fp32.
+* fp8   : e4m3 storage via native float8 cast + per-block scale.  Same rate
+          as int8, better for heavy-tailed gradients.
+* int4  : two values per byte, 4x for bf16 (KV-cache long-context option).
+
+Error feedback (for gradient collectives) lives in training/grad_compress.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+BLOCK_VALUES = 256  # quantization block, in elements (not bytes)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("q", "scale"),
+         meta_fields=("kind", "shape", "dtype_name", "pad"))
+@dataclasses.dataclass(frozen=True)
+class QuantTensor:
+    q: jax.Array       # int8[nblocks, BLOCK] | uint8[nblocks, BLOCK//2] (int4)
+    scale: jax.Array   # f32[nblocks, 1]
+    kind: str          # "int8" | "fp8" | "int4"
+    shape: tuple
+    dtype_name: str
+    pad: int
+
+    def compressed_bytes(self) -> int:
+        return self.q.size * self.q.dtype.itemsize + self.scale.size * 2
+
+    def original_bytes(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.dtype_name).itemsize
+
+    def ratio(self) -> float:
+        return self.original_bytes() / max(self.compressed_bytes(), 1)
+
+
+def _to_blocks(x: jax.Array):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nblocks = -(-n // BLOCK_VALUES)
+    pad = nblocks * BLOCK_VALUES - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat.reshape(nblocks, BLOCK_VALUES), pad
+
+
+def compress(x: jax.Array, kind: str = "int8") -> QuantTensor:
+    blocks, pad = _to_blocks(x)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    if kind == "int8":
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    elif kind == "fp8":
+        scale = jnp.where(absmax > 0, absmax / 448.0, 1.0)  # e4m3 max
+        q = (blocks / scale).astype(jnp.float8_e4m3fn)
+    elif kind == "int4":
+        scale = jnp.where(absmax > 0, absmax / 7.0, 1.0)
+        qi = jnp.clip(jnp.round(blocks / scale), -7, 7).astype(jnp.int32) + 8
+        q = (qi[:, 0::2] | (qi[:, 1::2] << 4)).astype(jnp.uint8)
+    else:
+        raise ValueError(kind)
+    return QuantTensor(q=q, scale=scale.astype(jnp.float32), kind=kind,
+                       shape=tuple(x.shape), dtype_name=str(x.dtype), pad=pad)
+
+
+def decompress(c: QuantTensor) -> jax.Array:
+    if c.kind == "int4":
+        u = c.q.astype(jnp.int32)
+        vals = jnp.stack([u & 0xF, (u >> 4) & 0xF], axis=-1)
+        vals = vals.reshape(c.q.shape[0], -1) - 8
+        blocks = vals.astype(jnp.float32) * c.scale
+    else:
+        blocks = c.q.astype(jnp.float32) * c.scale
+    flat = blocks.reshape(-1)
+    n = int(np.prod(c.shape))
+    return flat[:n].reshape(c.shape).astype(jnp.dtype(c.dtype_name))
+
+
+def quantization_error(x: jax.Array, kind: str = "int8") -> jax.Array:
+    """Residual (x - dequant(quant(x))) for error-feedback accumulators."""
+    return x - decompress(compress(x, kind))

@@ -1,0 +1,79 @@
+"""BestOfAll scheme selection (paper Fig. 12/13 and 7.3).
+
+The paper's CABA-BestOfAll picks the best algorithm per cache line; it also
+notes a realistic selector must weigh ratio AGAINST decompression cost
+("a mechanism that selects the best compression algorithm based on both
+compression ratio and the relative cost of compression/decompression is
+desirable").  We implement exactly that, at tensor-site granularity (the
+trigger granularity on TPU, DESIGN.md 2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.schemes import bdi, fpc, cpack, planes, quant
+
+# decompression cost in VPU ops per uncompressed byte (napkin-calibrated from
+# the kernel bodies; used by the controller's throttle rule, paper 4.4)
+DECOMP_OPS_PER_BYTE = {
+    "bdi": 1.0,       # masked add + widen
+    "fpc": 2.0,       # pattern select + splice
+    "cpack": 2.0,     # dict gather + splice
+    "planes": 1.5,    # nibble gather + interleave
+    "int8": 1.0,      # scale multiply
+    "fp8": 1.0,
+    "int4": 1.5,
+    "raw": 0.0,
+}
+
+LOSSLESS = ("bdi", "fpc", "cpack", "planes")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeChoice:
+    name: str
+    ratio: float
+    compressed: Any | None = None
+
+
+def measure_ratios(x, schemes: tuple[str, ...] = LOSSLESS,
+                   keep: bool = False) -> dict[str, SchemeChoice]:
+    """Compress ``x`` with each scheme and report true ratios (host-side)."""
+    out: dict[str, SchemeChoice] = {}
+    for name in schemes:
+        if name == "bdi":
+            c = bdi.compress_packed(x)
+        elif name == "fpc":
+            c = fpc.compress(x)
+        elif name == "cpack":
+            c = cpack.compress(x)
+        elif name == "planes":
+            if jnp.dtype(x.dtype).itemsize < 2:
+                continue
+            c = planes.compress(x)
+        elif name in ("int8", "fp8", "int4"):
+            c = quant.compress(x, name)
+        else:
+            raise ValueError(name)
+        out[name] = SchemeChoice(name, float(c.ratio()), c if keep else None)
+    return out
+
+
+def best_of_all(x, schemes: tuple[str, ...] = LOSSLESS,
+                cost_weight: float = 0.0) -> SchemeChoice:
+    """Pick argmax ratio (cost_weight=0 reproduces the paper's BestOfAll;
+    cost_weight>0 penalizes expensive decompressors per the paper's 7.3
+    discussion)."""
+    ratios = measure_ratios(x, schemes)
+    if not ratios:
+        return SchemeChoice("raw", 1.0)
+    def score(c: SchemeChoice) -> float:
+        return c.ratio - cost_weight * DECOMP_OPS_PER_BYTE[c.name]
+    best = max(ratios.values(), key=score)
+    if best.ratio <= 1.0:
+        return SchemeChoice("raw", 1.0)
+    return best

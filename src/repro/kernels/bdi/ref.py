@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the BDI Pallas kernels (kernel-native SoA layout).
+
+The kernel layout specializes the scheme-level BDIUniform to the encodings
+that fire on ML tensors:
+  b2d1: 2-byte words, 1-byte deltas (bf16 bit patterns)  W = B/2
+  b4d1: 4-byte words, 1-byte deltas (fp32/int32)         W = B/4
+  b4d2: 4-byte words, 2-byte deltas                      W = B/4
+
+Layout per block of B bytes:
+  base  : uint32[nb, 1]
+  mask  : uint8[nb, W/8]     little-bit-endian base-vs-zero selector
+  deltas: uint8[nb, W*d]     little-endian low bytes of the selected value
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bytesops as bo
+
+ENC_PARAMS = {"b2d1": (2, 1), "b4d1": (4, 1), "b4d2": (4, 2)}
+
+
+def decompress_ref(base, mask, deltas, enc: str, block_bytes: int):
+    """-> uint8[nb, block_bytes]."""
+    wb, db = ENC_PARAMS[enc]
+    W = block_bytes // wb
+    use_base = bo.unpack_bits(mask, W)
+    d = bo.unpack_low_bytes(deltas, W, db)
+    d_s = bo.sext32(d, db)
+    v = jnp.where(use_base, d_s + base, d_s)
+    if wb < 4:
+        v = v & jnp.uint32((1 << (8 * wb)) - 1)
+    return bo.block_from_words(v, wb, block_bytes)
+
+
+def compress_ref(blocks, enc: str):
+    """uint8[nb, B] -> (base u32[nb,1], mask u8[nb,W/8], deltas u8[nb,W*d],
+    ok bool[nb]).  ok = every word fits under base or zero base."""
+    wb, db = ENC_PARAMS[enc]
+    B = blocks.shape[-1]
+    W = B // wb
+    w = bo.words_from_block(blocks, wb)
+    base = w[:, :1]
+    delta = w - base
+    from_base = bo.fits_signed32(delta, db)
+    from_zero = bo.fits_signed32(w, db)
+    ok = jnp.all(from_base | from_zero, axis=-1)
+    sel = jnp.where(from_base, delta, w)
+    mask = bo.pack_bits(from_base)
+    deltas = bo.pack_low_bytes(sel, db)
+    return base, mask, deltas, ok
+
+
+def layout_from_uniform(x, enc: str, block_bytes: int = 512):
+    """Compress tensor ``x`` into the kernel-native layout (host-side)."""
+    blocks, pad = bo.pad_to_blocks(bo.to_bytes(x), block_bytes)
+    base, mask, deltas, ok = compress_ref(blocks, enc)
+    return dict(base=base.astype(jnp.uint32), mask=mask, deltas=deltas,
+                ok=ok, pad=pad, shape=tuple(x.shape), dtype=str(x.dtype),
+                enc=enc, block_bytes=block_bytes)
+
+
+def tensor_from_layout(layout) -> jax.Array:
+    blocks = decompress_ref(layout["base"], layout["mask"], layout["deltas"],
+                            layout["enc"], layout["block_bytes"])
+    flat = blocks.reshape(-1)
+    import numpy as np
+    n = int(np.prod(layout["shape"])) * jnp.dtype(layout["dtype"]).itemsize
+    return bo.from_bytes(flat[:n], layout["dtype"], layout["shape"])

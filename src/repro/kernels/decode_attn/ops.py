@@ -1,0 +1,30 @@
+"""jit'd wrappers for compressed-KV flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import decode_attn as da
+from repro.kernels.decode_attn import ref as da_ref
+
+quantize_kv = da_ref.quantize_kv
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attn_q8(q, k8, ks, v8, vs, lengths, *, bs: int = 128,
+                   interpret: bool = True):
+    """Flash-decode over int8 KV (CABA compressed-KV site)."""
+    return da.decode_attn(q, k8, ks, v8, vs, lengths, bs=bs,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attn_raw(q, k, v, lengths, *, bs: int = 128,
+                    interpret: bool = True):
+    """Uncompressed-KV baseline with the identical flash schedule."""
+    B, G, S, _ = k.shape
+    dummy = jnp.ones((B, G, S), jnp.float32)
+    return da.decode_attn(q, k, dummy, v, dummy, lengths, bs=bs,
+                          interpret=interpret)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for compressed-KV flash-decode attention.
+
+Decode step: one new query token per sequence attends over an S-long KV
+cache.  The cache is the bandwidth bottleneck at decode (arithmetic intensity
+~1 flop/byte), which is exactly the CABA situation: the kernel moves int8
+KV bytes from HBM and spends idle VPU cycles dequantizing -- halving the
+dominant roofline term.
+
+KV layout (per-token block scaling):
+  k8, v8 : int8[B, G, S, D]
+  ks, vs : f32[B, G, S]      per-token absmax scales
+GQA: H query heads share G kv heads (group = H // G).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(k: jax.Array):
+    """f32/bf16[B, G, S, D] -> (int8[B, G, S, D], f32[B, G, S])."""
+    kf = k.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(kf), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(kf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(k8, ks):
+    return k8.astype(jnp.float32) * ks[..., None]
+
+
+def decode_attn_ref(q, k8, ks, v8, vs, lengths, out_dtype=jnp.bfloat16):
+    """q: [B, H, D]; k8/v8: int8[B, G, S, D]; ks/vs: f32[B, G, S];
+    lengths: int32[B] -> out [B, H, D]."""
+    B, H, D = q.shape
+    _, G, S, _ = k8.shape
+    group = H // G
+    qf = q.astype(jnp.float32).reshape(B, G, group, D)
+    k = dequantize_kv(k8, ks)                    # [B, G, S, D]
+    v = dequantize_kv(v8, vs)
+    logits = jnp.einsum("bghd,bgsd->bghs", qf, k) / jnp.sqrt(D).astype(jnp.float32)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]      # [B, S]
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghs,bgsd->bghd", p, v)
+    return out.reshape(B, H, D).astype(out_dtype)
+
+
+def decode_attn_raw_ref(q, k, v, lengths, out_dtype=jnp.bfloat16):
+    """Uncompressed baseline (same math, bf16 KV)."""
+    B, H, D = q.shape
+    _, G, S, _ = k.shape
+    group = H // G
+    qf = q.astype(jnp.float32).reshape(B, G, group, D)
+    logits = jnp.einsum("bghd,bgsd->bghs", qf, k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghs,bgsd->bghd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(out_dtype)

@@ -1,0 +1,7 @@
+"""Oracle for the FPC decompress kernel = the scheme-level decoder."""
+from repro.core.schemes.fpc import (compress, decompress, FPCPacked,
+                                    PATTERNS, SEG_WORDS, SEG_BYTES,
+                                    seg_payload_bytes)
+
+__all__ = ["compress", "decompress", "FPCPacked", "PATTERNS", "SEG_WORDS",
+           "SEG_BYTES", "seg_payload_bytes"]

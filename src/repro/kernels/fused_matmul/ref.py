@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the fused compressed-weight matmuls.
+
+Weight layouts (compression blocks run along the N axis, 256 values each, so
+an MXU tile [bk, bn] with bn % 256 == 0 covers whole blocks):
+
+q8   : w8 int8[K, N], scale f32[K // GK, N]  (block-scaled, group GK along K)
+bdi  : b2d1 on the bf16 bit patterns --
+       base u16-as-u32[K, N/256], mask u8[K, N/32], deltas u8[K, N]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_q8(w8, scale, gk: int):
+    K, N = w8.shape
+    s = jnp.repeat(scale, gk, axis=0)  # [K, N]
+    return w8.astype(jnp.float32) * s
+
+
+def matmul_q8_ref(x, w8, scale, gk: int, out_dtype=jnp.bfloat16):
+    w = dequant_q8(w8, scale, gk)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _sext8(v):
+    return ((v & 0xFF) ^ 0x80) - 0x80
+
+
+def dequant_bdi_b2d1(base, mask, deltas):
+    """-> bf16[K, N] from the b2d1 row-block layout."""
+    K, N = deltas.shape
+    nb = N // 256
+    d = _sext8(deltas.astype(jnp.int32)).reshape(K, nb, 256)
+    m = mask.astype(jnp.int32).reshape(K, nb, 32)
+    bits = (m[..., None] >> jnp.arange(8, dtype=jnp.int32)) & 1
+    use_base = bits.reshape(K, nb, 256) == 1
+    b = base.astype(jnp.int32).reshape(K, nb, 1)
+    v = jnp.where(use_base, b + d, d) & 0xFFFF
+    w16 = v.reshape(K, N).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(w16, jnp.bfloat16)
+
+
+def matmul_bdi_ref(x, base, mask, deltas, out_dtype=jnp.bfloat16):
+    w = dequant_bdi_b2d1(base, mask, deltas)
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def make_q8_layout(w: jax.Array, gk: int = 256):
+    """bf16/f32[K, N] -> (w8, scale) block-scaled along K groups of gk."""
+    K, N = w.shape
+    assert K % gk == 0
+    wf = w.astype(jnp.float32).reshape(K // gk, gk, N)
+    absmax = jnp.max(jnp.abs(wf), axis=1)             # [K/gk, N]
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(wf / scale[:, None, :]), -127, 127)
+    return q.reshape(K, N).astype(jnp.int8), scale
+
+
+def make_bdi_b2d1_layout(w: jax.Array):
+    """bf16[K, N] (N % 256 == 0) -> (base, mask, deltas, ok) row-block b2d1."""
+    K, N = w.shape
+    assert N % 256 == 0
+    w16 = jax.lax.bitcast_convert_type(w.astype(jnp.bfloat16), jnp.uint16)
+    v = w16.astype(jnp.int32).reshape(K, N // 256, 256)
+    base = v[..., :1]
+    delta = v - base
+    from_base = (delta >= -128) & (delta < 128)
+    from_zero = (v >= -128 + 0) & (v < 128) | ((v - 0x10000 >= -128) & (v - 0x10000 < 0))
+    # value as signed-16 immediate: v in [0, 127] or [0xFF80, 0xFFFF]
+    from_zero = (v < 128) | (v >= 0xFF80)
+    ok = jnp.all(from_base | from_zero, axis=-1)      # [K, N/256]
+    sel = jnp.where(from_base, delta, v)
+    bits = from_base.reshape(K, N // 256, 32, 8).astype(jnp.int32)
+    weights = (1 << jnp.arange(8, dtype=jnp.int32))
+    mask = jnp.sum(bits * weights, axis=-1).astype(jnp.uint8).reshape(K, N // 8)
+    deltas = (sel & 0xFF).astype(jnp.uint8).reshape(K, N)
+    return base[..., 0].astype(jnp.uint32), mask, deltas, ok

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + AOT-compiles every (architecture x input-shape) cell on the
+production meshes -- 16x16 single-pod and 2x16x16 multi-pod -- with
+ShapeDtypeStruct inputs (no allocation ever happens).  For each cell it
+records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+FLOPs/bytes, and the parsed collective schedule -- the inputs to
+EXPERIMENTS.md SS Dry-run and SS Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh single --out experiments/dryrun
+  ... --kv-mode int8 --remat none                                 # variants
+
+The two os.environ lines above MUST stay the first statements: jax locks
+the device count at first init.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, skip_reason, cells
+from repro.launch.mesh import make_production_mesh, mesh_desc, devices_per_pod
+from repro.launch import shardings as SH
+from repro.launch.sharding import ShardingRules
+from repro.models.model import build_model, input_specs, decode_token_specs
+from repro.roofline import analysis as RL
+from repro.training.train_loop import TrainConfig, make_train_step
+from repro.training.optimizer import OptConfig
+from repro.training.grad_compress import GradCompressionConfig
+
+
+def _specs_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+               kv_mode: str = "bf16", remat: str = "full",
+               grad_compress: bool = False, donate: bool = True,
+               weights: str = "bf16", serve_sharding: str = "fsdp",
+               ep_major: bool = False):
+    """Lower + compile one cell; returns (compiled, report_dict).
+
+    Variant knobs (SS Perf iteration levers):
+      kv_mode        bf16 | int8       CABA KV-compression site
+      weights        bf16 | int8       CABA weight site (serving paths)
+      serve_sharding fsdp | tp         ZeRO-3 vs TP-only weights at serve
+      remat          full | none       activation checkpoint policy
+      grad_compress  compressed cross-pod gradient collective (train)
+    """
+    arch = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    reason = skip_reason(arch, shape)
+    if reason:
+        return None, {"arch": arch_name, "shape": shape_name,
+                      "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(arch, remat=(remat == "full"))
+    t0 = time.time()
+    serve_tp = serve_sharding == "tp"
+
+    def _params_specs():
+        p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        if weights == "int8":
+            from repro.models.quantized import quantize_params
+            p = jax.eval_shape(quantize_params, p)
+        return p
+
+    with ShardingRules(mesh):
+        if shape.kind == "train":
+            gcc = (GradCompressionConfig(axis="pod", kind="int8")
+                   if (grad_compress and multi_pod) else None)
+            tcfg = TrainConfig(opt=OptConfig(), grad_compression=gcc)
+            step = make_train_step(model, tcfg, mesh)
+            state_specs = jax.eval_shape(
+                lambda: _init_state_shapes(model, tcfg, mesh))
+            state_sh = SH.train_state_shardings(state_specs, mesh,
+                                                ep_major=ep_major)
+            batch_specs = input_specs(arch, shape)
+            batch_sh = SH.batch_shardings(batch_specs, mesh)
+            fn = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_specs, batch_specs)
+        elif shape.kind == "prefill":
+            batch_specs = input_specs(arch, shape)
+            batch_sh = SH.batch_shardings(batch_specs, mesh)
+            params_specs = _params_specs()
+            params_sh = SH.param_shardings(params_specs, mesh,
+                                           serve=serve_tp)
+
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch, shape.seq_len,
+                                     kv_mode=kv_mode)
+
+            fn = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+            lowered = fn.lower(params_specs, batch_specs)
+        else:  # decode
+            params_specs = _params_specs()
+            params_sh = SH.param_shardings(params_specs, mesh,
+                                           serve=serve_tp)
+            state_specs = jax.eval_shape(
+                lambda: model.init_state(shape.global_batch, shape.seq_len,
+                                         kv_mode=kv_mode, uniform_pos=True))
+            state_sh = SH.decode_state_shardings(state_specs, mesh)
+            tok_specs = decode_token_specs(arch, shape)
+            tok_sh = SH.batch_shardings(tok_specs, mesh)
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(params_sh, state_sh, tok_sh),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(params_specs, state_specs, tok_specs)
+
+        compiled = lowered.compile()
+
+    t1 = time.time()
+    n_dev = int(np.prod(mesh.devices.shape))
+    report = RL.analyze(
+        compiled, arch=arch_name, shape=shape_name,
+        mesh_desc=mesh_desc(mesh), n_devices=n_dev,
+        devices_per_pod=devices_per_pod(mesh),
+        model_flops=RL.model_flops_estimate(arch, shape))
+    out = report.summary()
+    out.update(kv_mode=kv_mode, remat=remat, grad_compress=grad_compress,
+               weights=weights, serve_sharding=serve_sharding,
+               compile_s=round(t1 - t0, 1))
+    return compiled, out
+
+
+def _init_state_shapes(model, tcfg, mesh):
+    from repro.training.train_loop import init_train_state
+    return init_train_state(model, tcfg, jax.random.PRNGKey(0), mesh)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch or all")
+    ap.add_argument("--shape", default=None, help="one shape or all")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--kv-mode", default="bf16", choices=("bf16", "int8"))
+    ap.add_argument("--remat", default="full", choices=("full", "none"))
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--weights", default="bf16", choices=("bf16", "int8"))
+    ap.add_argument("--serve-sharding", default="fsdp",
+                    choices=("fsdp", "tp"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arch_names = [args.arch] if args.arch else sorted(ARCHS)
+    shape_names = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for aname in arch_names:
+        for sname in shape_names:
+            for mp in meshes:
+                tag = f"{aname}.{sname}.{'multi' if mp else 'single'}" \
+                      f".{args.kv_mode}.{args.remat}" \
+                      f"{'.gc' if args.grad_compress else ''}" \
+                      f"{'.w8' if args.weights == 'int8' else ''}" \
+                      f"{'.tp' if args.serve_sharding == 'tp' else ''}"
+                try:
+                    compiled, rep = lower_cell(
+                        aname, sname, multi_pod=mp, kv_mode=args.kv_mode,
+                        remat=args.remat, grad_compress=args.grad_compress,
+                        weights=args.weights,
+                        serve_sharding=args.serve_sharding)
+                    if compiled is None:
+                        print(f"[skip] {tag}: {rep['skipped']}")
+                    else:
+                        print(f"[ok]   {tag}: bottleneck={rep['bottleneck']}"
+                              f" step={rep['step_time_s']:.4f}s"
+                              f" compile={rep['compile_s']}s")
+                        if rep.get("memory_analysis"):
+                            ma = rep["memory_analysis"]
+                            print("       memory_analysis:", ma)
+                        print("       cost: flops/dev="
+                              f"{rep['hlo_flops_per_dev']:.3e} "
+                              f"bytes/dev={rep['hlo_bytes_per_dev']:.3e}")
+                    del compiled
+                    results.append(rep)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rep, f, indent=1)
+                except Exception as e:
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                    failures.append((tag, str(e)))
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump({"results": results,
+                   "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells processed, {len(failures)} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

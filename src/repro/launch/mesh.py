@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax init; smoke tests
+see 1 device).
+
+Mesh topology (DESIGN.md 6):
+  single-pod: (data=16, model=16)            = 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16)     = 512 chips, pod axis on DCN
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "Run under launch/dryrun.py (it sets "
+            "--xla_force_host_platform_device_count=512).")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_mesh_for(n_devices: int, *, model: int = 16, pod: int = 1):
+    """Arbitrary mesh (elastic restarts, tests on 8 fake devices)."""
+    data = n_devices // (model * pod)
+    assert data * model * pod == n_devices, (n_devices, model, pod)
+    shape = (pod, data, model) if pod > 1 else (data, model)
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    arr = np.asarray(jax.devices()[:n_devices]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{a}={s}" for a, s in
+                    zip(mesh.axis_names, mesh.devices.shape))
+
+
+def devices_per_pod(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "pod" not in sizes:
+        return 0                      # single pod: nothing crosses DCN
+    return int(np.prod([s for a, s in sizes.items() if a != "pod"]))

@@ -1,0 +1,246 @@
+"""Concrete sharding rules for params, optimizer state, decode state, batch.
+
+DESIGN.md 6: 2-D weight sharding -- ZeRO-3/FSDP over ``data``, Megatron TP
+over ``model``; the ``pod`` axis carries only DP.  Rules are name-based on
+pytree paths, with the base (unstacked) spec per leaf name; leaves carrying
+an extra leading scan axis get ``None`` prepended automatically.  Every
+axis assignment is divisibility-checked against the mesh -- a dimension
+that does not divide falls back to replication (the dry-run must compile
+for every (arch x shape), including awkward head counts).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fits(dim: int, axis, sizes: dict) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        need = int(np.prod([sizes.get(a, 1) for a in axis]))
+    else:
+        need = sizes.get(axis, 1)
+    return dim % need == 0 and dim >= need
+
+
+def _check(spec_entries, shape, sizes):
+    """Drop axis assignments that don't divide their dimension."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        out.append(ax if _fits(dim, ax, sizes) else None)
+    return tuple(out)
+
+
+def batch_axes(mesh: Mesh):
+    """The DP axes present in this mesh: ("pod","data") or ("data",)."""
+    names = set(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules: (path regex, base spec entries)   FS = fsdp axis = "data"
+# ---------------------------------------------------------------------------
+
+FS = "data"
+TP = "model"
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"\['embed'\]$",            (TP, FS)),       # [V, D]
+    (r"\['unembed'\]$",          (FS, TP)),       # [D, V]
+    # MLA
+    (r"\['wq_a'\]$",             (FS, None)),
+    (r"\['wq_b'\]$",             (None, TP)),
+    (r"\['wkv_a'\]$",            (FS, None)),
+    (r"\['wkv_b'\]$",            (None, TP)),
+    # MoE experts (3-D) -- EP over model
+    (r"\['ffn'\]\['wi'\]$",      ("moe3",)),
+    (r"\['ffn'\]\['wg'\]$",      ("moe3",)),
+    (r"\['ffn'\]\['wo'\]$",      ("moe3o",)),
+    (r"\['router'\]$",           (FS, None)),
+    # rwkv channel-mix value projection [F, D]
+    (r"\['cm'\]\['wv'\]$",       (TP, FS)),
+    # generic projections
+    (r"\['w[qkvgi]'\]$",         (FS, TP)),       # wq wk wv wg wi [D, F]
+    (r"\['wo'\]$",               (TP, FS)),       # [F, D]
+    (r"\['wr'\]$",               (FS, TP)),
+    (r"\['in_proj'\]$",          (FS, TP)),
+    (r"\['out_proj'\]$",         (TP, FS)),
+    (r"\['conv_w'\]$",           (None, TP)),
+    (r"\['lora_A'\]$",           (FS, None)),
+    (r"\['lora_B'\]$",           (None, FS)),
+    (r"\['u'\]$",                (TP, None)),     # [H, dh]
+]
+
+
+def _param_base_spec(path_str: str, shape, sizes, *,
+                     serve: bool = False, ep_major: bool = False) -> tuple:
+    """``serve=True``: TP-only (FSDP axis dropped -> weights replicated over
+    ``data``); serving reads weights every step, so per-step all-gathers of
+    ZeRO-3 shards would dominate the decode roofline (SS Perf iteration).
+
+    ``ep_major=True``: the ``model`` axis is reserved for EXPERTS (EP) and
+    the vocab; dense/attention projections drop their TP axis (FSDP only).
+    Removes the per-layer [B,S,D] tensor-parallel psums that dominate MoE
+    training collectives (SS Perf it4) at the cost of wider per-device
+    dense matmuls."""
+    nd = len(shape)
+    # compressed-weight leaves: rule of the parent tensor name
+    path_str = re.sub(r"\['(q8|s8)'\]$", "", path_str)
+    if nd <= 1:
+        return (None,) * nd                       # norms, biases, scalars
+    is_expert = bool(re.search(r"\['ffn'\]\['w[igo]'\]$", path_str))
+    is_vocab = bool(re.search(r"\['(embed|unembed)'\]$", path_str))
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if spec == ("moe3",):                 # [E, D, F]
+                base = (TP, FS, None)
+            elif spec == ("moe3o",):              # [E, F, D]
+                base = (TP, None, FS)
+            else:
+                base = spec
+            if nd == len(base) + 1:               # scan-stacked
+                base = (None,) + tuple(base)
+            if nd != len(base):
+                return (None,) * nd
+            if serve:
+                base = tuple(None if a == FS else a for a in base)
+            if ep_major and not (is_expert or is_vocab):
+                base = tuple(None if a == TP else a for a in base)
+            return _check(base, shape, sizes)
+    # default 2-D: fsdp x model; higher rank: replicate
+    if nd == 2:
+        base = (None, TP) if serve else (FS, TP)
+    elif nd == 3:
+        base = (None, None, TP) if serve else (None, FS, TP)
+    else:
+        return (None,) * nd
+    if ep_major and not (is_expert or is_vocab):
+        base = tuple(None if a == TP else a for a in base)
+    return _check(base, shape, sizes)
+
+
+def param_shardings(params_shape, mesh: Mesh, *, serve: bool = False):
+    """Pytree of NamedShardings mirroring ``params_shape`` (ShapeDtypeStructs
+    or arrays)."""
+    sizes = axis_sizes(mesh)
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        spec = _param_base_spec(ps, leaf.shape, sizes, serve=serve)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# optimizer / train-state shardings
+# ---------------------------------------------------------------------------
+
+def train_state_shardings(state_shape, mesh: Mesh, *, ep_major: bool = False):
+    """params/master/m/v follow param rules; residual is pod-sharded;
+    scalars replicate."""
+    sizes = axis_sizes(mesh)
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if ps.startswith("['residual']"):
+            ax = "pod" if "pod" in sizes else "data"
+            return NamedSharding(mesh, P(ax))
+        if leaf.ndim == 0 or "count" in ps:
+            return NamedSharding(mesh, P())
+        # strip the state prefix so param rules match
+        spec = _param_base_spec(ps, leaf.shape, sizes, ep_major=ep_major)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / decode-state shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    sizes = axis_sizes(mesh)
+    dp = batch_axes(mesh)
+
+    def one(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        first = dp if _fits(b, dp, sizes) else (
+            "data" if _fits(b, "data", sizes) else None)
+        spec = (first,) + (None,) * (leaf.ndim - 1) if leaf.ndim else ()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def decode_state_shardings(state_shape, mesh: Mesh):
+    """Decode caches: batch over DP axes; heads (preferred) or sequence
+    over ``model``.  Per-leaf divisibility-checked -- awkward dims fall back
+    to replication so every (arch x shape) cell compiles.
+
+    Layouts handled (leading scan axis auto-detected via the 'scan' key):
+      k/v/k8/v8 [B, G, W, dh]   G->model, else W->model (flash-decode)
+      ks/vs     [B, G, W]       matches k8/v8 choice
+      c/c8/r    [B, W, X]       W->model (MLA latent)
+      cs        [B, W]          W->model
+      h         [B, H, K, P]    H->model   (mamba2)
+      wkv       [B, H, k, v]    H->model   (rwkv6)
+      conv      [B, dc, ch]     ch->model
+      tm_prev/cm_prev [B, D]    D->model
+      pos_arr/len               batch only / replicated
+    """
+    sizes = axis_sizes(mesh)
+    dp = batch_axes(mesh)
+
+    def bspec(b):
+        return dp if _fits(b, dp, sizes) else (
+            "data" if _fits(b, "data", sizes) else None)
+
+    def one(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        scanned = "scan" in keys
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd >= 1 and name != "":
+            spec[0] = bspec(shape[0])
+        if name in ("k", "v", "k8", "v8") and nd == 4:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP                      # heads over model
+            elif _fits(shape[2], TP, sizes):
+                spec[2] = TP                      # sequence over model
+        elif name in ("ks", "vs") and nd == 3:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP
+            elif _fits(shape[2], TP, sizes):
+                spec[2] = TP
+        elif name in ("c", "c8", "r") and nd == 3:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP
+        elif name == "cs" and nd == 2:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP
+        elif name in ("h", "wkv") and nd == 4:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP
+        elif name == "conv" and nd == 3:
+            if _fits(shape[2], TP, sizes):
+                spec[2] = TP
+        elif name in ("tm_prev", "cm_prev") and nd == 2:
+            if _fits(shape[1], TP, sizes):
+                spec[1] = TP
+        if scanned:
+            spec = [None] + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

@@ -1,0 +1,246 @@
+"""Model building blocks: norms, RoPE, chunked attention, GQA, MLP.
+
+Pure-functional: every layer is (init(rng, cfg) -> params, apply(params, x)).
+Attention uses a KV-chunked online-softmax formulation (lax.scan over KV
+chunks) so the S x S score matrix is never materialized -- required for the
+32k/500k dry-runs to fit HBM, and the same schedule a TPU flash kernel uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.quantized import getw
+
+Init = jax.nn.initializers
+
+NEG_INF = -1e30
+
+
+def _dense_init(rng, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, n, d]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, d/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention core
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset=0, chunk: int = 1024, scale: float | None = None):
+    """Online-softmax attention without materializing S_q x S_k.
+
+    q: [B, H, Sq, dh]; k/v: [B, G, Sk, dh] (GQA: H % G == 0).
+    q_offset: absolute position of q[0] (for decode/prefill continuation).
+    window > 0: local attention (each query sees the last `window` keys).
+    """
+    B, H, Sq, dh = q.shape
+    _, G, Sk, dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    group = H // G
+    scale = scale if scale is not None else dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, G, group, Sq, dh)
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        kp, vp = k, v
+    kc = kp.reshape(B, G, nchunks, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = vp.reshape(B, G, nchunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, kck, vck = inputs
+        kf = kck.astype(jnp.float32)
+        logits = jnp.einsum("bghqd,bgkd->bghqk", qf, kf)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        valid = k_pos[None, :] < Sk
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bghqk,bgkd->bghqd", p, vck.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    from repro.launch.sharding import match_vma
+    m0 = match_vma(jnp.full((B, G, group, Sq), NEG_INF, jnp.float32), q)
+    l0 = match_vma(jnp.zeros((B, G, group, Sq), jnp.float32), q)
+    a0 = match_vma(jnp.zeros((B, G, group, Sq, dv), jnp.float32), q)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, Sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, cfg: ArchConfig):
+    D, H, G, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * dh)),
+        "wk": _dense_init(ks[1], (D, G * dh)),
+        "wv": _dense_init(ks[2], (D, G * dh)),
+        "wo": _dense_init(ks[3], (H * dh, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((G * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((G * dh,), jnp.float32)
+    return p
+
+
+def gqa_qkv(cfg: ArchConfig, p, x, positions):
+    B, S, D = x.shape
+    H, G, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, getw(p, "wq"))
+    k = jnp.einsum("bsd,df->bsf", x, getw(p, "wk"))
+    v = jnp.einsum("bsd,df->bsf", x, getw(p, "wv"))
+    if cfg.qkv_bias:
+        q = (q.astype(jnp.float32) + p["bq"]).astype(x.dtype)
+        k = (k.astype(jnp.float32) + p["bk"]).astype(x.dtype)
+        v = (v.astype(jnp.float32) + p["bv"]).astype(x.dtype)
+    q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, G, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, G, dh).transpose(0, 2, 1, 3)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def gqa_apply(cfg: ArchConfig, p, x, *, local: bool, positions=None):
+    """Full-sequence forward (train/prefill). Returns (out, (k, v))."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = gqa_qkv(cfg, p, x, positions)
+    from repro.launch.sharding import shard_attn_qkv
+    q, k, v = shard_attn_qkv(q, k, v)
+    out = chunked_attention(q, k, v, causal=cfg.causal,
+                            window=cfg.window if local else 0)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return jnp.einsum("bsf,fd->bsd", out, getw(p, "wo")), (k, v)
+
+
+def gqa_decode(cfg: ArchConfig, p, x, cache_k, cache_v, pos, *, local: bool):
+    """Single-token decode. x: [B, 1, D]; cache: [B, G, S, dh]; pos: [B]."""
+    B = x.shape[0]
+    q, k_new, v_new = gqa_qkv(cfg, p, x, pos[:, None])
+    # write the new KV at pos (per batch row)
+    def upd(c, n):
+        return jax.vmap(
+            lambda cb, nb, pb: jax.lax.dynamic_update_slice(
+                cb, nb, (0, pb, 0)))(c, n, pos)
+    cache_k = upd(cache_k, k_new.astype(cache_k.dtype))
+    cache_v = upd(cache_v, v_new.astype(cache_v.dtype))
+    S = cache_k.shape[2]
+    win = cfg.window if local else 0
+    # mask by current length (pos+1) inside chunked attention via lengths
+    out = decode_attention(q, cache_k, cache_v, pos + 1, window=win)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    return jnp.einsum("bsf,fd->bsd", out, getw(p, "wo")), cache_k, cache_v
+
+
+def decode_attention(q, k, v, lengths, *, window: int = 0, chunk: int = 1024):
+    """q: [B, H, 1, dh] vs cache [B, G, S, dh] with per-row valid lengths."""
+    B, H, _, dh = q.shape
+    G, S = k.shape[1], k.shape[2]
+    group = H // G
+    qf = (q.astype(jnp.float32) * dh ** -0.5).reshape(B, G, group, dh)
+    logits = jnp.einsum("bghd,bgsd->bghs", qf, k.astype(jnp.float32))
+    s_pos = jnp.arange(S)
+    valid = s_pos[None, :] < lengths[:, None]
+    if window:
+        valid = valid & (s_pos[None, :] >= lengths[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    pr = jnp.exp(logits - m)
+    out = jnp.einsum("bghs,bgsd->bghd", pr, v.astype(jnp.float32))
+    out = out / jnp.sum(pr, axis=-1)[..., None]
+    return out.reshape(B, H, 1, v.shape[-1]).astype(q.dtype)[:, :, :, :]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ArchConfig, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "silu":  # gated
+        return {"wi": _dense_init(ks[0], (D, F)),
+                "wg": _dense_init(ks[1], (D, F)),
+                "wo": _dense_init(ks[2], (F, D))}
+    return {"wi": _dense_init(ks[0], (D, F)),
+            "wo": _dense_init(ks[2], (F, D))}
+
+
+def mlp_apply(cfg: ArchConfig, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, getw(p, "wi"))
+    if cfg.act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, getw(p, "wg"))
+        h = jax.nn.silu(h.astype(jnp.float32)) * g.astype(jnp.float32)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32))
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), getw(p, "wo"))

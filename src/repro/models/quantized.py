@@ -1,0 +1,105 @@
+"""Model-level compressed weights: the paper's flagship site, model-wide.
+
+Weights live in HBM int8 (per-output-column absmax scales) and are
+dequantized INLINE at each consumer matmul -- on TPU the fused
+kernels/fused_matmul kernel; under plain XLA a convert*scale that fuses
+into the dot.  HBM then streams ~half the bytes (bf16 baseline) per step:
+the CABA high-priority decompression warp as a weight format.
+
+``getw(p, name)`` is the single access point model code uses; a plain
+array passes through, a quantized leaf dequantizes.  ``quantize_params``
+rewrites a params pytree (2-D+ floating mats above a size threshold) into
+this format; everything else (norms, biases, embeddings consumed by
+gather) stays raw.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def getw(p, name: str):
+    """Fetch a weight from a params dict, dequantizing if compressed."""
+    v = p[name]
+    if isinstance(v, dict) and "q8" in v:
+        return (v["q8"].astype(jnp.bfloat16)
+                * v["s8"].astype(jnp.bfloat16))
+    return v
+
+
+def quantize_leaf(w):
+    """bf16/f32[..., K, N] -> {"q8": int8, "s8": f32[..., 1, N]}."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q8": q, "s8": scale.astype(jnp.float32)}
+
+
+def dequantize_leaf(v):
+    return (v["q8"].astype(jnp.float32) * v["s8"]).astype(jnp.bfloat16)
+
+
+# leaf names consumed via matmul (embed/unembed excluded: gather + the
+# tied-logits path keep them raw; quantizing the unembed is a variant)
+_QUANT_NAMES = {
+    "wq", "wk", "wv", "wo", "wi", "wg", "wr",
+    "wq_a", "wq_b", "wkv_a", "wkv_b",
+    "in_proj", "out_proj", "lora_A", "lora_B",
+}
+
+
+def quantize_params(params, *, min_size: int = 4096,
+                    names: set | None = None):
+    """Rewrite matmul weights into the compressed format (serve path)."""
+    names = _QUANT_NAMES if names is None else names
+
+    def walk(node):
+        if not isinstance(node, dict):
+            if isinstance(node, list):
+                return [walk(x) for x in node]
+            if isinstance(node, tuple):
+                return tuple(walk(x) for x in node)
+            return node
+        out = {}
+        for k, v in node.items():
+            if (k in names and hasattr(v, "ndim") and v.ndim >= 2
+                    and v.size >= min_size
+                    and jnp.issubdtype(v.dtype, jnp.floating)):
+                out[k] = quantize_leaf(v)
+            else:
+                out[k] = walk(v)
+        return out
+
+    return walk(params)
+
+
+def params_bytes(params) -> int:
+    return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(params))
+
+
+def max_dequant_error(params, qparams) -> float:
+    """Worst relative dequant error across quantized leaves (tests)."""
+    worst = 0.0
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    by_path = {jax.tree_util.keystr(k): v for k, v in flat_p}
+
+    def walk(node, prefix):
+        nonlocal worst
+        if isinstance(node, dict) and "q8" in node:
+            orig = by_path[prefix]
+            deq = dequantize_leaf(node).astype(jnp.float32)
+            of = orig.astype(jnp.float32)
+            denom = float(jnp.max(jnp.abs(of))) + 1e-9
+            worst = max(worst, float(jnp.max(jnp.abs(deq - of))) / denom)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, prefix + f"['{k}']")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, prefix + f"[{i}]")
+
+    walk(qparams, "")
+    return worst

@@ -1,0 +1,432 @@
+"""SSM token-mix layers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are linear-attention recurrences over a per-head matrix state
+``S[K, V]`` with multiplicative decay:
+
+    S_t = diag(w_t) . S_{t-1} + k_t v_t^T          (0 < w_t <= 1)
+    mamba2: y_t = q_t^T S_t            (q=C, k=B, v=dt*x, w=exp(A*dt) scalar/head)
+    rwkv6 : y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)   (w per-channel, u bonus)
+
+Training/prefill uses a CHUNKED formulation: sequence split into chunks,
+state carried by a lax.scan across chunks, all within-chunk interactions
+computed in parallel with log-space decay differences.  Every exponent we
+take is a sum of log w <= 0 terms, so exp() never overflows -- this is the
+numerically-safe variant of the flash-linear-attention chunking.
+
+Decode is the plain one-token recurrence.
+
+These layers are where the assignment's ``long_500k`` cells run: the state
+is O(K*V) per head regardless of context length, so a 500k-token decode
+moves only the state + weights (the CABA memory-bound regime with no KV
+blowup; DESIGN.md 5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, norm_apply
+from repro.models.quantized import getw
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked linear attention core (shared by mamba2 / rwkv6)
+# ---------------------------------------------------------------------------
+
+def _chunk_scan_scalar(q, k, v, log_w, state0, *, chunk: int):
+    """Scalar-per-head decay (mamba2).  y_t reads the state AFTER token t.
+
+    q,k: [B,S,H,K]; v: [B,S,H,V]; log_w: [B,S,H] (<= 0); state0: [B,H,K,V].
+    Returns (y [B,S,H,V], state [B,H,K,V]).
+    """
+    B, S, H, K = q.shape
+    Vd = v.shape[-1]
+    L = min(chunk, S)
+    # pad to a chunk multiple: k=v=0, log_w=0 leaves the state invariant
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    N = Sp // L
+    qc = q.reshape(B, N, L, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    kc = k.reshape(B, N, L, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vc = v.reshape(B, N, L, H, Vd).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    wc = log_w.reshape(B, N, L, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((L, L), bool))               # s <= t
+
+    def step(state, inp):
+        qq, kk, vv, ww = inp                               # [B,L,H,*]
+        lc = jnp.cumsum(ww, axis=1)                        # [B,L,H] inclusive
+        # within-chunk: E_ts = lc_t - lc_s  (<= 0 for s <= t).  Double-where
+        # keeps exp() finite for masked (s > t) entries, whose positive diff
+        # would otherwise overflow and poison gradients through the where.
+        diff = lc[:, :, None, :] - lc[:, None, :, :]       # [B,L,L,H]
+        m4 = mask[None, :, :, None]
+        dec = jnp.where(m4, jnp.exp(jnp.where(m4, diff, 0.0)), 0.0)
+        scores = jnp.einsum("blhk,bmhk->blmh", qq, kk) * dec
+        y = jnp.einsum("blmh,bmhv->blhv", scores, vv)
+        # state-in contribution: q_t . (exp(lc_t) * S0)
+        qs = qq * jnp.exp(lc)[..., None]
+        y = y + jnp.einsum("blhk,bhkv->blhv", qs, state)
+        # state-out: exp(lc_L) * S0 + sum_s exp(lc_L - lc_s) k_s v_s
+        tail = jnp.exp(lc[:, -1:, :] - lc)                 # [B,L,H] (<= 1)
+        kd = kk * tail[..., None]
+        new = jnp.einsum("blhk,blhv->bhkv", kd, vv)
+        state = state * jnp.exp(lc[:, -1, :])[..., None, None] + new
+        return state, y
+
+    from repro.launch.sharding import match_vma
+    state, ys = jax.lax.scan(step, match_vma(state0.astype(jnp.float32), q),
+                             (qc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, Vd)[:, :S]
+    return y, state
+
+
+def _chunk_scan_channel(r, k, v, log_w, u, state0, *, chunk: int):
+    """Per-channel decay with diagonal bonus (rwkv6).  y_t reads S_{t-1}.
+
+    r,k: [B,S,H,K]; v: [B,S,H,V]; log_w: [B,S,H,K] (<= 0); u: [H,K];
+    state0: [B,H,K,V].  Returns (y, state).
+    """
+    B, S, H, K = r.shape
+    Vd = v.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    N = Sp // L
+    rc = r.reshape(B, N, L, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    kc = k.reshape(B, N, L, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vc = v.reshape(B, N, L, H, Vd).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    wc = log_w.reshape(B, N, L, H, K).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    smask = jnp.tril(jnp.ones((L, L), bool), k=-1)        # s < t (strict)
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rr, kk, vv, ww = inp                               # [B,L,H,*]
+        lc = jnp.cumsum(ww, axis=1)                        # [B,L,H,K]
+        lprev = lc - ww                                    # lc_{t-1} (lc_-1=0)
+        # E_ts = lprev_t - lc_s per channel (<= 0 for s < t); double-where
+        # guards the masked s >= t entries (see scalar variant).
+        diff = lprev[:, :, None] - lc[:, None, :]          # [B,L,L,H,K]
+        m5 = smask[None, :, :, None, None]
+        dec = jnp.where(m5, jnp.exp(jnp.where(m5, diff, 0.0)), 0.0)
+        scores = jnp.einsum("blhk,blmhk,bmhk->blmh", rr, dec, kk)
+        y = jnp.einsum("blmh,bmhv->blhv", scores, vv)
+        # diagonal bonus: r_t . (u * k_t) v_t
+        diag = jnp.einsum("blhk,hk,blhk->blh", rr, uf, kk)
+        y = y + diag[..., None] * vv
+        # state-in: r_t . (exp(lprev_t) * S0)
+        rs = rr * jnp.exp(lprev)
+        y = y + jnp.einsum("blhk,bhkv->blhv", rs, state)
+        # state-out
+        tail = jnp.exp(lc[:, -1:] - lc)                    # [B,L,H,K]
+        kd = kk * tail
+        new = jnp.einsum("blhk,blhv->bhkv", kd, vv)
+        state = state * jnp.exp(lc[:, -1])[..., None] + new
+        return state, y
+
+    from repro.launch.sharding import match_vma
+    state, ys = jax.lax.scan(step, match_vma(state0.astype(jnp.float32), r),
+                             (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, Vd)[:, :S]
+    return y, state
+
+
+def linear_attn_decode_scalar(q, k, v, log_w, state):
+    """One-token mamba2 recurrence. q,k: [B,H,K]; v: [B,H,V]; log_w: [B,H]."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    state = state * jnp.exp(log_w.astype(jnp.float32))[..., None, None]
+    state = state + kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+    return y, state
+
+
+def linear_attn_decode_channel(r, k, v, log_w, u, state):
+    """One-token rwkv6 recurrence. log_w: [B,H,K]; u: [H,K]."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]               # [B,H,K,V]
+    y = jnp.einsum("bhk,bhkv->bhv", rf,
+                   state + u.astype(jnp.float32)[..., None] * kv)
+    state = state * jnp.exp(log_w.astype(jnp.float32))[..., None] + kv
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return d_in, nheads, conv_ch
+
+
+def mamba2_init(rng, cfg: ArchConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in, nheads, conv_ch = mamba2_dims(cfg)
+    ks = jax.random.split(rng, 4)
+    proj_out = 2 * d_in + 2 * s.d_state + nheads           # z, xBC, dt
+    return {
+        "in_proj": _dense_init(ks[0], (D, proj_out)),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * (1.0 / np.sqrt(s.d_conv))),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (d_in, D)),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over S.  xBC: [B,S,C]; conv_w: [dc,C].
+
+    conv_state: [B, dc-1, C] trailing context (decode) or None (zeros).
+    Returns (y [B,S,C], new_state [B, dc-1, C]).
+    """
+    B, S, C = xBC.shape
+    dc = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, dc - 1, C), xBC.dtype)
+    padded = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(dc):
+        y = y + conv_w[i] * padded[:, i:i + S].astype(jnp.float32)
+    y = y + conv_b
+    new_state = padded[:, S:]                              # last dc-1 tokens
+    return jax.nn.silu(y).astype(xBC.dtype), new_state
+
+
+def _mamba2_inner(cfg, p, x):
+    """Shared projection path. x: [B,S,D] -> (z, xc, Bc, Cc, log_w, dt)."""
+    s = cfg.ssm
+    d_in, nheads, conv_ch = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,df->bsf", x, getw(p, "in_proj"))
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_ch]
+    dt = zxbcdt[..., d_in + conv_ch:].astype(jnp.float32)  # [B,S,H]
+    return z, xBC, dt
+
+
+def mamba2_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 256):
+    """Full-sequence forward.  state: optional dict(h, conv) to continue.
+    Returns (out [B,S,D], new_state)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_in, nheads, conv_ch = mamba2_dims(cfg)
+    z, xBC, dt = _mamba2_inner(cfg, p, x)
+    conv_state = None if state is None else state["conv"]
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xc = xBC[..., :d_in]
+    Bc = xBC[..., d_in:d_in + s.d_state]
+    Cc = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # [B,S,H]
+    A = -jnp.exp(p["A_log"])                               # [H] < 0
+    log_w = dt * A                                         # [B,S,H] <= 0
+    xh = xc.reshape(B, S, nheads, s.head_dim)
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, S, nheads, s.d_state))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, S, nheads, s.d_state))
+    v = xh.astype(jnp.float32) * dt[..., None]
+    h0 = (jnp.zeros((B, nheads, s.d_state, s.head_dim), jnp.float32)
+          if state is None else state["h"])
+    y, h = _chunk_scan_scalar(q, k, v, log_w, h0, chunk=chunk)
+    y = y + p["D_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z)) * scale
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    y = g * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = jnp.einsum("bsf,fd->bsd", y.astype(x.dtype), getw(p, "out_proj"))
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba2_decode(cfg: ArchConfig, p, x, state):
+    """One-token step. x: [B,1,D]; state: dict(h, conv)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    d_in, nheads, conv_ch = mamba2_dims(cfg)
+    z, xBC, dt = _mamba2_inner(cfg, p, x)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xc = xBC[..., :d_in]
+    Bc = xBC[..., d_in:d_in + s.d_state]
+    Cc = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]          # [B,H]
+    A = -jnp.exp(p["A_log"])
+    log_w = dt * A
+    xh = xc[:, 0].reshape(B, nheads, s.head_dim)
+    q = jnp.broadcast_to(Cc[:, 0, None, :], (B, nheads, s.d_state))
+    k = jnp.broadcast_to(Bc[:, 0, None, :], (B, nheads, s.d_state))
+    v = xh.astype(jnp.float32) * dt[..., None]
+    y, h = linear_attn_decode_scalar(q, k, v, log_w, state["h"])
+    y = y + p["D_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    y = g * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = jnp.einsum("bsf,fd->bsd", y.astype(x.dtype), getw(p, "out_proj"))
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    d_in, nheads, conv_ch = mamba2_dims(cfg)
+    return {"h": jnp.zeros((batch, nheads, s.d_state, s.head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 layer (time mix + channel mix)
+# ---------------------------------------------------------------------------
+
+def rwkv6_dims(cfg: ArchConfig):
+    r = cfg.rwkv
+    nheads = cfg.d_model // r.head_dim
+    return nheads, r.head_dim
+
+
+def rwkv6_init(rng, cfg: ArchConfig):
+    r = cfg.rwkv
+    D, F = cfg.d_model, cfg.d_ff
+    H, dh = rwkv6_dims(cfg)
+    ks = jax.random.split(rng, 10)
+    mu = lambda k: jax.random.uniform(k, (D,), jnp.float32)
+    return {
+        "tm": {  # time mix
+            "ln": {"scale": jnp.ones((D,), jnp.float32),
+                   "bias": jnp.zeros((D,), jnp.float32)},
+            "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+            "mu_g": mu(ks[3]), "mu_w": mu(ks[4]),
+            "wr": _dense_init(ks[5], (D, D)),
+            "wk": _dense_init(ks[6], (D, D)),
+            "wv": _dense_init(ks[7], (D, D)),
+            "wg": _dense_init(ks[8], (D, D)),
+            "wo": _dense_init(ks[9], (D, D)),
+            "w0": jnp.full((D,), -0.6, jnp.float32),       # decay base
+            "lora_A": jnp.zeros((D, r.decay_lora), jnp.float32),
+            "lora_B": (jax.random.normal(jax.random.fold_in(rng, 11),
+                                         (r.decay_lora, D)) * 0.01).astype(jnp.float32),
+            "u": jnp.zeros((H, dh), jnp.float32),          # bonus
+            "gn_scale": jnp.ones((D,), jnp.float32),       # per-head groupnorm
+        },
+        "cm": {  # channel mix
+            "ln": {"scale": jnp.ones((D,), jnp.float32),
+                   "bias": jnp.zeros((D,), jnp.float32)},
+            "mu_k": mu(jax.random.fold_in(rng, 12)),
+            "mu_r": mu(jax.random.fold_in(rng, 13)),
+            "wk": _dense_init(jax.random.fold_in(rng, 14), (D, F)),
+            "wv": _dense_init(jax.random.fold_in(rng, 15), (F, D)),
+            "wr": _dense_init(jax.random.fold_in(rng, 16), (D, D)),
+        },
+    }
+
+
+def _layernorm(p, x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+def _token_shift(x, prev):
+    """x: [B,S,D]; prev: [B,D] (last token of previous segment).
+    Returns (x_{t-1} sequence, new_prev)."""
+    shifted = jnp.concatenate([prev[:, None, :].astype(x.dtype),
+                               x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def _groupnorm_heads(y, scale, H, dh):
+    """Per-head LayerNorm on [B,S,H,dh] (rwkv ln_x), scale: [D]."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-6)
+    B, S = y.shape[:2]
+    return yn.reshape(B, S, H * dh) * scale
+
+
+def rwkv6_time_mix(cfg, p, x, prev, wkv_state, *, chunk: int = 64):
+    """x: [B,S,D]; prev: [B,D]; wkv_state: [B,H,dh,dh] fp32."""
+    H, dh = rwkv6_dims(cfg)
+    B, S, D = x.shape
+    xn = _layernorm(p["ln"], x)
+    xprev, new_prev = _token_shift(xn, prev)
+    mix = lambda m: (xn.astype(jnp.float32) * (1 - m)
+                     + xprev.astype(jnp.float32) * m).astype(x.dtype)
+    xr, xk, xv, xg, xw = (mix(p[f"mu_{c}"]) for c in "rkvgw")
+    r = jnp.einsum("bsd,df->bsf", xr, getw(p, "wr")).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,df->bsf", xk, getw(p, "wk")).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,df->bsf", xv, getw(p, "wv")).reshape(B, S, H, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", xg, getw(p, "wg")).astype(jnp.float32))
+    # data-dependent decay (the Finch signature): w = exp(-exp(w0 + lora))
+    lora = jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32),
+                      getw(p, "lora_A").astype(jnp.float32))
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora),
+                      getw(p, "lora_B").astype(jnp.float32))
+    log_w = -jnp.exp(p["w0"] + lora)                       # [B,S,D] < 0
+    log_w = log_w.reshape(B, S, H, dh)
+    if S == 1:
+        y, wkv_state = linear_attn_decode_channel(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], p["u"], wkv_state)
+        y = y[:, None]
+    else:
+        y, wkv_state = _chunk_scan_channel(r, k, v, log_w, p["u"], wkv_state,
+                                           chunk=chunk)
+    y = _groupnorm_heads(y, p["gn_scale"], H, dh) * g
+    out = jnp.einsum("bsf,fd->bsd", y.astype(x.dtype), getw(p, "wo"))
+    return out, new_prev, wkv_state
+
+
+def rwkv6_channel_mix(cfg, p, x, prev):
+    xn = _layernorm(p["ln"], x)
+    xprev, new_prev = _token_shift(xn, prev)
+    mix = lambda m: (xn.astype(jnp.float32) * (1 - m)
+                     + xprev.astype(jnp.float32) * m).astype(x.dtype)
+    xk, xr = mix(p["mu_k"]), mix(p["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, getw(p, "wk")).astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, getw(p, "wv")).astype(jnp.float32)
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,df->bsf", xr, getw(p, "wr")).astype(jnp.float32))
+    return (rgate * kv).astype(x.dtype), new_prev
+
+
+def rwkv6_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 64):
+    """Full rwkv6 block (time mix + channel mix), residual inside.
+    state: dict(tm_prev [B,D], cm_prev [B,D], wkv [B,H,dh,dh])."""
+    B, S, D = x.shape
+    H, dh = rwkv6_dims(cfg)
+    if state is None:
+        state = rwkv6_init_state(cfg, B)
+    att, tm_prev, wkv = rwkv6_time_mix(cfg, p["tm"], x, state["tm_prev"],
+                                       state["wkv"], chunk=chunk)
+    x = x + att
+    ffn, cm_prev = rwkv6_channel_mix(cfg, p["cm"], x, state["cm_prev"])
+    x = x + ffn
+    return x, {"tm_prev": tm_prev, "cm_prev": cm_prev, "wkv": wkv}
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int):
+    H, dh = rwkv6_dims(cfg)
+    D = cfg.d_model
+    return {"tm_prev": jnp.zeros((batch, D), jnp.bfloat16),
+            "cm_prev": jnp.zeros((batch, D), jnp.bfloat16),
+            "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32)}

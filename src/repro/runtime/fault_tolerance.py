@@ -1,0 +1,178 @@
+"""Supervisor: checkpoint/restart fault tolerance + elastic re-mesh planning.
+
+The supervisor owns the outer training loop.  Invariants it provides:
+  * any step may raise (node failure, injected fault): training resumes
+    from the latest atomic checkpoint with BIT-IDENTICAL continuation
+    (the data pipeline is a pure function of step, the optimizer is
+    deterministic) -- tested in tests/test_fault_tolerance.py,
+  * heartbeats feed the straggler detector; "demote" verdicts produce an
+    elastic re-mesh plan executed at the next checkpoint boundary,
+  * re-mesh: checkpoints are saved in logical (global) form, so a restore
+    onto a smaller mesh is just device_put with new shardings
+    (checkpoint/ckpt.py contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.runtime.straggler import StragglerDetector, StragglerConfig
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    dropped_devices: int
+
+    @property
+    def new_device_count(self) -> int:
+        return int(np.prod(self.new_shape))
+
+
+def plan_remesh(old_shape: tuple, axis_names: tuple, healthy: int,
+                preserve: tuple = ("model",),
+                batch_divisor: int = 0) -> RemeshPlan:
+    """Largest mesh <= healthy devices, shrinking only non-``preserve`` axes.
+
+    The ``model`` (TP/EP) axis is preserved because weight layouts depend on
+    it; the ``data``/``pod`` axes shrink freely (DP re-balance).  With
+    ``batch_divisor`` (the global batch), the total DP extent is constrained
+    to divide it so per-device batch stays integral.
+    """
+    old = dict(zip(axis_names, old_shape))
+    fixed = int(np.prod([old[a] for a in axis_names if a in preserve]))
+    if healthy < fixed:
+        raise ValueError(f"cannot preserve axes {preserve}: need >= {fixed} "
+                         f"devices, have {healthy}")
+    budget = healthy // fixed            # devices available for free axes
+    free = [a for a in axis_names if a not in preserve]
+    old_free = int(np.prod([old[a] for a in free]))
+    # total free extent: largest value <= budget that divides the old extent
+    # (so every old DP rank maps to a new one) and the global batch
+    extent = min(budget, old_free)
+    def ok(e):
+        return (old_free % e == 0
+                and (batch_divisor == 0 or batch_divisor % e == 0))
+    while extent > 1 and not ok(extent):
+        extent -= 1
+    new = dict(old)
+    remaining = extent
+    for i, a in enumerate(free):
+        if i == len(free) - 1:
+            new[a] = remaining
+        else:
+            new[a] = min(old[a], remaining)
+            while new[a] > 1 and remaining % new[a] != 0:
+                new[a] -= 1
+            remaining //= new[a]
+    new_shape = tuple(new[a] for a in axis_names)
+    return RemeshPlan(tuple(old_shape), new_shape, tuple(axis_names),
+                      int(np.prod(old_shape)) - int(np.prod(new_shape)))
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt: ckpt_mod.CkptConfig
+    ckpt_every: int = 10
+    max_restarts: int = 5
+    async_ckpt: bool = True
+    straggler: StragglerConfig = dataclasses.field(default_factory=StragglerConfig)
+
+
+class Supervisor:
+    """Outer training loop with restart-from-latest semantics."""
+
+    def __init__(self, cfg: SupervisorConfig, *,
+                 init_state: Callable[[], dict],
+                 step_fn: Callable,            # (state, batch) -> (state, metrics)
+                 data_fn: Callable,            # step -> batch (pure!)
+                 n_workers: int = 1):
+        self.cfg = cfg
+        self.init_state = init_state
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.restarts = 0
+        self.detector = StragglerDetector(n_workers, cfg.straggler)
+        self.ckpt = (ckpt_mod.AsyncCheckpointer(cfg.ckpt) if cfg.async_ckpt
+                     else None)
+        self.history: list[dict] = []
+
+    def _restore_or_init(self):
+        step = ckpt_mod.latest_step(self.cfg.ckpt)
+        state = self.init_state()
+        if step is None:
+            return state, 0
+        like = jax.tree.map(lambda x: x, state)
+        restored, step = ckpt_mod.restore(self.cfg.ckpt, like)
+        return restored, step + 1
+
+    def _save(self, step, state):
+        if self.ckpt is not None:
+            self.ckpt.save(step, state)
+        else:
+            ckpt_mod.save(self.cfg.ckpt, step, state)
+
+    def run(self, n_steps: int):
+        """Run to ``n_steps`` total, surviving step failures."""
+        state, start = self._restore_or_init()
+        step = start
+        while step < n_steps:
+            try:
+                t0 = time.monotonic()
+                batch = self.data_fn(step)
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                dt = time.monotonic() - t0
+                self.detector.record(0, dt)
+                self.history.append(
+                    {"step": step, "time": dt,
+                     **{k: float(v) for k, v in metrics.items()}})
+                if (step + 1) % self.cfg.ckpt_every == 0:
+                    self._save(step, state)
+                step += 1
+            except Exception as e:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.cfg.max_restarts}") from e
+                if self.ckpt is not None:
+                    try:
+                        self.ckpt.wait()
+                    except Exception:
+                        pass
+                state, step = self._restore_or_init()
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state
+
+
+class FailureInjector:
+    """Wraps a step_fn; raises at chosen steps (fault-tolerance tests)."""
+
+    def __init__(self, step_fn, fail_at: set[int]):
+        self.step_fn = step_fn
+        self.fail_at = set(fail_at)
+        self.calls = 0
+
+    def __call__(self, state, batch):
+        step = self.calls
+        self.calls += 1
+        if step in self.fail_at:
+            self.fail_at.discard(step)       # fail once per site
+            raise RuntimeError(f"injected failure at call {step}")
+        return self.step_fn(state, batch)

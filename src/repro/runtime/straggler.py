@@ -1,0 +1,89 @@
+"""Straggler detection and mitigation planning.
+
+At thousands of nodes, step time is gated by the slowest participant of
+every collective.  The detector keeps an online robust model of per-worker
+step durations (median + MAD) and flags workers whose recent times are
+consistent outliers.  Mitigation is a PLAN (the supervisor enacts it):
+  * "observe"  - outlier but within tolerance budget
+  * "demote"   - persistent straggler: plan an elastic re-mesh without it
+                 (fault_tolerance.plan_remesh) at the next checkpoint
+  * "critical" - no-heartbeat (dead): immediate restart-from-checkpoint
+
+On this CPU container the workers are simulated; the detector logic is
+what a real multi-host deployment would run on the coordinator.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerConfig:
+    window: int = 16          # recent steps per worker
+    mad_k: float = 5.0        # outlier threshold: med + k * MAD
+    demote_after: int = 8     # consecutive outlier steps before demotion
+    min_history: int = 4
+
+
+@dataclasses.dataclass
+class WorkerVerdict:
+    worker: int
+    status: str               # ok | observe | demote | critical
+    last_time: float
+    median: float
+    threshold: float
+
+
+class StragglerDetector:
+    def __init__(self, n_workers: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.times = [collections.deque(maxlen=cfg.window)
+                      for _ in range(n_workers)]
+        self.outlier_streak = [0] * n_workers
+        self.alive = [True] * n_workers
+
+    def record(self, worker: int, step_time: Optional[float]):
+        """step_time=None means missed heartbeat."""
+        if step_time is None:
+            self.alive[worker] = False
+            return
+        self.alive[worker] = True
+        self.times[worker].append(step_time)
+
+    def _stats(self):
+        all_times = [t for d in self.times for t in d]
+        if len(all_times) < self.cfg.min_history:
+            return None, None
+        med = float(np.median(all_times))
+        mad = float(np.median(np.abs(np.asarray(all_times) - med))) or 1e-9
+        return med, med + self.cfg.mad_k * 1.4826 * mad
+
+    def verdicts(self) -> list[WorkerVerdict]:
+        med, thresh = self._stats()
+        out = []
+        for w, d in enumerate(self.times):
+            if not self.alive[w]:
+                out.append(WorkerVerdict(w, "critical", float("nan"),
+                                         med or 0.0, thresh or 0.0))
+                continue
+            if med is None or not d:
+                out.append(WorkerVerdict(w, "ok", d[-1] if d else 0.0,
+                                         0.0, 0.0))
+                continue
+            last = d[-1]
+            if last > thresh:
+                self.outlier_streak[w] += 1
+            else:
+                self.outlier_streak[w] = 0
+            status = ("demote" if self.outlier_streak[w] >= self.cfg.demote_after
+                      else "observe" if self.outlier_streak[w] > 0 else "ok")
+            out.append(WorkerVerdict(w, status, last, med, thresh))
+        return out
+
+    def stragglers(self) -> list[int]:
+        return [v.worker for v in self.verdicts()
+                if v.status in ("demote", "critical")]

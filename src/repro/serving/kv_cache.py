@@ -1,0 +1,76 @@
+"""Compressed KV caches: the CABA KV-compression site (DESIGN.md 4).
+
+Decode is the memory-roofline regime (arithmetic intensity ~1 FLOP/byte):
+every step streams the whole KV cache from HBM.  Storing it block-scaled
+int8 halves (bf16) or quarters (fp32) the dominant roofline term; the
+dequant multiply runs on VPU cycles that are idle anyway -- the paper's
+compute-for-bandwidth trade at the serving layer.
+
+Layout (per attention layer):
+  k8, v8 : int8[B, G, W, dh]      per-token-per-head absmax quantization
+  ks, vs : f32[B, G, W]           scales
+MLA latent:
+  c8     : int8[B, W, lora]       the latent is itself already a compressed
+  cs     : f32[B, W]              KV (DESIGN.md 5) -- int8 stacks on top
+
+The scales FACTOR OUT of the attention contractions, so the compressed
+cache is consumed without materializing a dequantized copy:
+  logits = (q . k8) * ks          out = ((p * vs) . v8)
+-- the fusion XLA (and the Pallas decode_attn kernel) needs to keep HBM
+traffic at int8 bytes.  Exactness is bounded by the quant tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_MODES = ("bf16", "int8")
+
+
+def quantize_token(x):
+    """[..., dh] -> (int8[..., dh], f32[...]) absmax per leading index."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def init_kv_int8(batch: int, G: int, W: int, dh: int):
+    return {"k8": jnp.zeros((batch, G, W, dh), jnp.int8),
+            "ks": jnp.ones((batch, G, W), jnp.float32),
+            "v8": jnp.zeros((batch, G, W, dh), jnp.int8),
+            "vs": jnp.ones((batch, G, W), jnp.float32)}
+
+
+def init_latent_int8(batch: int, W: int, lora: int, rope_dim: int,
+                     dtype=jnp.bfloat16):
+    return {"c8": jnp.zeros((batch, W, lora), jnp.int8),
+            "cs": jnp.ones((batch, W), jnp.float32),
+            "r": jnp.zeros((batch, W, rope_dim), dtype)}
+
+
+def update_kv_int8(state, k_new, v_new, slot):
+    """k_new/v_new: [B, G, 1, dh]; slot: int32[B] write positions."""
+    k8, ks = quantize_token(k_new)
+    v8, vs = quantize_token(v_new)
+
+    def upd4(c, n):
+        return jax.vmap(lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+            cb, nb.astype(cb.dtype), (0, sb, 0)))(c, n, slot)
+
+    def upd3(c, n):
+        return jax.vmap(lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+            cb, nb.astype(cb.dtype), (0, sb)))(c, n, slot)
+
+    return dict(state, k8=upd4(state["k8"], k8), ks=upd3(state["ks"], ks),
+                v8=upd4(state["v8"], v8), vs=upd3(state["vs"], vs))
+
+
+def kv_bytes(state) -> int:
+    """Actual HBM bytes of a cache pytree (compression accounting)."""
+    return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(state))

@@ -1,0 +1,141 @@
+"""AdamW from scratch, with optional CABA-compressed optimizer state.
+
+The optimizer-state compression site (DESIGN.md 4) stores the first/second
+moments block-scaled int8 instead of fp32 -- a 4x memory-term reduction paid
+for with a dequant/requant VPU pass each step (idle compute during the
+memory-bound optimizer update: the paper's trade, applied to the update
+step).  Error is bounded by the quant tests; training-quality impact is
+benchmarked in benchmarks/fig12_algorithms.py on real tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_compression: Optional[str] = None   # None | "int8" (CABA site)
+    master_fp32: bool = False                 # keep fp32 master weights
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _zeros_like_moment(p, compression: Optional[str], sqrt_domain=False):
+    z = jnp.zeros(p.shape, jnp.float32)
+    if compression:
+        return quant.compress(z, compression)
+    return z
+
+
+def _load_moment(m, sqrt_domain: bool = False):
+    if isinstance(m, quant.QuantTensor):
+        v = quant.decompress(m).astype(jnp.float32)
+        return jnp.square(v) if sqrt_domain else v
+    return m
+
+
+def _store_moment(m_new, like, compression: Optional[str],
+                  sqrt_domain: bool = False):
+    """``sqrt_domain``: store sqrt(v) -- block-absmax int8 crushes small
+    second-moment entries to zero (Adam step explodes, observed on
+    starcoder2); quantizing in the sqrt domain compresses the dynamic
+    range so small entries survive (the bitsandbytes trick)."""
+    if compression:
+        return quant.compress(jnp.sqrt(m_new) if sqrt_domain else m_new,
+                              compression)
+    return m_new
+
+
+def init_opt_state(params, cfg: OptConfig):
+    state = {
+        "m": jax.tree.map(lambda p: _zeros_like_moment(p, cfg.state_compression),
+                          params),
+        "v": jax.tree.map(lambda p: _zeros_like_moment(p, cfg.state_compression),
+                          params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, stats)."""
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, opt_state["count"])
+    b1, b2 = cfg.betas
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > cfg.clip_norm, cfg.clip_norm / (gnorm + 1e-12),
+                      1.0)
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    src = opt_state.get("master", params)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        mf = _load_moment(m) * b1 + (1 - b1) * gf
+        vf = _load_moment(v, sqrt_domain=True) * b2 + (1 - b2) * gf * gf
+        mh, vh = mf / bc1, vf / bc2
+        pf = p.astype(jnp.float32)
+        # no weight decay on 1-D params (norms, biases), standard practice
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * pf)
+        return pf, mf, vf
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    flat_src = treedef.flatten_up_to(src)
+    new_p, new_m, new_v, new_master = [], [], [], []
+    for g, m, v, p, s in zip(flat_g, flat_m, flat_v, flat_p, flat_src):
+        pf, mf, vf = upd(g, m, v, s)
+        new_master.append(pf)
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_store_moment(mf, m, cfg.state_compression))
+        new_v.append(_store_moment(vf, v, cfg.state_compression,
+                                   sqrt_domain=True))
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "count": count}
+    if cfg.master_fp32:
+        new_state["master"] = jax.tree.unflatten(treedef, new_master)
+    stats = {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+    return new_params, new_state, stats
+
+
+def opt_state_bytes(opt_state) -> int:
+    """Actual bytes held by the optimizer state (compression accounting)."""
+    return sum(t.size * t.dtype.itemsize
+               for t in jax.tree.leaves(opt_state))

@@ -1,0 +1,114 @@
+"""Per-arch smoke tests: REDUCED same-family config, one forward/train step
+on CPU, output shapes + finiteness (the assignment's smoke contract), plus
+prefill->decode consistency for decoder archs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.models import transformer as T
+from repro.models.model import build_model, make_batch
+
+SHAPE = ShapeConfig("smoke", 64, 2, "train")
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_smoke(rng, name):
+    cfg = reduced(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SHAPE, rng)
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss)), name
+    gsum = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+               for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsum) and gsum > 0, name
+    logits, _ = model.fwd_train(params, batch)
+    S_out = SHAPE.seq_len if cfg.frontend != "vision" else SHAPE.seq_len
+    assert logits.shape[0] == SHAPE.global_batch
+    assert logits.shape[-1] == cfg.vocab_size
+
+
+@pytest.mark.parametrize("name", [a for a in ALL_ARCHS
+                                  if ARCHS[a].causal
+                                  and ARCHS[a].frontend != "audio"])
+def test_prefill_decode_consistency(rng, name):
+    cfg = reduced(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SHAPE, rng)
+    B = SHAPE.global_batch
+    EXTRA = 3
+    P = cfg.n_patches if cfg.frontend == "vision" else 0
+    n_tok = batch["tokens"].shape[1]
+    extra = (2 + jnp.arange(EXTRA)[None, :] * 3
+             % (cfg.vocab_size - 2)).astype(jnp.int32)
+    toks_all = jnp.concatenate(
+        [batch["tokens"], jnp.broadcast_to(extra, (B, EXTRA))], 1)
+    full_batch = {"tokens": toks_all}
+    if P:
+        full_batch["patches"] = batch["patches"]
+    logits_full, _, _ = T.stack_apply_seq(cfg, params, full_batch,
+                                          want_state=False, remat=False,
+                                          moe_dropless=True)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    logits_pre, state = model.prefill(params, pre, P + n_tok + EXTRA,
+                                      moe_dropless=True)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre),
+        np.asarray(logits_full[:, :logits_pre.shape[1]]), atol=1e-3)
+    tol = 0.2 if cfg.moe is not None else 0.1   # MoE: routing tie flips
+    for t in range(EXTRA):
+        lg, state = model.decode_step(params, state,
+                                      toks_all[:, n_tok + t][:, None])
+        err = float(jnp.max(jnp.abs(lg[:, 0]
+                                    - logits_full[:, P + n_tok + t])))
+        assert err < tol, (name, t, err)
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b", "gemma3-4b",
+                                  "deepseek-v2-lite-16b", "zamba2-1.2b",
+                                  "rwkv6-7b"])
+def test_int8_kv_decode_close(rng, name):
+    """CABA KV site: int8 cache decode stays within quant error."""
+    cfg = reduced(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SHAPE, rng)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    max_len = SHAPE.seq_len + 2
+    _, st_ref = model.prefill(params, pre, max_len, moe_dropless=True,
+                              kv_mode="bf16")
+    _, st_q = model.prefill(params, pre, max_len, moe_dropless=True,
+                            kv_mode="int8")
+    tok = jnp.full((SHAPE.global_batch, 1), 3, jnp.int32)
+    lg_ref, _ = model.decode_step(params, st_ref, tok)
+    lg_q, _ = model.decode_step(params, st_q, tok)
+    err = float(jnp.max(jnp.abs(lg_ref - lg_q)))
+    assert err < 0.6, (name, err)
+
+
+def test_encoder_has_no_decode():
+    cfg = reduced(ARCHS["hubert-xlarge"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = model.init_state(2, 8)
+    with pytest.raises(ValueError):
+        model.decode_step(params, state, jnp.zeros((2, 1), jnp.int32))
+
+
+def test_param_counts_match_analytic():
+    """Analytic 6ND bookkeeping vs actual init (reduced configs)."""
+    for name in ("qwen2-7b", "rwkv6-7b", "deepseek-v2-lite-16b"):
+        cfg = reduced(ARCHS[name])
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        # analytic counts exclude small norms/biases: within 15%
+        assert abs(actual - analytic) / actual < 0.15, \
+            (name, actual, analytic)

@@ -1,0 +1,71 @@
+"""Byte/word primitive round-trips (the substrate under every scheme)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bytesops as bo
+
+
+@pytest.mark.parametrize("dtype", ["int32", "float32", "bfloat16", "uint8",
+                                   "int16"])
+def test_to_from_bytes_roundtrip(rng, dtype):
+    x = jnp.asarray(rng.integers(0, 255, (7, 13)).astype(np.uint8))
+    x = jax.lax.bitcast_convert_type(
+        x.reshape(-1)[: (91 // jnp.dtype(dtype).itemsize)
+                      * jnp.dtype(dtype).itemsize]
+        .reshape(-1, jnp.dtype(dtype).itemsize), jnp.dtype(dtype))
+    b = bo.to_bytes(x)
+    y = bo.from_bytes(b, x.dtype, x.shape)
+    assert (np.asarray(bo.to_bytes(y)) == np.asarray(b)).all()
+
+
+@pytest.mark.parametrize("wb", [1, 2, 4, 8])
+def test_words_roundtrip(rng, wb):
+    blk = jnp.asarray(rng.integers(0, 256, (5, 64)).astype(np.uint8))
+    w = bo.words_from_block(blk, wb)
+    back = bo.block_from_words(w, wb, 64)
+    assert (np.asarray(back) == np.asarray(blk)).all()
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_pack_bits_roundtrip(bits):
+    b = jnp.asarray(np.asarray(bits, bool)[None])
+    packed = bo.pack_bits(b)
+    un = bo.unpack_bits(packed, len(bits))
+    assert (np.asarray(un)[0] == np.asarray(bits)).all()
+
+
+@given(st.integers(1, 4), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_low_bytes_roundtrip(d, W):
+    rng = np.random.default_rng(W * 7 + d)
+    vals = rng.integers(0, 1 << (8 * d), W, dtype=np.uint64).astype(np.uint32)
+    u = jnp.asarray(vals)[None]
+    b = bo.pack_low_bytes(u, d)
+    back = bo.unpack_low_bytes(b, W, d)
+    assert (np.asarray(back)[0] == vals).all()
+
+
+def test_sext32():
+    u = jnp.asarray(np.asarray([0x7F, 0x80, 0xFF, 0x01], np.uint32))
+    s = bo.sext32(u, 1)
+    expect = np.asarray([127, -128, -1, 1], np.int64) % (1 << 32)
+    assert (np.asarray(s, np.int64) == expect).all()
+
+
+def test_64bit_arith(rng):
+    a = rng.integers(0, 1 << 63, 32, dtype=np.uint64)
+    b = rng.integers(0, 1 << 63, 32, dtype=np.uint64)
+    a_lo = jnp.asarray((a & 0xFFFFFFFF).astype(np.uint32))
+    a_hi = jnp.asarray((a >> 32).astype(np.uint32))
+    b_lo = jnp.asarray((b & 0xFFFFFFFF).astype(np.uint32))
+    b_hi = jnp.asarray((b >> 32).astype(np.uint32))
+    lo, hi = bo.sub64(a_lo, a_hi, b_lo, b_hi)
+    got = (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+    assert (got == (a - b)).all()
+    lo, hi = bo.add64(a_lo, a_hi, b_lo, b_hi)
+    got = (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+    assert (got == (a + b)).all()

@@ -1,0 +1,133 @@
+"""Checkpoint + fault tolerance: atomic save/restore, hash verification,
+BDI compression, bit-identical resume after injected failure, remesh
+planning, straggler detection."""
+import glob
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import ckpt as C
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import arch_batch
+from repro.models.model import build_model
+from repro.runtime.fault_tolerance import (FailureInjector, Supervisor,
+                                           SupervisorConfig, plan_remesh)
+from repro.runtime.straggler import StragglerConfig, StragglerDetector
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def _setup():
+    cfg = reduced(ARCHS["starcoder2-3b"])
+    model = build_model(cfg)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2,
+                                     decay_steps=50))
+    step = jax.jit(make_train_step(model, tcfg))
+    data = lambda s: arch_batch(cfg, SHAPE, s)
+    mk = lambda: init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    return step, data, mk
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_ckpt_roundtrip(tmp_path, compress):
+    step, data, mk = _setup()
+    state = mk()
+    state, _ = step(state, data(0))
+    ccfg = C.CkptConfig(base_dir=str(tmp_path), compress=compress)
+    C.save(ccfg, 0, state)
+    restored, s = C.restore(ccfg, mk())
+    assert s == 0
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ckpt_gc_and_latest(tmp_path):
+    step, data, mk = _setup()
+    ccfg = C.CkptConfig(base_dir=str(tmp_path), keep=2)
+    state = mk()
+    for s in range(4):
+        C.save(ccfg, s, {"x": jnp.full((4,), s)})
+    assert C.latest_step(ccfg) == 3
+    dirs = sorted(os.listdir(tmp_path))
+    assert len([d for d in dirs if d.startswith("step_")]) == 2
+
+
+def test_ckpt_detects_corruption(tmp_path):
+    ccfg = C.CkptConfig(base_dir=str(tmp_path))
+    C.save(ccfg, 0, {"x": jnp.arange(1000, dtype=jnp.float32)})
+    f = glob.glob(os.path.join(str(tmp_path), "step_*", "arr_*.npz"))[0]
+    with open(f, "r+b") as fh:
+        fh.seek(64)
+        fh.write(b"\x13\x37")
+    with pytest.raises(IOError, match="corrupt"):
+        C.restore(ccfg, {"x": jnp.zeros(1000, jnp.float32)})
+
+
+@pytest.mark.slow
+def test_bit_identical_resume(tmp_path):
+    step, data, mk = _setup()
+    state = mk()
+    for s in range(8):
+        state, _ = step(state, data(s))
+    ref = state["params"]
+
+    sup = Supervisor(
+        SupervisorConfig(ckpt=C.CkptConfig(base_dir=str(tmp_path),
+                                           compress=True),
+                         ckpt_every=3, async_ckpt=True),
+        init_state=mk, step_fn=FailureInjector(step, fail_at={5}),
+        data_fn=data)
+    final = sup.run(8)
+    assert sup.restarts == 1
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        ref, final["params"])
+    assert max(jax.tree.leaves(diffs)) == 0.0
+
+
+def test_supervisor_gives_up(tmp_path):
+    step, data, mk = _setup()
+    sup = Supervisor(
+        SupervisorConfig(ckpt=C.CkptConfig(base_dir=str(tmp_path)),
+                         ckpt_every=100, max_restarts=2),
+        init_state=mk,
+        step_fn=FailureInjector(step, fail_at={0, 1, 2, 3, 4, 5}),
+        data_fn=data)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        sup.run(4)
+
+
+def test_remesh_planning():
+    p = plan_remesh((2, 16, 16), ("pod", "data", "model"), healthy=400,
+                    batch_divisor=256)
+    assert p.new_shape == (2, 8, 16)
+    assert p.new_device_count <= 400
+    p = plan_remesh((16, 16), ("data", "model"), healthy=200,
+                    batch_divisor=256)
+    assert p.new_shape == (8, 16)
+    with pytest.raises(ValueError):
+        plan_remesh((16, 16), ("data", "model"), healthy=8)
+
+
+def test_straggler_detection():
+    det = StragglerDetector(4, StragglerConfig(window=8, demote_after=3))
+    for step in range(10):
+        for w in range(4):
+            t = 1.0 + 0.01 * np.random.default_rng(step * 4 + w).random()
+            if w == 2 and step >= 4:
+                t = 3.0                      # worker 2 becomes slow
+            det.record(w, t)
+        det.verdicts()
+    assert 2 in det.stragglers()
+    det.record(3, None)                      # worker 3 dies
+    v = {x.worker: x.status for x in det.verdicts()}
+    assert v[3] == "critical"
+    assert v[0] == "ok"

@@ -1,0 +1,59 @@
+"""AssistController (AWC) trigger/throttle semantics (paper 4.4)."""
+import pytest
+
+from repro.core.controller import (AssistController, RooflineTerms,
+                                   SiteDescriptor)
+
+
+CTL = AssistController()
+
+
+def _site(term="memory", byts=1e9):
+    return SiteDescriptor("weights", byts, term, True)
+
+
+def test_triggers_when_bound_and_compressible():
+    terms = RooflineTerms(compute=1e-3, memory=5e-3, collective=1e-4)
+    d = CTL.decide(terms, _site(), measured_ratio=2.0, scheme="bdi")
+    assert d.enabled and d.scheme == "bdi"
+
+
+def test_rejects_when_not_bottleneck():
+    terms = RooflineTerms(compute=5e-3, memory=1e-3, collective=1e-4)
+    d = CTL.decide(terms, _site(), measured_ratio=2.0, scheme="bdi")
+    assert not d.enabled and "not the bottleneck" in d.reason
+
+
+def test_rejects_low_compressibility():
+    """The paper's >=10% compressibility profiling rule (6)."""
+    terms = RooflineTerms(compute=1e-3, memory=5e-3, collective=1e-4)
+    d = CTL.decide(terms, _site(), measured_ratio=1.05, scheme="bdi")
+    assert not d.enabled and "below" in d.reason
+
+
+def test_throttles_when_decomp_overhead_wins():
+    """Compute-for-bandwidth only pays if the modeled bottleneck improves."""
+    # nearly compute-bound already; huge site decomp cost would flip it
+    terms = RooflineTerms(compute=9.99e-3, memory=1e-2, collective=0.0)
+    site = SiteDescriptor("weights", 1e12, "memory", True)   # 1 TB moved
+    d = CTL.decide(terms, site, measured_ratio=1.3, scheme="fpc")
+    assert not d.enabled and "throttled" in d.reason
+
+
+def test_plan_orders_by_gain():
+    terms = RooflineTerms(compute=1e-3, memory=8e-3, collective=6e-3)
+    sites = [
+        (SiteDescriptor("weights", 4e9, "memory", True), 2.0, "bdi"),
+        (SiteDescriptor("grads", 2e8, "collective", False), 4.0, "fp8"),
+    ]
+    decisions = CTL.plan(terms, sites)
+    assert decisions[0].site == "weights"           # bigger modeled gain
+    assert any(d.site == "grads" for d in decisions)
+
+
+def test_modeled_terms_monotone():
+    terms = RooflineTerms(compute=1e-3, memory=5e-3, collective=1e-4)
+    site = _site(byts=2e9)
+    new = CTL.modeled_terms(terms, site, ratio=2.0, scheme="bdi")
+    assert new.memory < terms.memory
+    assert new.compute > terms.compute

@@ -1,0 +1,176 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), swept over
+shapes/dtypes per the assignment."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bytesops as bo
+from repro.core.schemes import bdi as bdi_scheme
+from repro.kernels.bdi import ops as bdi_ops, ref as bdi_ref, bdi as bdi_k
+from repro.kernels.fpc import ops as fpc_ops
+from repro.kernels.cpack import ops as cpack_ops
+from repro.kernels.decode_attn import ops as da_ops, ref as da_ref
+from repro.kernels.fused_matmul import ops as fm_ops, ref as fm_ref
+
+
+# ---------------------------------------------------------------------------
+# BDI
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("enc", ["b2d1", "b4d1", "b4d2"])
+@pytest.mark.parametrize("nblocks", [1, 4, 17])
+def test_bdi_kernel_vs_ref(rng, enc, nblocks):
+    wb, db = bdi_k.ENC_PARAMS[enc]
+    B = 512
+    base = rng.integers(200, 1000, (nblocks, 1))
+    # the scheme bases on each block's FIRST word: keep the pairwise word
+    # spread within the signed-delta range (2*60 < 2^7)
+    delta = rng.integers(-60, 60, (nblocks, B // wb)) * db
+    words = np.clip(base + delta, 0, (1 << (8 * wb)) - 1).astype(np.uint32)
+    blocks = np.asarray(bo.block_from_words(
+        jnp.asarray(words) if wb == 4 else jnp.asarray(words), wb, B))
+    base_, mask, deltas, ok = bdi_ref.compress_ref(jnp.asarray(blocks), enc)
+    assert bool(jnp.all(ok))
+    out_k = bdi_k.decompress_pallas(base_, mask, deltas, enc=enc,
+                                    block_bytes=B)
+    out_r = bo.words_from_block(
+        bdi_ref.decompress_ref(base_, mask, deltas, enc, B), wb)
+    np.testing.assert_array_equal(np.asarray(out_k, np.uint32) &
+                                  ((1 << (8 * wb)) - 1),
+                                  np.asarray(out_r))
+
+
+@pytest.mark.parametrize("enc", ["b2d1", "b4d1", "b4d2"])
+def test_bdi_compress_kernel_vs_ref(rng, enc):
+    wb, db = bdi_k.ENC_PARAMS[enc]
+    B, nb = 512, 8
+    W = B // wb
+    words = jnp.asarray(
+        (rng.integers(0, 40, (nb, W)) + 5000).astype(
+            np.uint16 if wb == 2 else np.uint32))
+    got = bdi_k.compress_pallas(words, enc=enc, block_bytes=B)
+    blocks = bo.block_from_words(words.astype(jnp.uint32), wb, B)
+    want = bdi_ref.compress_ref(blocks, enc)
+    for g, w in zip(got[:3], want[:3]):
+        np.testing.assert_array_equal(np.asarray(g).reshape(-1),
+                                      np.asarray(w).reshape(-1))
+    np.testing.assert_array_equal(np.asarray(got[3]).reshape(-1),
+                                  np.asarray(want[3]).astype(np.uint8))
+
+
+@pytest.mark.parametrize("dtype", ["int32", "float32", "bfloat16"])
+@pytest.mark.parametrize("shape", [(64, 128), (33, 77), (1, 4096)])
+def test_bdi_packed_kernel_roundtrip(rng, dtype, shape):
+    if dtype == "int32":
+        x = jnp.asarray((rng.integers(0, 90, shape) + 12345).astype(np.int32))
+    else:
+        x = jnp.asarray(rng.standard_normal(shape) * 0.01, jnp.dtype(dtype))
+    c = bdi_ops.compress_packed_for_kernel(x)
+    y = bdi_ops.decompress_packed(c.stream, c.offsets, c.enc,
+                                  block_bytes=c.block_bytes, shape=c.shape,
+                                  dtype=c.dtype_name)
+    assert (np.asarray(bo.to_bytes(y)) == np.asarray(bo.to_bytes(x))).all()
+
+
+# ---------------------------------------------------------------------------
+# FPC / C-Pack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", ["narrow", "zeros", "mixed", "noise"])
+def test_fpc_kernel_roundtrip(rng, gen):
+    if gen == "narrow":
+        x = rng.integers(-30, 30, (16, 128)).astype(np.int32)
+    elif gen == "zeros":
+        x = np.zeros((16, 128), np.int32)
+    elif gen == "mixed":
+        x = rng.integers(-30, 30, (16, 128)).astype(np.int32)
+        x[::3] = rng.integers(-2**30, 2**30, (6, 128))
+    else:
+        x = rng.integers(-2**30, 2**30, (16, 128)).astype(np.int32)
+    c = fpc_ops.compress(jnp.asarray(x))
+    y = fpc_ops.decompress(c)
+    np.testing.assert_array_equal(np.asarray(y), x)
+
+
+@pytest.mark.parametrize("ndict", [1, 3, 4])
+def test_cpack_kernel_roundtrip(rng, ndict):
+    vocab = rng.integers(0, 2**30, ndict)
+    x = vocab[rng.integers(0, ndict, (8, 256))].astype(np.int32)
+    c = cpack_ops.compress(jnp.asarray(x))
+    y = cpack_ops.decompress(c)
+    np.testing.assert_array_equal(np.asarray(y), x)
+    assert c.ratio() > 1.5
+
+
+def test_cpack_kernel_uncompressible_fallback(rng):
+    x = rng.integers(0, 2**30, (8, 256)).astype(np.int32)
+    c = cpack_ops.compress(jnp.asarray(x))
+    y = cpack_ops.decompress(c)
+    np.testing.assert_array_equal(np.asarray(y), x)
+
+
+# ---------------------------------------------------------------------------
+# decode_attn (compressed-KV flash decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,G,S,D", [(2, 8, 4, 256, 64), (1, 4, 1, 128, 128),
+                                       (4, 4, 4, 512, 64)])
+def test_decode_attn_kernel_vs_ref(rng, B, H, G, S, D):
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+    k8, ks = da_ops.quantize_kv(k)
+    v8, vs = da_ops.quantize_kv(v)
+    ref = da_ref.decode_attn_ref(q, k8, ks, v8, vs, lengths)
+    got = da_ops.decode_attn_q8(q, k8, ks, v8, vs, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+def test_decode_attn_quant_error_small(rng):
+    B, H, G, S, D = 2, 8, 4, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    exact = da_ref.decode_attn_raw_ref(q, k, v, lengths)
+    k8, ks = da_ops.quantize_kv(k)
+    v8, vs = da_ops.quantize_kv(v)
+    q8out = da_ref.decode_attn_ref(q, k8, ks, v8, vs, lengths)
+    err = np.abs(np.asarray(q8out, np.float32)
+                 - np.asarray(exact, np.float32)).max()
+    assert err < 0.05, err
+
+
+# ---------------------------------------------------------------------------
+# fused compressed-weight matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 512), (256, 512, 256)])
+def test_matmul_q8_vs_ref(rng, M, K, N):
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.bfloat16)
+    w8, sc = fm_ops.make_q8_layout(w, gk=256)
+    got = fm_ops.matmul_q8(x, w8, sc, gk=256, bm=128, bn=256)
+    want = fm_ref.matmul_q8_ref(x, w8, sc, gk=256)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.25, rtol=0.05)
+
+
+def test_matmul_bdi_vs_ref(rng):
+    M, K, N = 128, 256, 512
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    # b2d1-representable weights: tight cluster around one value
+    w = (jnp.full((K, N), 0.5, jnp.bfloat16)
+         * jnp.asarray(1 + rng.integers(0, 3, (K, N)) * 0.001, jnp.bfloat16))
+    base, mask, deltas, ok = fm_ops.make_bdi_b2d1_layout(w)
+    assert bool(jnp.all(ok))
+    wrec = fm_ref.dequant_bdi_b2d1(base, mask, deltas)
+    assert bool(jnp.all(wrec == w)), "BDI layout must be lossless here"
+    got = fm_ops.matmul_bdi(x, base, mask, deltas, bm=128, bn=256, bk=128)
+    want = fm_ref.matmul_bdi_ref(x, base, mask, deltas)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=1e-2)

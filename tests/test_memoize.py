@@ -1,0 +1,69 @@
+"""Memoization assist (paper 8.1): correctness + reuse semantics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.memoize import MemoConfig, hit_rate, init_lut, memoized
+
+
+def _fn(x):
+    return jnp.tanh(x @ jnp.ones((x.shape[-1], 8)) * 0.1)
+
+
+@pytest.fixture
+def setup():
+    cfg = MemoConfig(lut_slots=512, quant_scale=64.0)
+    lut = init_lut(cfg, d_out=8)
+    return cfg, lut, jax.jit(memoized(_fn, cfg))
+
+
+def test_first_call_computes_exactly(setup, rng):
+    cfg, lut, apply = setup
+    x = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    y, lut = apply(lut, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(_fn(x)), atol=1e-6)
+    assert hit_rate(lut) == 0.0
+
+
+def test_repeat_inputs_hit(setup, rng):
+    cfg, lut, apply = setup
+    x = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    y1, lut = apply(lut, x)
+    y2, lut = apply(lut, x)                      # identical batch -> all hits
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=1e-6)
+    assert hit_rate(lut) == pytest.approx(0.5)   # 16 of 32 calls hit
+
+
+def test_approximate_reuse(setup, rng):
+    """Inputs within quantization distance reuse cached results (the
+    paper's hashed approximate-tolerant inputs)."""
+    cfg, lut, apply = setup
+    # bin-centered inputs: a small perturbation stays in the same bin
+    x = jnp.round(jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+                  * cfg.quant_scale) / cfg.quant_scale
+    y1, lut = apply(lut, x)
+    x2 = x + 1e-4                                # << half a bin (1/128)
+    y2, lut = apply(lut, x2)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y1))
+
+
+def test_new_inputs_recompute(setup, rng):
+    cfg, lut, apply = setup
+    x = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    _, lut = apply(lut, x)
+    x3 = jnp.asarray(rng.standard_normal((8, 4)) + 10.0, jnp.float32)
+    y3, lut = apply(lut, x3)
+    np.testing.assert_allclose(np.asarray(y3), np.asarray(_fn(x3)),
+                               atol=1e-6)
+
+
+def test_mixed_batch_keeps_cached_values(setup, rng):
+    cfg, lut, apply = setup
+    a = jnp.asarray(rng.standard_normal((4, 4)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 4)) + 5.0, jnp.float32)
+    _, lut = apply(lut, a)
+    mixed = jnp.concatenate([a, b])
+    y, lut = apply(lut, mixed)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(_fn(mixed)),
+                               atol=1e-6)

@@ -1,0 +1,222 @@
+"""Model-layer correctness: SSM chunked-vs-recurrent, MLA absorbed-vs-
+expanded, MoE dispatch vs dense reference."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (ArchConfig, MLAConfig, MoEConfig, SSMConfig,
+                                RWKVConfig)
+from repro.models import ssm, mla, moe
+
+
+# ---------------------------------------------------------------------------
+# chunked linear attention == brute-force recurrence
+# ---------------------------------------------------------------------------
+
+def _brute_scalar(q, k, v, lw, s0):
+    S_, ys = s0.copy(), []
+    for t in range(q.shape[1]):
+        S_ = S_ * np.exp(lw[:, t])[..., None, None] + \
+            np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        ys.append(np.einsum("bhk,bhkv->bhv", q[:, t], S_))
+    return np.stack(ys, 1), S_
+
+
+def _brute_channel(r, k, v, lw, u, s0):
+    S_, ys = s0.copy(), []
+    for t in range(r.shape[1]):
+        kv = np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        ys.append(np.einsum("bhk,bhkv->bhv", r[:, t],
+                            S_ + u[..., None] * kv))
+        S_ = S_ * np.exp(lw[:, t])[..., None] + kv
+    return np.stack(ys, 1), S_
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunk_scan_scalar_exact(rng, chunk):
+    B, S, H, K, V = 2, 32, 3, 8, 16
+    q, k = (rng.standard_normal((B, S, H, K)).astype(np.float32)
+            for _ in range(2))
+    v = rng.standard_normal((B, S, H, V)).astype(np.float32)
+    lw = -np.abs(rng.standard_normal((B, S, H))).astype(np.float32)
+    s0 = rng.standard_normal((B, H, K, V)).astype(np.float32)
+    want_y, want_s = _brute_scalar(q, k, v, lw, s0)
+    y, s = ssm._chunk_scan_scalar(*map(jnp.asarray, (q, k, v, lw, s0)),
+                                  chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), want_y, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), want_s, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunk_scan_channel_exact(rng, chunk):
+    B, S, H, K, V = 2, 32, 3, 8, 16
+    q, k = (rng.standard_normal((B, S, H, K)).astype(np.float32)
+            for _ in range(2))
+    v = rng.standard_normal((B, S, H, V)).astype(np.float32)
+    lw = -np.abs(rng.standard_normal((B, S, H, K))).astype(np.float32)
+    u = rng.standard_normal((H, K)).astype(np.float32)
+    s0 = rng.standard_normal((B, H, K, V)).astype(np.float32)
+    want_y, want_s = _brute_channel(q, k, v, lw, u, s0)
+    y, s = ssm._chunk_scan_channel(*map(jnp.asarray, (q, k, v, lw, u, s0)),
+                                   chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), want_y, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), want_s, atol=1e-4)
+
+
+def test_mamba2_prefill_equals_decode(rng):
+    cfg = ArchConfig(name="t", family="hybrid", n_layers=1, d_model=64,
+                     n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=100,
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32))
+    p = ssm.mamba2_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 64), jnp.float32)
+    y_full, st_full = ssm.mamba2_apply(cfg, p, x, chunk=8)
+    st = ssm.mamba2_init_state(cfg, B)
+    ys = []
+    for t in range(S):
+        o, st = ssm.mamba2_decode(cfg, p, x[:, t:t + 1], st)
+        ys.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1), np.float32),
+        np.asarray(y_full, np.float32), atol=1e-4)
+
+
+def test_rwkv6_prefill_equals_decode(rng):
+    cfg = ArchConfig(name="t", family="ssm", n_layers=1, d_model=64,
+                     n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=100,
+                     norm="layernorm", rwkv=RWKVConfig(head_dim=32,
+                                                       decay_lora=8))
+    p = ssm.rwkv6_init(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, 64), jnp.float32)
+    y_full, st_full = ssm.rwkv6_apply(cfg, p, x, chunk=8)
+    st = ssm.rwkv6_init_state(cfg, B)
+    ys = []
+    for t in range(S):
+        o, st = ssm.rwkv6_apply(cfg, p, x[:, t:t + 1], st)
+        ys.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, 1), np.float32),
+        np.asarray(y_full, np.float32), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MLA: expanded (prefill) == absorbed (decode)
+# ---------------------------------------------------------------------------
+
+def test_mla_absorbed_equals_expanded(rng):
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                     mla=MLAConfig(kv_lora_rank=32, q_lora_rank=48,
+                                   rope_head_dim=16, nope_head_dim=32,
+                                   v_head_dim=32))
+    p = mla.mla_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 64), jnp.float32)
+    y_full, (c_kv, k_rope) = mla.mla_apply(cfg, p, x)
+    cc, cr = mla.mla_init_cache(cfg, B, S, jnp.float32)
+    state = {"c": cc, "r": cr}
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        o, state = mla.mla_decode(cfg, p, x[:, t:t + 1], state, pos)
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state["c"]), np.asarray(c_kv),
+                               atol=1e-6)
+
+
+def test_mla_int8_latent_close(rng):
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=100,
+                     mla=MLAConfig(kv_lora_rank=32, q_lora_rank=0,
+                                   rope_head_dim=16, nope_head_dim=32,
+                                   v_head_dim=32))
+    p = mla.mla_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 64), jnp.float32)
+    y_full, _ = mla.mla_apply(cfg, p, x)
+    from repro.serving.kv_cache import init_latent_int8
+    state = init_latent_int8(B, S, 32, 16, jnp.float32)
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        o, state = mla.mla_decode(cfg, p, x[:, t:t + 1], state, pos)
+        outs.append(o)
+    err = np.abs(np.asarray(jnp.concatenate(outs, 1))
+                 - np.asarray(y_full)).max()
+    assert err < 0.05, err      # int8 latent quantization bound
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch vs dense reference
+# ---------------------------------------------------------------------------
+
+def _dense_moe_ref(cfg, p, x):
+    """Every token through its top-k experts, no capacity (numpy ref)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    xf = np.asarray(x, np.float32)
+    logits = xf @ np.asarray(p["router"], np.float32)
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = e / e.sum(-1, keepdims=True)
+    y = np.zeros_like(xf)
+    wi = np.asarray(p["wi"], np.float32)
+    wg = np.asarray(p["wg"], np.float32)
+    wo = np.asarray(p["wo"], np.float32)
+    for b in range(B):
+        for s in range(S):
+            top = np.argsort(-probs[b, s])[:m.top_k]
+            for eid in top:
+                h = xf[b, s] @ wi[eid]
+                g = xf[b, s] @ wg[eid]
+                act = h / (1 + np.exp(-h)) * g     # silu gate
+                y[b, s] += probs[b, s, eid] * (act @ wo[eid])
+    return y
+
+
+def test_moe_dropless_matches_dense(rng):
+    cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=100,
+                     moe=MoEConfig(n_routed=4, n_shared=0, top_k=2,
+                                   d_expert=16))
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda t: t.astype(jnp.float32), p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    y, aux = moe.moe_apply(cfg, p, x, dropless=True)
+    want = _dense_moe_ref(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32), want,
+                               atol=5e-3, rtol=1e-2)
+
+
+def test_moe_capacity_drops_partial(rng):
+    """With tiny capacity some contributions drop but output stays finite."""
+    cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=100,
+                     moe=MoEConfig(n_routed=4, n_shared=1, top_k=2,
+                                   d_expert=16))
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32), jnp.bfloat16)
+    y, aux = moe.moe_apply(cfg, p, x, capacity_factor=0.5)
+    assert bool(jnp.isfinite(y.astype(jnp.float32)).all())
+    assert float(aux) > 0
+
+
+def test_moe_router_grad_flows(rng):
+    cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=100,
+                     moe=MoEConfig(n_routed=8, n_shared=1, top_k=2,
+                                   d_expert=16))
+    p = moe.moe_init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 32), jnp.bfloat16)
+
+    def loss(pp):
+        y, a = moe.moe_apply(cfg, pp, x)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * a
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.linalg.norm(g["router"])) > 0

@@ -1,0 +1,117 @@
+"""SS Perf levers: int8 model weights (fused dequant), uniform-position
+decode, gather-based MoE dispatch -- each must match its reference path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import ArchConfig, MoEConfig, ShapeConfig
+from repro.models import moe
+from repro.models.model import build_model, make_batch
+from repro.models.quantized import (dequantize_leaf, max_dequant_error,
+                                    params_bytes, quantize_leaf,
+                                    quantize_params)
+
+SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+# ---------------------------------------------------------------------------
+# int8 weights
+# ---------------------------------------------------------------------------
+
+def test_quantize_leaf_roundtrip_bound(rng):
+    w = jnp.asarray(rng.standard_normal((64, 128)) * 0.05, jnp.bfloat16)
+    q = quantize_leaf(w)
+    back = dequantize_leaf(q)
+    bound = float(jnp.max(jnp.abs(w.astype(jnp.float32)))) / 127 * 1.05
+    assert float(jnp.max(jnp.abs(back.astype(jnp.float32)
+                                 - w.astype(jnp.float32)))) <= bound + 1e-3
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b", "rwkv6-7b", "zamba2-1.2b"])
+def test_int8_weights_forward_close(rng, name):
+    cfg = reduced(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SHAPE, rng)
+    logits, _ = model.fwd_train(params, batch)
+    qp = quantize_params(params)
+    logits_q, _ = model.fwd_train(qp, batch)
+    assert params_bytes(qp) < 0.75 * params_bytes(params)
+    assert max_dequant_error(params, qp) < 0.02
+    # per-token logit agreement (non-MoE archs: tight)
+    err = float(jnp.max(jnp.abs(logits - logits_q)))
+    assert err < 1.0, (name, err)
+
+
+def test_int8_weights_decode_runs(rng):
+    cfg = reduced(ARCHS["qwen2-7b"])
+    model = build_model(cfg)
+    qp = quantize_params(model.init(jax.random.PRNGKey(0)))
+    st = model.init_state(2, 16, kv_mode="int8", uniform_pos=True)
+    lg, st = model.decode_step(qp, st, jnp.ones((2, 1), jnp.int32))
+    assert bool(jnp.isfinite(lg).all())
+
+
+# ---------------------------------------------------------------------------
+# uniform-position decode == per-row decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kv", [("qwen2-7b", "bf16"),
+                                     ("qwen2-7b", "int8"),
+                                     ("gemma3-4b", "int8"),
+                                     ("deepseek-v2-lite-16b", "bf16")])
+def test_uniform_pos_equals_per_row(rng, name, kv):
+    cfg = reduced(ARCHS[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(2, 400, (2, 6)), jnp.int32)
+    st_r = model.init_state(2, 8, kv_mode=kv)
+    st_u = model.init_state(2, 8, kv_mode=kv, uniform_pos=True)
+    for t in range(6):
+        lg_r, st_r = model.decode_step(params, st_r, toks[:, t:t + 1])
+        lg_u, st_u = model.decode_step(params, st_u, toks[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(lg_r), np.asarray(lg_u),
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# batched (gather-based) MoE == vmapped scatter reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dropless", [False, True])
+@pytest.mark.parametrize("topk,E", [(2, 8), (3, 5)])
+def test_batched_moe_matches_reference(rng, dropless, topk, E):
+    cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=100,
+                     moe=MoEConfig(n_routed=E, n_shared=1, top_k=topk,
+                                   d_expert=16))
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 64, 32), jnp.float32)
+    y_ref, a_ref = moe.moe_apply(cfg, p, x, dropless=dropless,
+                                 batched=False)
+    y_new, a_new = moe.moe_apply(cfg, p, x, dropless=dropless, batched=True)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_new, np.float32), atol=1e-2)
+    assert abs(float(a_ref - a_new)) < 1e-5
+
+
+def test_batched_moe_grads(rng):
+    cfg = ArchConfig(name="m", family="moe", n_layers=1, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=100,
+                     moe=MoEConfig(n_routed=8, n_shared=0, top_k=2,
+                                   d_expert=16))
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32), jnp.bfloat16)
+
+    def loss(pp, batched):
+        y, a = moe.moe_apply(cfg, pp, x, batched=batched)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * a
+
+    g_ref = jax.grad(lambda pp: loss(pp, False))(p)
+    g_new = jax.grad(lambda pp: loss(pp, True))(p)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_new)):
+        na = float(jnp.linalg.norm(a.astype(jnp.float32)))
+        nb = float(jnp.linalg.norm(b.astype(jnp.float32)))
+        assert na == pytest.approx(nb, rel=0.05), (na, nb)

@@ -1,0 +1,112 @@
+"""Hypothesis property tests: every lossless scheme is exactly invertible on
+ARBITRARY data (the paper's correctness bar for assist-warp subroutines),
+and fixed-rate schemes obey their error bounds."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schemes import bdi, fpc, cpack, planes, quant, selector
+
+
+def _as_u8(data: bytes):
+    arr = np.frombuffer(data, np.uint8)
+    return jnp.asarray(arr)
+
+
+bytes_strategy = st.binary(min_size=1, max_size=4096)
+
+
+@given(bytes_strategy)
+@settings(max_examples=40, deadline=None)
+def test_bdi_uniform_lossless(data):
+    x = _as_u8(data)
+    c = bdi.compress_uniform(x)
+    y = bdi.decompress_uniform(c)
+    assert (np.asarray(y) == np.asarray(x)).all()
+
+
+@given(bytes_strategy)
+@settings(max_examples=40, deadline=None)
+def test_bdi_packed_lossless(data):
+    x = _as_u8(data)
+    c = bdi.compress_packed(x)
+    y = bdi.decompress_packed(c)
+    assert (np.asarray(y) == np.asarray(x)).all()
+    assert c.compressed_bytes() > 0
+
+
+@given(bytes_strategy)
+@settings(max_examples=40, deadline=None)
+def test_fpc_lossless(data):
+    n = (len(data) // 4) * 4 or 4
+    x = _as_u8((data + b"\x00" * 4)[:n])
+    c = fpc.compress(x)
+    y = fpc.decompress(c)
+    assert (np.asarray(y) == np.asarray(x)).all()
+
+
+@given(bytes_strategy)
+@settings(max_examples=40, deadline=None)
+def test_cpack_lossless(data):
+    n = (len(data) // 4) * 4 or 4
+    x = _as_u8((data + b"\x00" * 4)[:n])
+    c = cpack.compress(x)
+    y = cpack.decompress(c)
+    assert (np.asarray(y) == np.asarray(x)).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 64))
+@settings(max_examples=30, deadline=None)
+def test_planes_lossless_bf16(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n * 8), jnp.bfloat16)
+    c = planes.compress(x)
+    y = planes.decompress(c)
+    assert (jax.lax.bitcast_convert_type(y, jnp.uint16)
+            == jax.lax.bitcast_convert_type(x, jnp.uint16)).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_error_bounds(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    for kind, denom in (("int8", 127.0), ("int4", 7.0)):
+        c = quant.compress(x, kind)
+        y = quant.decompress(c)
+        blocks = np.asarray(x).reshape(-1, quant.BLOCK_VALUES) \
+            if x.size % quant.BLOCK_VALUES == 0 else None
+        bound = np.abs(np.asarray(x)).max() / denom + 1e-7
+        assert np.abs(np.asarray(y) - np.asarray(x)).max() <= bound * 1.01
+
+
+def test_compressibility_ordering(rng):
+    """Structured data must compress; noise must fall back gracefully."""
+    small_range = jnp.asarray(
+        (rng.integers(0, 50, 4096) + 1_000_000).astype(np.int32))
+    noise = jnp.asarray(rng.integers(0, 2**31, 4096).astype(np.int32))
+    zeros = jnp.zeros(4096, jnp.int32)
+    r_small = bdi.compress_packed(small_range).ratio()
+    r_noise = bdi.compress_packed(noise).ratio()
+    r_zero = bdi.compress_packed(zeros).ratio()
+    assert r_zero > r_small > r_noise
+    assert r_zero > 50          # zeros encode at ~1 byte/block
+    assert r_small > 2.5
+    assert 0.9 < r_noise <= 1.05  # raw fallback costs <= header overhead
+
+
+def test_best_of_all_picks_max(rng):
+    x = jnp.asarray((rng.integers(0, 30, 2048) * 1000).astype(np.int32))
+    ratios = selector.measure_ratios(x)
+    best = selector.best_of_all(x)
+    assert best.ratio == pytest.approx(
+        max(c.ratio for c in ratios.values()), rel=1e-6)
+
+
+def test_best_of_all_raw_on_noise(rng):
+    x = jnp.asarray(rng.integers(0, 2**31, 2048).astype(np.int32))
+    best = selector.best_of_all(x)
+    # incompressible data: selector must refuse to compress (paper 6)
+    assert best.name == "raw" or best.ratio >= 1.0

@@ -1,0 +1,37 @@
+"""End-to-end system tests through the public CLI drivers."""
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+@pytest.mark.slow
+def test_train_cli_end_to_end(tmp_path):
+    sup = train_cli.main([
+        "--arch", "qwen2-7b", "--reduced", "--steps", "12",
+        "--batch", "4", "--seq", "64", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "5", "--lr", "1e-3"])
+    losses = [h["loss"] for h in sup.history]
+    assert len(losses) == 12
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
+
+
+@pytest.mark.slow
+def test_train_cli_int8_opt(tmp_path):
+    sup = train_cli.main([
+        "--arch", "starcoder2-3b", "--reduced", "--steps", "6",
+        "--batch", "2", "--seq", "64", "--ckpt-dir", str(tmp_path),
+        "--opt-compression", "int8"])
+    assert sup.history[-1]["loss"] < sup.history[0]["loss"]
+
+
+@pytest.mark.slow
+def test_serve_cli_end_to_end():
+    done = serve_cli.main([
+        "--arch", "qwen2-7b", "--reduced", "--requests", "5",
+        "--slots", "2", "--max-len", "48", "--max-new", "4",
+        "--kv-mode", "int8"])
+    assert len(done) == 5
+    assert all(len(r.out) >= 1 for r in done)
