@@ -1,14 +1,16 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig8,fig13]
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,fig13] [--smoke]
 
 Each module prints its table and asserts its paper-validation bounds; a
 failed validation fails the run (EXPERIMENTS.md SS Paper-validation is
-generated from this output).
+generated from this output).  ``--smoke`` forwards a reduced workload to
+the modules that support it (CI mode).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -22,6 +24,7 @@ MODULES = [
     ("fig14", "benchmarks.fig14_bw_sensitivity"),
     ("fig10", "benchmarks.fig10_energy"),
     ("kernel_micro", "benchmarks.kernel_micro"),
+    ("serving_micro", "benchmarks.serving_micro"),
 ]
 
 
@@ -29,6 +32,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig8,fig13")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads (fast CI check)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,7 +45,11 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["main"])
-            mod.main()
+            kwargs = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.main).parameters:
+                kwargs["smoke"] = True
+            mod.main(**kwargs)
             print(f"[{name}] done in {time.time() - t0:.1f}s")
         except Exception as e:
             traceback.print_exc()

@@ -1,0 +1,127 @@
+"""Serving microbenchmark: resident-token capacity and tokens/s across
+tier configurations of the paged KV cache (repro.cache).
+
+Under ONE fixed HBM budget, three engines admit the same request stream:
+
+  hot-only        bf16 pages, no demotion (a dense-quality paged cache)
+  hot+warm        LRU demotion to int8 pages (the CABA KV site)
+  hot+warm+cold   plus BDI/FPC-packed host offload with WaSP prefetch
+
+Validation target (the subsystem's acceptance bar): the tiered configs hold
+>= 2x the resident tokens of hot-only under the same HBM budget, while
+every admitted request still completes.
+
+``main(smoke=True)`` shrinks the workload for CI (benchmarks/run.py
+--smoke).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.cache import PageGeometry, TierConfig
+from repro.configs import ARCHS, reduced
+from repro.models.model import build_model
+from repro.models.transformer import stack_plan
+from repro.serving.engine import Request
+from repro.serving.paged_engine import PagedEngine
+from benchmarks.common import print_table
+
+PAGE = 16
+
+
+def _tier_configs(hbm_budget: int):
+    return {
+        "hot-only": TierConfig(page_size=PAGE, hbm_budget_bytes=hbm_budget,
+                               enable_warm=False, enable_cold=False),
+        "hot+warm": TierConfig(page_size=PAGE, hbm_budget_bytes=hbm_budget,
+                               hot_fraction=0.5, enable_warm=True,
+                               enable_cold=False),
+        "hot+warm+cold": TierConfig(page_size=PAGE,
+                                    hbm_budget_bytes=hbm_budget,
+                                    hot_fraction=0.5, enable_warm=True,
+                                    enable_cold=True,
+                                    host_budget_bytes=hbm_budget),
+    }
+
+
+def run(smoke: bool = False):
+    cfg = reduced(ARCHS["qwen2-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+
+    budget_pages = 12 if smoke else 24        # hot-equivalent pages of HBM
+    hbm_budget = budget_pages * geom.hot_page_bytes
+    n_req = 24 if smoke else 64
+    max_new = 4 if smoke else 8
+    ticks = 6 if smoke else 24
+    lanes = 2
+    max_len = 48
+
+    results = {}
+    rows = []
+    for name, tier in _tier_configs(hbm_budget).items():
+        rng = np.random.default_rng(0)
+        eng = PagedEngine(model, params, lanes=lanes, max_len=max_len,
+                          tier=tier, eos_id=0)
+        for rid in range(n_req):
+            plen = int(rng.integers(18, 33))
+            eng.submit(Request(rid=rid,
+                               prompt=list(rng.integers(2, cfg.vocab_size,
+                                                        plen)),
+                               max_new=max_new))
+        # one tick admits everything the budget allows (capacity probe) ...
+        eng.step()
+        capacity = eng.resident_tokens()
+        # ... then measure decode throughput over a fixed tick window
+        t0 = time.time()
+        tok0 = eng.tokens_generated
+        for _ in range(ticks):
+            if not eng.step():
+                break
+        dt = time.time() - t0
+        tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+        eng.run(max_ticks=5000)               # drain: everything completes
+        s = eng.stats()
+        results[name] = {"capacity": capacity, "tokens_per_s": tps,
+                         "finished": len(eng.finished), **s}
+        rows.append([name, eng.store.hot_pages, eng.store.warm_pages,
+                     capacity, round(tps, 1), len(eng.finished),
+                     s["store"]["demote_warm"], s["store"]["demote_cold"],
+                     s["policy"]["prefetch_hits"]])
+        eng.pool.check()
+    print_table(
+        f"serving_micro: fixed HBM budget = {hbm_budget // 1024} KiB "
+        f"({budget_pages} bf16 pages), {n_req} requests",
+        ["tier config", "hot_pg", "warm_pg", "resident_tok", "tok/s",
+         "done", "dem_warm", "dem_cold", "pf_hit"], rows)
+    return results
+
+
+def main(smoke: bool = False):
+    res = run(smoke=smoke)
+    hot = res["hot-only"]["capacity"]
+    warm = res["hot+warm"]["capacity"]
+    cold = res["hot+warm+cold"]["capacity"]
+    # capacity bar: tiers buy >= 2x resident tokens for the same HBM
+    assert warm > hot, (hot, warm)
+    assert cold >= 2 * hot, (hot, cold)
+    # correctness bar: nothing is rejected or lost in any config
+    finished = {r["finished"] for r in res.values()}
+    assert len(finished) == 1, "configs finished different request counts"
+    print(f"\n[serving_micro] PASS: capacity {hot} -> {warm} (warm) -> "
+          f"{cold} (cold) resident tokens under one HBM budget "
+          f"({cold / hot:.2f}x >= 2x)")
+    return res
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    main(smoke=ap.parse_args().smoke)

@@ -1,0 +1,30 @@
+"""repro.cache -- paged, tiered, compressed KV-cache subsystem (DESIGN.md 10).
+
+Three layers, strictly separated:
+
+  block_pool   logical page identity: a free-list allocator handing out
+               page ids and per-request block tables (vLLM-style), with
+               LRU bookkeeping.  Knows nothing about tensors.
+  tiers        physical page representation: every page lives in exactly
+               one tier -- bf16 HOT (HBM pool), int8 WARM (HBM pool,
+               per-token absmax scales, the CABA KV site), or BDI/FPC-
+               packed COLD records in host memory.  Promote/demote moves
+               a page between tiers.
+  policy       who moves and when: LRU victim selection, the
+               AssistController roofline trigger that gates compression,
+               and WaSP-style lookahead prefetch of parked requests'
+               cold pages.
+
+The serving integration (block-table decode, preemption-by-demotion) lives
+in ``repro.serving.paged_engine``.
+"""
+from repro.cache.block_pool import BlockPool
+from repro.cache.tiers import (TIER_HOT, TIER_WARM, TIER_COLD, PageGeometry,
+                               TieredKVStore)
+from repro.cache.policy import CachePolicy, TierConfig, decode_roofline_terms
+
+__all__ = [
+    "BlockPool", "TieredKVStore", "PageGeometry",
+    "TIER_HOT", "TIER_WARM", "TIER_COLD",
+    "CachePolicy", "TierConfig", "decode_roofline_terms",
+]

@@ -1,0 +1,117 @@
+"""Logical KV page allocator with per-request block tables (DESIGN.md 10.1).
+
+A *page* holds ``page_size`` consecutive tokens of one request's KV, across
+every layer of the stack (the vLLM convention: one block id indexes every
+layer's physical pool).  The pool hands out page ids from a free list and
+keeps the request -> [page ids] block tables; it does not own any tensor
+data -- physical placement (which tier a page's bytes live in) is the
+``tiers.TieredKVStore``'s job.
+
+Invariants (enforced by ``check``, exercised by tests/test_cache.py):
+  * every page id is either free or owned by exactly one request;
+  * a request's table has no duplicate pages;
+  * len(free) + sum(len(table)) == num_pages.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+class PoolExhausted(Exception):
+    """No free page available (caller should evict or reject)."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocated: int = 0
+    freed: int = 0
+    peak_in_use: int = 0
+
+
+class BlockPool:
+    """Free-list page allocator + per-request block tables."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free: collections.deque[int] = collections.deque(range(num_pages))
+        self.tables: dict[int, list[int]] = {}
+        self.owner = np.full(num_pages, -1, np.int64)      # rid or -1
+        self.last_access = np.zeros(num_pages, np.int64)   # LRU tick stamps
+        self.stats = PoolStats()
+
+    # -- allocation ----------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold n_tokens (ceil)."""
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def allocate(self, rid: int, n: int = 1) -> list[int]:
+        """Append ``n`` fresh pages to ``rid``'s block table."""
+        if n > len(self.free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self.free)} free")
+        got = [self.free.popleft() for _ in range(n)]
+        self.tables.setdefault(rid, []).extend(got)
+        for p in got:
+            self.owner[p] = rid
+        self.stats.allocated += n
+        in_use = self.num_pages - len(self.free)
+        self.stats.peak_in_use = max(self.stats.peak_in_use, in_use)
+        return got
+
+    def free_request(self, rid: int) -> list[int]:
+        """Release every page of ``rid``; returns the freed page ids."""
+        pages = self.tables.pop(rid, [])
+        for p in pages:
+            self.owner[p] = -1
+            self.free.append(p)
+        self.stats.freed += len(pages)
+        return pages
+
+    # -- lookups -------------------------------------------------------------
+
+    def table(self, rid: int) -> list[int]:
+        return self.tables.get(rid, [])
+
+    def page_at(self, rid: int, logical_idx: int) -> int:
+        return self.tables[rid][logical_idx]
+
+    def touch(self, rid: int, tick: int):
+        """Stamp every page of ``rid`` as accessed at ``tick`` (LRU)."""
+        for p in self.tables.get(rid, []):
+            self.last_access[p] = tick
+
+    def lru_order(self, candidates) -> list[int]:
+        """Candidates sorted least-recently-used first."""
+        return sorted(candidates, key=lambda p: (self.last_access[p], p))
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self):
+        """Assert the structural invariants; cheap enough for tests."""
+        seen: dict[int, int] = {}
+        for rid, pages in self.tables.items():
+            assert len(set(pages)) == len(pages), \
+                f"rid {rid} block table has duplicate pages"
+            for p in pages:
+                assert 0 <= p < self.num_pages
+                assert p not in seen, \
+                    f"page {p} aliased by rids {seen[p]} and {rid}"
+                assert self.owner[p] == rid
+                seen[p] = rid
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "free list has duplicates"
+        assert not (free_set & set(seen)), "page both free and owned"
+        assert len(free_set) + len(seen) == self.num_pages, "page leaked"
+        for p in free_set:
+            assert self.owner[p] == -1

@@ -1,0 +1,210 @@
+"""Admission/eviction/prefetch policy for the tiered KV cache (DESIGN.md 10.3).
+
+Three decisions, three mechanisms:
+
+1. WHETHER to compress at all -- the AssistController trigger (paper 4.3/4.4,
+   core/controller.py): build the decode step's roofline terms and ask the
+   controller about the KV site.  Memory-bound and compressible -> demotion
+   enabled; compute-bound (the controller's throttle) -> the cache runs
+   hot-only and parks by capacity alone.  This is CABA's "only deploy assist
+   warps when the relieved term dominates" rule applied to serving.
+
+2. WHO gets demoted -- LRU over pages (BlockPool.last_access stamps), with
+   the active requests' pages protected so the decode gather never loses a
+   page it needs this tick.
+
+3. WHEN cold pages come back -- WaSP-style lookahead prefetch: when a decode
+   lane is within ``prefetch_lookahead`` steps of finishing, the next parked
+   request's cold pages start promoting warm-ward ahead of the swap-in, so
+   the promotion latency hides behind decode ticks instead of stalling
+   admission (prefetch hits vs misses are counted).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.cache.block_pool import BlockPool, PoolExhausted
+from repro.cache.tiers import TIER_HOT, TIER_WARM, TIER_COLD, TieredKVStore
+from repro.core.controller import (AssistController, RooflineTerms,
+                                   SiteDescriptor, PEAK_FLOPS, HBM_BW)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """HBM/host budget split for the tiered store."""
+    page_size: int = 16
+    hbm_budget_bytes: int = 1 << 24
+    hot_fraction: float = 0.5       # share of the HBM budget kept bf16
+    enable_warm: bool = True
+    enable_cold: bool = True
+    host_budget_bytes: Optional[int] = None   # None = unbounded host spill
+    prefetch_lookahead: int = 2
+    pages_per_prefetch_tick: int = 2
+
+    def split_pages(self, hot_page_bytes: int, warm_page_bytes: int):
+        """(hot_pages, warm_pages) under the HBM budget.
+
+        ``hot`` is floored at 1 (the engine cannot run without a hot
+        page); ``warm`` only ever gets the budget hot left over, so a
+        tiered split never exceeds the stated budget beyond that floor.
+        """
+        hot_frac = self.hot_fraction if self.enable_warm else 1.0
+        hot = max(1, int(self.hbm_budget_bytes * hot_frac) // hot_page_bytes)
+        warm = 0
+        if self.enable_warm:
+            warm = max(0, (self.hbm_budget_bytes - hot * hot_page_bytes)
+                       // warm_page_bytes)
+        return hot, warm
+
+
+def decode_roofline_terms(cfg, batch: int, resident_tokens: int) -> RooflineTerms:
+    """Analytic roofline of one engine decode tick (the trigger input).
+
+    Decode streams every parameter once and the resident KV once per step;
+    compute is ~2 active-params FLOPs per token.
+    """
+    active = cfg.active_param_count()
+    flops = 2.0 * active * batch
+    kv_per_tok = kv_bytes_per_token(cfg)
+    param_bytes = cfg.param_count() * 2.0
+    mem = param_bytes + resident_tokens * kv_per_tok
+    return RooflineTerms(compute=flops / PEAK_FLOPS,
+                         memory=mem / HBM_BW, collective=0.0)
+
+
+def kv_bytes_per_token(cfg) -> float:
+    """bf16 KV bytes one token holds across the stack."""
+    return cfg.n_layers * 2.0 * cfg.n_kv_heads * cfg.head_dim * 2.0
+
+
+def kv_site(cfg, resident_tokens: int) -> SiteDescriptor:
+    return SiteDescriptor("kv", resident_tokens * kv_bytes_per_token(cfg),
+                          "memory", lossless_required=False)
+
+
+# int8+scales vs bf16 (the warm tier's true HBM ratio for dh-dim heads):
+# 2*dh bytes -> dh + 4 bytes per token-head.
+def warm_ratio(head_dim: int) -> float:
+    return (2.0 * head_dim) / (head_dim + 4.0)
+
+
+class CachePolicy:
+    """LRU + AWC-trigger + prefetch policy over (BlockPool, TieredKVStore)."""
+
+    def __init__(self, cfg: TierConfig, *,
+                 controller: Optional[AssistController] = None,
+                 terms: Optional[RooflineTerms] = None,
+                 site: Optional[SiteDescriptor] = None,
+                 measured_ratio: float = 1.78):
+        self.cfg = cfg
+        self.decision = None
+        enabled = cfg.enable_warm
+        if controller is not None and terms is not None and site is not None:
+            self.decision = controller.decide(terms, site, measured_ratio,
+                                              "int8")
+            enabled = enabled and self.decision.enabled
+        self.compression_enabled = enabled
+        self.cold_enabled = cfg.enable_cold and enabled
+        self._prefetch: list[int] = []          # page ids queued cold->warm
+        self._prefetched: set[int] = set()      # promoted ahead of swap-in
+        self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
+                      "prefetch_misses": 0}
+
+    # -- victim selection ----------------------------------------------------
+
+    def hot_victim(self, pool: BlockPool, store: TieredKVStore,
+                   protected: set[int]) -> Optional[int]:
+        """LRU hot page outside ``protected`` (pages the tick still needs)."""
+        cands = [p for p in store.hot_page_ids() if p not in protected]
+        order = pool.lru_order(cands)
+        return order[0] if order else None
+
+    def warm_victim(self, pool: BlockPool, store: TieredKVStore,
+                    protected: set[int]) -> Optional[int]:
+        cands = [p for p in store.warm_page_ids() if p not in protected]
+        order = pool.lru_order(cands)
+        return order[0] if order else None
+
+    # -- demotion paths (capacity pressure) ----------------------------------
+
+    def make_hot_room(self, pool: BlockPool, store: TieredKVStore,
+                      protected: set[int], n: int = 1) -> bool:
+        """Demote LRU pages until >= n hot slots are free.  Returns success."""
+        guard = 0
+        while store.n_free_hot < n and guard < 4 * pool.num_pages:
+            guard += 1
+            if not self.compression_enabled:
+                return False
+            victim = self.hot_victim(pool, store, protected)
+            if victim is None:
+                return False
+            if store.n_free_warm == 0:
+                if not self.make_warm_room(pool, store, protected):
+                    return False
+            store.demote_to_warm(victim)
+        return store.n_free_hot >= n
+
+    def make_warm_room(self, pool: BlockPool, store: TieredKVStore,
+                       protected: set[int], n: int = 1) -> bool:
+        guard = 0
+        while store.n_free_warm < n and guard < 4 * pool.num_pages:
+            guard += 1
+            if not self.cold_enabled:
+                return False
+            victim = self.warm_victim(pool, store, protected)
+            if victim is None:
+                return False
+            try:
+                store.demote_to_cold(victim)
+            except PoolExhausted:      # host budget full; real bugs propagate
+                return False
+            # a page demoted back to cold is no longer a usable prefetch
+            self._prefetched.discard(victim)
+        return store.n_free_warm >= n
+
+    # -- WaSP-style prefetch -------------------------------------------------
+
+    def schedule_prefetch(self, page_ids):
+        """Queue cold pages of a soon-to-run request for async promotion."""
+        for p in page_ids:
+            if p not in self._prefetch:
+                self._prefetch.append(p)
+                self.stats["prefetch_issued"] += 1
+
+    def drain_prefetch(self, pool: BlockPool, store: TieredKVStore,
+                       protected: set[int]):
+        """Promote up to pages_per_prefetch_tick queued cold pages."""
+        budget = self.cfg.pages_per_prefetch_tick
+        while budget > 0 and self._prefetch:
+            pid = self._prefetch[0]
+            if store.tier[pid] != TIER_COLD:      # already resident / freed
+                self._prefetch.pop(0)
+                continue
+            if store.n_free_warm == 0 and \
+                    not self.make_warm_room(pool, store, protected):
+                return
+            self._prefetch.pop(0)
+            store.promote_to_warm(pid)
+            self._prefetched.add(pid)
+            budget -= 1
+
+    def account_swap_in(self, page_ids, cold_page_ids):
+        """Called ONCE per successful swap-in of a parked request:
+        ``cold_page_ids`` (still cold when scheduling started) needed a
+        blocking promotion (miss); pages the prefetch queue promoted ahead
+        of time are hits (the WaSP payoff)."""
+        cold = set(cold_page_ids)
+        self.stats["prefetch_misses"] += len(cold)
+        for p in page_ids:
+            if p not in cold and p in self._prefetched:
+                self.stats["prefetch_hits"] += 1
+                self._prefetched.discard(p)
+
+    def forget_pages(self, page_ids):
+        """Drop freed pages from prefetch state so recycled page ids can
+        never be miscounted as hits for a different request."""
+        for p in page_ids:
+            self._prefetched.discard(p)
+            if p in self._prefetch:
+                self._prefetch.remove(p)

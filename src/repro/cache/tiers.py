@@ -1,0 +1,374 @@
+"""Per-page representation ladder: bf16 hot / int8 warm / packed cold
+(DESIGN.md 10.2).
+
+Physical layout.  For every attention position ``j`` in the scanned block
+pattern there is one HOT pool and one WARM pool, page-indexed on axis 1:
+
+  hot:   kh, vh       bf16[n_scan, 1+hot_pages,  G, ps, dh]
+  warm:  k8, v8       int8[n_scan, 1+warm_pages, G, ps, dh]
+         ks, vs        f32[n_scan, 1+warm_pages, G, ps]     absmax scales
+
+Slot 0 of each pool is a reserved trash page: unmapped block-table entries
+gather from it (masked out by the length mask) and writes for idle lanes
+land on it.  Real slots are 1..N, which lets the *encoded location* of a
+page be a single int32 consumed by the decode gather and the paged kernel:
+
+  loc > 0   hot slot ``loc``
+  loc < 0   warm slot ``-loc``
+  loc == 0  unmapped (trash)
+
+WARM is the CABA KV-compression site (same per-token absmax int8 as
+serving/kv_cache.py, DESIGN.md 4): ~1.8x denser than bf16 in HBM.  COLD
+pages leave HBM entirely: the warm (int8 + scales) representation is packed
+with the best of the lossless schemes in core/schemes (BDI / FPC, RAW
+fallback) and parked as a host-memory record -- the Morpheus move of
+spending idle compute to extend effective cache capacity.  Cold round-trips
+back to warm bit-exactly (the lossless bar of test_schemes_property); the
+only lossy edge is hot -> warm quantization, bounded like kv_cache int8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cache.block_pool import PoolExhausted
+from repro.core.schemes import bdi, fpc
+from repro.serving.kv_cache import quantize_token
+
+TIER_FREE, TIER_HOT, TIER_WARM, TIER_COLD = -1, 0, 1, 2
+COLD_SCHEMES = ("bdi", "fpc")
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Shape of one page across the stack (engine derives this from cfg)."""
+    n_pat: int          # attention positions per scanned superblock
+    n_scan: int         # scanned superblocks
+    n_kv_heads: int
+    page_size: int
+    head_dim: int
+
+    @property
+    def hot_page_bytes(self) -> int:
+        """HBM bytes of one page in the hot tier (k + v, bf16)."""
+        per = self.n_pat * self.n_scan * self.n_kv_heads * self.page_size
+        return 2 * per * self.head_dim * 2
+
+    @property
+    def warm_page_bytes(self) -> int:
+        """HBM bytes of one page in the warm tier (int8 + f32 scales)."""
+        per = self.n_pat * self.n_scan * self.n_kv_heads * self.page_size
+        return 2 * per * self.head_dim + 2 * per * 4
+
+    @property
+    def tokens_per_page(self) -> int:
+        return self.page_size
+
+
+@dataclasses.dataclass
+class ColdPage:
+    """Host-memory record of one page (per pattern position)."""
+    blobs: list          # per position: (k_obj, v_obj) packed int8 planes
+    schemes: list        # per position: (k_scheme, v_scheme)
+    scales: list         # per position: (ks, vs) numpy f32 (stored raw)
+    nbytes: int
+
+
+def _pack_cold(x8: np.ndarray):
+    """Pack one int8 plane with the best lossless scheme (RAW fallback)."""
+    arr = jnp.asarray(x8)
+    best_name, best_obj, best_bytes = "raw", np.asarray(x8), x8.nbytes
+    for name in COLD_SCHEMES:
+        c = (bdi.compress_packed(arr) if name == "bdi" else fpc.compress(arr))
+        if c.compressed_bytes() < best_bytes:
+            best_name, best_obj, best_bytes = name, c, c.compressed_bytes()
+    return best_name, best_obj, best_bytes
+
+
+def _unpack_cold(name: str, obj) -> np.ndarray:
+    if name == "raw":
+        return obj
+    dec = (bdi.decompress_packed(obj) if name == "bdi"
+           else fpc.decompress(obj))
+    return np.asarray(dec)
+
+
+# -- jitted page movement (donated pools; one page per call) -----------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_prefill(pools_j, k_seq, v_seq, locs):
+    """Write a prefilled request's KV into its hot pages.
+
+    k_seq/v_seq: bf16[n_scan, G, S, dh] with S == len(locs) * page_size;
+    locs: int32[n_pages] hot slots (0 = trash for unallocated tail pages).
+    """
+    n_scan, G, S, dh = k_seq.shape
+    ps = pools_j["kh"].shape[3]
+    npg = S // ps
+    def per_page(x):            # -> [npg, n_scan, G, ps, dh]
+        return x.reshape(n_scan, G, npg, ps, dh).transpose(2, 0, 1, 3, 4)
+    kh = pools_j["kh"].at[:, locs].set(
+        per_page(k_seq).transpose(1, 0, 2, 3, 4).astype(pools_j["kh"].dtype))
+    vh = pools_j["vh"].at[:, locs].set(
+        per_page(v_seq).transpose(1, 0, 2, 3, 4).astype(pools_j["vh"].dtype))
+    return dict(pools_j, kh=kh, vh=vh)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _demote_hot_to_warm(pools_j, hot_slot, warm_slot):
+    """Quantize hot page ``hot_slot`` into warm slot ``warm_slot``."""
+    k = pools_j["kh"][:, hot_slot]          # [n_scan, G, ps, dh]
+    v = pools_j["vh"][:, hot_slot]
+    k8, ks = quantize_token(k)
+    v8, vs = quantize_token(v)
+    return dict(pools_j,
+                k8=pools_j["k8"].at[:, warm_slot].set(k8),
+                ks=pools_j["ks"].at[:, warm_slot].set(ks),
+                v8=pools_j["v8"].at[:, warm_slot].set(v8),
+                vs=pools_j["vs"].at[:, warm_slot].set(vs))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _promote_warm_to_hot(pools_j, warm_slot, hot_slot):
+    """Dequantize warm page into a hot slot (quantization loss already paid)."""
+    k = (pools_j["k8"][:, warm_slot].astype(jnp.float32)
+         * pools_j["ks"][:, warm_slot][..., None])
+    v = (pools_j["v8"][:, warm_slot].astype(jnp.float32)
+         * pools_j["vs"][:, warm_slot][..., None])
+    return dict(pools_j,
+                kh=pools_j["kh"].at[:, hot_slot].set(
+                    k.astype(pools_j["kh"].dtype)),
+                vh=pools_j["vh"].at[:, hot_slot].set(
+                    v.astype(pools_j["vh"].dtype)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_warm(pools_j, warm_slot, k8, ks, v8, vs):
+    return dict(pools_j,
+                k8=pools_j["k8"].at[:, warm_slot].set(k8),
+                ks=pools_j["ks"].at[:, warm_slot].set(ks),
+                v8=pools_j["v8"].at[:, warm_slot].set(v8),
+                vs=pools_j["vs"].at[:, warm_slot].set(vs))
+
+
+class TieredKVStore:
+    """Physical placement of pages across hot/warm/cold tiers.
+
+    ``num_pages`` is the logical page-id space (the BlockPool's); the hot and
+    warm pools have their own (smaller) slot spaces.  ``location[pid]`` gives
+    (tier, slot); ``encoded_loc`` collapses it to the int32 the decode gather
+    consumes.
+    """
+
+    def __init__(self, geom: PageGeometry, num_pages: int, *,
+                 hot_pages: int, warm_pages: int,
+                 host_budget_bytes: Optional[int] = None,
+                 kv_dtype=jnp.bfloat16):
+        if hot_pages < 1:
+            raise ValueError("need at least one hot page")
+        self.geom = geom
+        self.num_pages = num_pages
+        self.hot_pages = hot_pages
+        self.warm_pages = warm_pages
+        self.host_budget_bytes = host_budget_bytes
+        g = geom
+
+        def mk(n_slots, dtype):
+            return jnp.zeros((g.n_scan, n_slots, g.n_kv_heads, g.page_size,
+                              g.head_dim), dtype)
+
+        # one pool set per pattern position; slot 0 reserved (trash)
+        self.pools = tuple(
+            {"kh": mk(1 + hot_pages, kv_dtype),
+             "vh": mk(1 + hot_pages, kv_dtype),
+             "k8": mk(1 + max(warm_pages, 1), jnp.int8),
+             "v8": mk(1 + max(warm_pages, 1), jnp.int8),
+             "ks": jnp.ones((g.n_scan, 1 + max(warm_pages, 1),
+                             g.n_kv_heads, g.page_size), jnp.float32),
+             "vs": jnp.ones((g.n_scan, 1 + max(warm_pages, 1),
+                             g.n_kv_heads, g.page_size), jnp.float32)}
+            for _ in range(g.n_pat))
+        self.tier = np.full(num_pages, TIER_FREE, np.int8)
+        self.slot = np.zeros(num_pages, np.int32)
+        self._free_hot = list(range(hot_pages, 0, -1))     # slots N..1
+        self._free_warm = list(range(warm_pages, 0, -1))
+        # per-tier page-id sets so victim scans cost O(tier), not O(pages)
+        self._hot_ids: set[int] = set()
+        self._warm_ids: set[int] = set()
+        self.cold: dict[int, ColdPage] = {}
+        self.cold_bytes = 0
+        self.stats = {"demote_warm": 0, "demote_cold": 0,
+                      "promote_warm": 0, "promote_hot": 0}
+
+    # -- placement queries ---------------------------------------------------
+
+    @property
+    def n_free_hot(self) -> int:
+        return len(self._free_hot)
+
+    @property
+    def n_free_warm(self) -> int:
+        return len(self._free_warm)
+
+    def tier_of(self, pid: int) -> int:
+        return int(self.tier[pid])
+
+    def hot_page_ids(self):
+        return self._hot_ids
+
+    def warm_page_ids(self):
+        return self._warm_ids
+
+    def encoded_loc(self, pid: int) -> int:
+        t = self.tier[pid]
+        if t == TIER_HOT:
+            return int(self.slot[pid])
+        if t == TIER_WARM:
+            return -int(self.slot[pid])
+        raise ValueError(f"page {pid} not gatherable (tier {t})")
+
+    def hbm_bytes_used(self) -> int:
+        n_hot = int((self.tier == TIER_HOT).sum())
+        n_warm = int((self.tier == TIER_WARM).sum())
+        return (n_hot * self.geom.hot_page_bytes
+                + n_warm * self.geom.warm_page_bytes)
+
+    def tier_counts(self) -> dict[str, int]:
+        return {"hot": int((self.tier == TIER_HOT).sum()),
+                "warm": int((self.tier == TIER_WARM).sum()),
+                "cold": int((self.tier == TIER_COLD).sum())}
+
+    # -- placement lifecycle -------------------------------------------------
+
+    def place_hot(self, pid: int) -> int:
+        """Bind a fresh (or cold-freed) page id to a hot slot."""
+        assert self.tier[pid] == TIER_FREE, f"page {pid} already placed"
+        if not self._free_hot:
+            raise PoolExhausted("hot tier full")
+        s = self._free_hot.pop()
+        self.tier[pid], self.slot[pid] = TIER_HOT, s
+        self._hot_ids.add(pid)
+        return s
+
+    def release(self, pid: int):
+        """Free a page's physical residence (request retired)."""
+        t = self.tier[pid]
+        if t == TIER_HOT:
+            self._free_hot.append(int(self.slot[pid]))
+        elif t == TIER_WARM:
+            self._free_warm.append(int(self.slot[pid]))
+        elif t == TIER_COLD:
+            rec = self.cold.pop(pid)
+            self.cold_bytes -= rec.nbytes
+        self._hot_ids.discard(pid)
+        self._warm_ids.discard(pid)
+        self.tier[pid], self.slot[pid] = TIER_FREE, 0
+
+    # -- prefill write -------------------------------------------------------
+
+    def write_prefill(self, pid_slots: list[int], state_kv: list, S: int):
+        """Scatter a prefilled request's per-layer KV into its hot pages.
+
+        pid_slots: hot slots of the request's pages (already placed);
+        state_kv: per pattern position (k, v) bf16[n_scan, G, max_len, dh].
+        """
+        ps = self.geom.page_size
+        npg_needed = -(-S // ps)
+        assert len(pid_slots) >= npg_needed
+        for j, (k_seq, v_seq) in enumerate(state_kv):
+            max_len = k_seq.shape[2]
+            locs = np.zeros(max_len // ps, np.int32)
+            locs[:len(pid_slots)] = pid_slots
+            self.pools = self.pools[:j] + (_scatter_prefill(
+                self.pools[j], k_seq, v_seq, jnp.asarray(locs)),) \
+                + self.pools[j + 1:]
+
+    # -- tier transitions ----------------------------------------------------
+
+    def demote_to_warm(self, pid: int):
+        """hot -> warm: per-token absmax int8 (the CABA KV site)."""
+        assert self.tier[pid] == TIER_HOT
+        if not self._free_warm:
+            raise PoolExhausted("warm tier full")
+        hs = int(self.slot[pid])
+        ws = self._free_warm.pop()
+        for j in range(self.geom.n_pat):
+            self.pools = self.pools[:j] + (_demote_hot_to_warm(
+                self.pools[j], hs, ws),) + self.pools[j + 1:]
+        self._free_hot.append(hs)
+        self.tier[pid], self.slot[pid] = TIER_WARM, ws
+        self._hot_ids.discard(pid)
+        self._warm_ids.add(pid)
+        self.stats["demote_warm"] += 1
+
+    def demote_to_cold(self, pid: int):
+        """warm -> cold: pack the int8 planes (BDI/FPC/RAW) into host memory."""
+        assert self.tier[pid] == TIER_WARM
+        ws = int(self.slot[pid])
+        blobs, schemes, scales, nbytes = [], [], [], 0
+        for j in range(self.geom.n_pat):
+            pj = self.pools[j]
+            k8 = np.asarray(pj["k8"][:, ws])
+            v8 = np.asarray(pj["v8"][:, ws])
+            kn, ko, kb = _pack_cold(k8)
+            vn, vo, vb = _pack_cold(v8)
+            ks = np.asarray(pj["ks"][:, ws])
+            vs = np.asarray(pj["vs"][:, ws])
+            blobs.append((ko, vo))
+            schemes.append((kn, vn))
+            scales.append((ks, vs))
+            nbytes += kb + vb + ks.nbytes + vs.nbytes
+        if (self.host_budget_bytes is not None
+                and self.cold_bytes + nbytes > self.host_budget_bytes):
+            raise PoolExhausted("cold (host) budget full")
+        self.cold[pid] = ColdPage(blobs, schemes, scales, nbytes)
+        self.cold_bytes += nbytes
+        self._free_warm.append(ws)
+        self.tier[pid], self.slot[pid] = TIER_COLD, 0
+        self._warm_ids.discard(pid)
+        self.stats["demote_cold"] += 1
+
+    def promote_to_warm(self, pid: int):
+        """cold -> warm: unpack the int8 planes back into the warm pool
+        (bit-exact -- the packing is lossless)."""
+        assert self.tier[pid] == TIER_COLD
+        if not self._free_warm:
+            raise PoolExhausted("warm tier full")
+        ws = self._free_warm.pop()
+        rec = self.cold.pop(pid)
+        self.cold_bytes -= rec.nbytes
+        g = self.geom
+        shp = (g.n_scan, g.n_kv_heads, g.page_size, g.head_dim)
+        for j in range(g.n_pat):
+            (kn, vn) = rec.schemes[j]
+            k8 = _unpack_cold(kn, rec.blobs[j][0]).reshape(shp)
+            v8 = _unpack_cold(vn, rec.blobs[j][1]).reshape(shp)
+            ks, vs = rec.scales[j]
+            self.pools = self.pools[:j] + (_write_warm(
+                self.pools[j], ws, jnp.asarray(k8, jnp.int8),
+                jnp.asarray(ks), jnp.asarray(v8, jnp.int8),
+                jnp.asarray(vs)),) + self.pools[j + 1:]
+        self.tier[pid], self.slot[pid] = TIER_WARM, ws
+        self._warm_ids.add(pid)
+        self.stats["promote_warm"] += 1
+
+    def promote_to_hot(self, pid: int):
+        """warm -> hot: dequantize into a hot slot (needed for page writes)."""
+        assert self.tier[pid] == TIER_WARM
+        if not self._free_hot:
+            raise PoolExhausted("hot tier full")
+        ws = int(self.slot[pid])
+        hs = self._free_hot.pop()
+        for j in range(self.geom.n_pat):
+            self.pools = self.pools[:j] + (_promote_warm_to_hot(
+                self.pools[j], ws, hs),) + self.pools[j + 1:]
+        self._free_warm.append(ws)
+        self.tier[pid], self.slot[pid] = TIER_HOT, hs
+        self._warm_ids.discard(pid)
+        self._hot_ids.add(pid)
+        self.stats["promote_hot"] += 1

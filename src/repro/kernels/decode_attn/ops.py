@@ -28,3 +28,24 @@ def decode_attn_raw(q, k, v, lengths, *, bs: int = 128,
     dummy = jnp.ones((B, G, S), jnp.float32)
     return da.decode_attn(q, k, dummy, v, dummy, lengths, bs=bs,
                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attn_q8(q, k_pool, ks_pool, v_pool, vs_pool, block_table,
+                         lengths, *, interpret: bool = True):
+    """Flash-decode gathering int8 KV pages through a block table
+    (repro.cache warm tier; in-VMEM dequant after each page DMA)."""
+    from repro.kernels.decode_attn import paged as pg
+    return pg.paged_decode_attn(q, k_pool, ks_pool, v_pool, vs_pool,
+                                block_table, lengths, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attn_raw(q, k_pool, v_pool, block_table, lengths, *,
+                          interpret: bool = True):
+    """bf16-page baseline with the identical paged schedule."""
+    from repro.kernels.decode_attn import paged as pg
+    P, G, ps, _ = k_pool.shape
+    dummy = jnp.ones((P, G, ps), jnp.float32)
+    return pg.paged_decode_attn(q, k_pool, dummy, v_pool, dummy,
+                                block_table, lengths, interpret=interpret)

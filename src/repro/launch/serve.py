@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
         --requests 16 --slots 4 --max-new 12 --kv-mode int8
+
+    # paged, tiered KV cache (repro.cache): --slots becomes decode lanes,
+    # residency is bounded by the HBM budget instead of the slot count
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+        --requests 16 --slots 4 --paged --hbm-budget-mb 1
 """
 from __future__ import annotations
 
@@ -26,6 +31,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--kv-mode", default="bf16", choices=("bf16", "int8"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged, tiered KV cache (repro.cache)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--hbm-budget-mb", type=float, default=64.0)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -35,8 +44,16 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} is encoder-only: no serving path")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    eng = Engine(model, params, batch_slots=args.slots, max_len=args.max_len,
-                 kv_mode=args.kv_mode, eos_id=0)
+    if args.paged:
+        from repro.cache import TierConfig
+        from repro.serving.paged_engine import PagedEngine
+        tier = TierConfig(page_size=args.page_size,
+                          hbm_budget_bytes=int(args.hbm_budget_mb * 2 ** 20))
+        eng = PagedEngine(model, params, lanes=args.slots,
+                          max_len=args.max_len, tier=tier, eos_id=0)
+    else:
+        eng = Engine(model, params, batch_slots=args.slots,
+                     max_len=args.max_len, kv_mode=args.kv_mode, eos_id=0)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -52,8 +69,11 @@ def main(argv=None):
     for r in sorted(done, key=lambda r: r.rid)[:8]:
         print(f"req {r.rid:3d}: prompt={len(r.prompt):3d} tok "
               f"-> {r.out[:8]}{'...' if len(r.out) > 8 else ''}")
+    mode = "paged" if args.paged else f"kv={args.kv_mode}"
     print(f"\n{len(done)} requests, {n_tok} tokens in {dt:.1f}s "
-          f"({n_tok/dt:.1f} tok/s, kv={args.kv_mode})")
+          f"({n_tok/dt:.1f} tok/s, {mode})")
+    if args.paged:
+        print(f"cache stats: {eng.stats()}")
     return done
 
 

@@ -26,6 +26,8 @@ class ModelFns:
     prefill: Callable         # (params, batch, max_len) -> (logits, state)
     decode_step: Callable     # (params, state, tokens) -> (logits, state)
     init_state: Callable      # (batch, max_len) -> state
+    # (params, pools, tokens, block_table, lengths) -> (logits, pools)
+    paged_decode_step: Callable = None
 
 
 def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
@@ -69,13 +71,19 @@ def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
     def decode_step(params, state, tokens):
         return T.stack_decode_step(cfg, params, state, tokens)
 
+    def paged_decode_step(params, pools, tokens, block_table, lengths, *,
+                          has_warm: bool = True):
+        return T.stack_paged_decode_step(cfg, params, pools, tokens,
+                                         block_table, lengths,
+                                         has_warm=has_warm)
+
     def init_state(batch: int, max_len: int, kv_dtype=jnp.bfloat16,
                    kv_mode: str = "bf16", uniform_pos: bool = False):
         return T.stack_init_state(cfg, batch, max_len, kv_dtype, kv_mode,
                                   uniform_pos)
 
     return ModelFns(cfg, init, fwd_train, loss, prefill, decode_step,
-                    init_state)
+                    init_state, paged_decode_step)
 
 
 # ---------------------------------------------------------------------------

@@ -521,3 +521,110 @@ def stack_decode_step(cfg: ArchConfig, params, state, tokens):
 
     new_state["len"] = pos + 1
     return _logits(cfg, params, x), new_state
+
+
+# ---------------------------------------------------------------------------
+# paged decode (repro.cache block-table path)
+# ---------------------------------------------------------------------------
+#
+# The KV cache is a pool of fixed-size pages instead of a dense [B, max_len]
+# slab; each request's pages are named by an int32 block table whose entries
+# encode the page's tier (tiers.py): loc > 0 hot slot, loc < 0 warm slot
+# -loc (int8, dequantized in the gather -- the CABA KV site), loc == 0 the
+# reserved trash page (masked by the length mask).  With every page hot the
+# math below is bit-identical to _gqa_cached_decode over a dense cache of
+# the same max_len, which is the paged engine's drop-in guarantee.
+
+def paged_decode_supported(cfg: ArchConfig) -> bool:
+    """The paged path covers scanned pure-GQA global-attention stacks."""
+    plan = stack_plan(cfg)
+    return (not plan.head and not plan.tail and cfg.mla is None
+            and cfg.frontend != "audio" and not cfg.window
+            and all(k == "attn" for k in plan.pattern))
+
+
+def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool):
+    """One layer's paged GQA decode.
+
+    x: [B, 1, D]; pools_j: one layer's slice of a tiers pool dict
+    (kh/vh [P_hot, G, ps, dh], k8/v8 [P_warm, G, ps, dh], ks/vs
+    [P_warm, G, ps]); bt: int32[B, max_pages] encoded locations;
+    lengths: int32[B].  The write page (lengths // ps) must be hot.
+    ``has_warm=False`` (static) promises bt has no warm entries and
+    compiles the int8 gather out entirely.
+    """
+    B = x.shape[0]
+    kh, vh = pools_j["kh"], pools_j["vh"]
+    ps = kh.shape[2]
+    maxp = bt.shape[1]
+    q, k_new, v_new = L.gqa_qkv(cfg, p, x, lengths[:, None])
+    # append the new token into its (hot) page
+    wp, offs = lengths // ps, lengths % ps
+    locs_w = jnp.take_along_axis(bt, wp[:, None], axis=1)[:, 0]
+    kh = kh.at[locs_w, :, offs].set(k_new[:, :, 0, :].astype(kh.dtype))
+    vh = vh.at[locs_w, :, offs].set(v_new[:, :, 0, :].astype(vh.dtype))
+    # gather the whole table through both tiers
+    is_warm = bt < 0
+    hot_idx = jnp.where(bt > 0, bt, 0)
+    warm_idx = jnp.where(is_warm, -bt, 0)
+    sel = is_warm[:, :, None, None, None]
+
+    def gathered(hot_pool, q8_pool, sc_pool):
+        hot = hot_pool[hot_idx].astype(jnp.float32)   # [B, maxp, G, ps, dh]
+        if has_warm:
+            warm = (q8_pool[warm_idx].astype(jnp.float32)
+                    * sc_pool[warm_idx][..., None])
+            hot = jnp.where(sel, warm, hot)
+        return hot.transpose(0, 2, 1, 3, 4).reshape(
+            B, hot_pool.shape[1], maxp * ps, hot_pool.shape[-1])
+
+    k = gathered(kh, pools_j["k8"], pools_j["ks"])
+    v = gathered(vh, pools_j["v8"], pools_j["vs"])
+    valid = jnp.arange(maxp * ps)[None, :] <= lengths[:, None]
+    out = _masked_decode_attn(q, k, v, valid)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    return (jnp.einsum("bsf,fd->bsd", out, Q.getw(p, "wo")),
+            dict(pools_j, kh=kh, vh=vh))
+
+
+def block_apply_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
+                             bt, lengths, *, has_warm: bool = True):
+    assert kind == "attn", f"paged decode does not support {kind!r}"
+    h = L.norm_apply(cfg, p["norm1"], x)
+    out, pools_j = _gqa_paged_decode(cfg, p["attn"], h, pools_j, bt, lengths,
+                                     has_warm=has_warm)
+    x = x + out
+    h = L.norm_apply(cfg, p["norm2"], x)
+    out, _ = _ffn_apply(cfg, kind, p, h, moe_dropless=True)
+    return x + out, pools_j
+
+
+def stack_paged_decode_step(cfg: ArchConfig, params, pools, tokens, bt,
+                            lengths, *, has_warm: bool = True):
+    """One paged decode step over the scanned stack.
+
+    pools: tuple (per pattern position) of tier pool dicts with a leading
+    n_scan axis; tokens: int32[B, 1]; bt: int32[B, max_pages]; lengths:
+    int32[B].  Returns (logits [B, 1, V], pools').
+    """
+    plan = stack_plan(cfg)
+    assert paged_decode_supported(cfg), cfg.name
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", None, None)
+
+    # only the hot planes are written per tick; returning the warm planes
+    # through the scan ys would re-materialize the whole int8 tier every
+    # step, so the ys carry kh/vh and the rest passes through untouched
+    def body(x, inp):
+        layer_p, layer_pools = inp
+        hot_updates = []
+        for j, kind in enumerate(plan.pattern):
+            x, pj = block_apply_paged_decode(cfg, kind, layer_p[j], x,
+                                             layer_pools[j], bt, lengths,
+                                             has_warm=has_warm)
+            hot_updates.append({"kh": pj["kh"], "vh": pj["vh"]})
+        return x, tuple(hot_updates)
+
+    x, hot = jax.lax.scan(body, x, (params["scan"], pools))
+    new_pools = tuple(dict(pools[j], **hot[j]) for j in range(len(pools)))
+    return _logits(cfg, params, x), new_pools

@@ -12,6 +12,7 @@ int8 doubles the resident slot count for the same HBM.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable, Optional
 
@@ -38,7 +39,44 @@ class _Slot:
     remaining: int = 0
 
 
-class Engine:
+class EngineBase:
+    """Request intake + sampling shared by the dense and paged engines.
+
+    Subclasses provide ``self.queue`` / ``self.rng`` and call
+    ``_init_intake()`` from their constructor.
+    """
+
+    def _init_intake(self):
+        self._seen_rids: set[int] = set()
+        self._next_rid = 0
+
+    def submit(self, req: Request):
+        if req.rid in self._seen_rids:      # recycle colliding rids
+            req.rid = self._next_rid
+        self._seen_rids.add(req.rid)
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self.queue.append(req)
+
+    def _sample(self, logits, temperature):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+    def _sample_rows(self, logits, temps):
+        """Per-row sampling honoring a vector of temperatures (0 = greedy)."""
+        temps = np.asarray(temps, np.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not (temps > 0.0).any():
+            return greedy
+        self.rng, k = jax.random.split(self.rng)
+        t = jnp.asarray(np.where(temps > 0.0, temps, 1.0))
+        sampled = jax.random.categorical(
+            k, logits / t[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(jnp.asarray(temps > 0.0), sampled, greedy)
+
+
+class Engine(EngineBase):
     """Greedy/temperature sampling over a slot-batched decode state."""
 
     def __init__(self, model: ModelFns, params, *, batch_slots: int,
@@ -54,8 +92,9 @@ class Engine:
         self.state = model.init_state(batch_slots, max_len, kv_mode=kv_mode)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.rng = jax.random.PRNGKey(seed)
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self._init_intake()
 
         cfg = model.cfg
         self._decode = jax.jit(model.decode_step)
@@ -80,9 +119,6 @@ class Engine:
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, req: Request):
-        self.queue.append(req)
-
     def _free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):
             if s.req is None:
@@ -94,7 +130,7 @@ class Engine:
             slot = self._free_slot()
             if slot is None:
                 return
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
             logits, one_state = self._prefill(self.params, {"tokens": toks})
             self.state = self._splice(self.state, one_state, slot)
@@ -103,11 +139,11 @@ class Engine:
             req.out.append(int(nxt[0]))
             self.slots[slot] = _Slot(req, req.max_new - 1)
 
-    def _sample(self, logits, temperature):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.rng, k = jax.random.split(self.rng)
-        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+    def _sample_slots(self, logits):
+        """Per-slot sampling honoring each request's temperature."""
+        return self._sample_rows(
+            logits, [s.req.temperature if s.req is not None else 0.0
+                     for s in self.slots])
 
     # -- main loop -----------------------------------------------------------
 
@@ -117,7 +153,7 @@ class Engine:
         if not any(s.req is not None for s in self.slots):
             return False
         logits, self.state = self._decode(self.params, self.state, self.tokens)
-        nxt = self._sample(logits[:, 0], 0.0)
+        nxt = self._sample_slots(logits[:, 0])
         self.tokens = nxt[:, None]
         for i, s in enumerate(self.slots):
             if s.req is None:

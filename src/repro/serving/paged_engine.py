@@ -1,0 +1,358 @@
+"""Paged serving engine: block tables + tiered KV cache (DESIGN.md 10.4).
+
+Differences from the dense ``engine.Engine``:
+
+* KV lives in fixed-size pages owned by ``repro.cache`` instead of per-slot
+  ``[B, max_len]`` slabs -- short requests hold short block tables, so no
+  HBM is spent on padding.
+* ``lanes`` bounds how many requests DECODE per tick (the jit batch), but
+  *residency* is bounded only by the HBM/host budgets: requests beyond the
+  lane count are admitted (prefilled into pages) and parked, their pages
+  demoted down the tier ladder by LRU -- preemption-by-demotion instead of
+  rejection.
+* The roofline trigger (cache/policy.py) decides whether demotion
+  (compression) is allowed at all, per the paper's AWC discipline.
+
+With every tier but hot disabled and enough budget, outputs are
+token-identical to the dense engine on the same prompts (tests/
+test_paged_engine.py); the tiered configs trade bounded int8 error on
+parked requests for >= 2x resident-token capacity (benchmarks/
+serving_micro.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cache import (BlockPool, CachePolicy, PageGeometry, TierConfig,
+                         TieredKVStore, TIER_COLD, TIER_WARM,
+                         decode_roofline_terms)
+from repro.cache.block_pool import PoolExhausted
+from repro.cache.policy import kv_site, warm_ratio
+from repro.core.controller import AssistController
+from repro.models import transformer as T
+from repro.models.model import ModelFns
+from repro.serving.engine import EngineBase, Request
+
+
+@dataclasses.dataclass
+class _RState:
+    """A resident request: its tokens so far and decode progress."""
+    req: Request
+    length: int          # tokens whose KV is in the cache
+    last_tok: int
+    remaining: int
+
+
+class PagedEngine(EngineBase):
+    """Continuous batching over a paged, tiered KV cache."""
+
+    def __init__(self, model: ModelFns, params, *, lanes: int, max_len: int,
+                 tier: Optional[TierConfig] = None, eos_id: int = 1,
+                 seed: int = 0, controller: Optional[AssistController] = None,
+                 use_roofline_trigger: bool = True,
+                 max_cold_pages: Optional[int] = None):
+        cfg = model.cfg
+        if not T.paged_decode_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged decode needs a scanned pure-GQA stack")
+        self.model, self.params, self.cfg = model, params, cfg
+        tier = tier or TierConfig()
+        if max_len % tier.page_size:
+            raise ValueError("max_len must be a multiple of page_size")
+        self.max_len, self.eos_id = max_len, eos_id
+        self.n_lanes = lanes
+        self.maxp = max_len // tier.page_size
+        plan = T.stack_plan(cfg)
+        geom = PageGeometry(n_pat=len(plan.pattern), n_scan=plan.n_scan,
+                            n_kv_heads=cfg.n_kv_heads,
+                            page_size=tier.page_size, head_dim=cfg.head_dim)
+        self.geom = geom
+        hot, warm = tier.split_pages(geom.hot_page_bytes, geom.warm_page_bytes)
+        if max_cold_pages is None:
+            if tier.enable_cold:
+                max_cold_pages = (tier.host_budget_bytes // geom.warm_page_bytes
+                                  if tier.host_budget_bytes
+                                  else 8 * (hot + warm))
+            else:
+                max_cold_pages = 0
+        num_pages = hot + warm + max_cold_pages
+        self.pool = BlockPool(num_pages, tier.page_size)
+        self.store = TieredKVStore(geom, num_pages, hot_pages=hot,
+                                   warm_pages=warm,
+                                   host_budget_bytes=tier.host_budget_bytes)
+        terms = site = None
+        if use_roofline_trigger:
+            resident_est = hot * tier.page_size
+            terms = decode_roofline_terms(cfg, lanes, resident_est)
+            site = kv_site(cfg, resident_est)
+        self.policy = CachePolicy(tier, controller=controller
+                                  or AssistController(),
+                                  terms=terms, site=site,
+                                  measured_ratio=warm_ratio(cfg.head_dim))
+
+        self.lanes: list[Optional[int]] = [None] * lanes
+        self.resident: dict[int, _RState] = {}
+        self.parked: collections.deque[int] = collections.deque()
+        self.queue: collections.deque[Request] = collections.deque()
+        self.finished: list[Request] = []
+        self.rng = jax.random.PRNGKey(seed)
+        self._init_intake()
+        self.tick_no = 0
+        self.peak_resident_tokens = 0
+        self.tokens_generated = 0
+        self.admission_blocked = False
+
+        # the warm gather/dequant is compiled out entirely when the warm
+        # tier is disabled (block tables then never hold negative entries)
+        self._decode = jax.jit(
+            functools.partial(model.paged_decode_step, has_warm=warm > 0),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len, moe_dropless=True,
+                                       kv_mode="bf16"))
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request):
+        # fail fast at the API boundary: an oversize request can never be
+        # admitted, and surfacing it mid-run would strand in-flight work
+        if len(req.prompt) + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
+                f"({req.max_new}) exceeds max_len ({self.max_len})")
+        super().submit(req)
+
+    def resident_tokens(self) -> int:
+        return sum(r.length for r in self.resident.values())
+
+    def _protected(self) -> set[int]:
+        """Pages this tick's decode gather will touch (lane requests)."""
+        prot: set[int] = set()
+        for rid in self.lanes:
+            if rid is not None:
+                prot.update(self.pool.table(rid))
+        return prot
+
+    # -- admission (preemption-by-demotion, never rejection) -----------------
+
+    def _admit_one(self, req: Request, protected: set[int]) -> bool:
+        plen = len(req.prompt)
+        npg = self.pool.pages_for(plen)
+        if npg > self.pool.n_free:
+            return False
+        if not self.policy.make_hot_room(self.pool, self.store, protected,
+                                         n=npg):
+            return False
+        pages = self.pool.allocate(req.rid, npg)
+        slots = [self.store.place_hot(p) for p in pages]
+        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
+        logits, one_state = self._prefill(self.params, {"tokens": toks})
+        self.store.write_prefill(
+            slots, [(st["k"][:, 0], st["v"][:, 0])
+                    for st in one_state["scan"]], S=plen)
+        tok = int(self._sample(logits[:, -1], req.temperature)[0])
+        req.out.append(tok)
+        self.resident[req.rid] = _RState(req, plen, tok, req.max_new - 1)
+        self.pool.touch(req.rid, self.tick_no)
+        self.peak_resident_tokens = max(self.peak_resident_tokens,
+                                        self.resident_tokens())
+        return True
+
+    def _sample_lanes(self, logits):
+        return self._sample_rows(
+            logits,
+            [self.resident[rid].req.temperature if rid is not None else 0.0
+             for rid in self.lanes])
+
+    # -- lane maintenance ----------------------------------------------------
+
+    def _ensure_decodable(self, rid: int, protected: set[int]) -> bool:
+        """All of rid's pages gatherable and its write page hot; may
+        allocate the next page at a page boundary.  The request's own pages
+        join ``protected`` up front so making room for one of them can
+        never evict another."""
+        st = self.resident[rid]
+        table = self.pool.table(rid)
+        protected.update(table)
+        need = self.pool.pages_for(st.length + 1)
+        while len(table) < need:
+            if self.pool.n_free < 1 or not self.policy.make_hot_room(
+                    self.pool, self.store, protected):
+                return False
+            pid = self.pool.allocate(rid, 1)[0]
+            self.store.place_hot(pid)
+            protected.add(pid)
+            table = self.pool.table(rid)
+        for pid in table:
+            if self.store.tier[pid] == TIER_COLD:     # blocking promotion
+                if not self.policy.make_warm_room(self.pool, self.store,
+                                                  protected):
+                    return False
+                self.store.promote_to_warm(pid)
+        wp = table[st.length // self.pool.page_size]
+        if self.store.tier[wp] == TIER_WARM:
+            if not self.policy.make_hot_room(self.pool, self.store,
+                                             protected):
+                return False
+            self.store.promote_to_hot(wp)
+        return True
+
+    def _fill_lanes(self, protected: set[int]):
+        for i, rid in enumerate(self.lanes):
+            if rid is not None:
+                continue
+            # parked residents first (FIFO), then fresh admissions.  Walk
+            # past un-swappable candidates so a stuck head-of-line request
+            # cannot starve decodable ones behind it.
+            skipped: list[int] = []
+            while self.parked:
+                cand = self.parked.popleft()
+                if cand not in self.resident:
+                    continue
+                cold_before = [p for p in self.pool.table(cand)
+                               if self.store.tier[p] == TIER_COLD]
+                if self._ensure_decodable(cand, protected):
+                    # account once, on the attempt that actually swaps in
+                    self.policy.account_swap_in(self.pool.table(cand),
+                                                cold_before)
+                    self.lanes[i] = cand
+                    break
+                skipped.append(cand)               # no room this tick
+            self.parked.extendleft(reversed(skipped))
+            if self.lanes[i] is not None:
+                continue
+            if self.queue:
+                req = self.queue[0]
+                try:
+                    ok = self._admit_one(req, protected)
+                except PoolExhausted:
+                    ok = False
+                if ok and self._ensure_decodable(req.rid, protected):
+                    self.queue.popleft()
+                    self.lanes[i] = req.rid
+                elif ok:
+                    self.queue.popleft()
+                    self.parked.append(req.rid)
+                else:
+                    self.admission_blocked = True
+
+    def _admit_extra(self, protected: set[int]):
+        """Admit beyond the lane count: prefill into pages and park.
+        Residency is bounded by the budgets, not by the lane count."""
+        while self.queue:
+            req = self.queue[0]
+            try:
+                ok = self._admit_one(req, protected)
+            except PoolExhausted:
+                ok = False
+            if not ok:
+                self.admission_blocked = True
+                return
+            self.queue.popleft()
+            self.parked.append(req.rid)
+
+    # -- main loop -----------------------------------------------------------
+
+    def step(self) -> bool:
+        """One tick: prefetch, schedule, admit, decode, retire."""
+        self.tick_no += 1
+        self.admission_blocked = False
+        protected = self._protected()
+        self.policy.drain_prefetch(self.pool, self.store, protected)
+        self._fill_lanes(protected)
+        # lane maintenance: boundary page allocation / re-promotion for
+        # requests that stayed in their lane across ticks
+        for i, rid in enumerate(self.lanes):
+            if rid is not None and not self._ensure_decodable(rid, protected):
+                self.lanes[i] = None               # preempt by demotion
+                self.parked.appendleft(rid)
+        self._admit_extra(protected)
+        active = [i for i, rid in enumerate(self.lanes) if rid is not None]
+        if not active:
+            return False
+
+        bt = np.zeros((self.n_lanes, self.maxp), np.int32)
+        lengths = np.zeros(self.n_lanes, np.int32)
+        tokens = np.zeros((self.n_lanes, 1), np.int32)
+        for i in active:
+            st = self.resident[self.lanes[i]]
+            table = self.pool.table(self.lanes[i])
+            bt[i, :len(table)] = [self.store.encoded_loc(p) for p in table]
+            lengths[i] = st.length
+            tokens[i, 0] = st.last_tok
+
+        logits, pools = self._decode(self.params, self.store.pools,
+                                     jnp.asarray(tokens), jnp.asarray(bt),
+                                     jnp.asarray(lengths))
+        self.store.pools = pools
+        nxt = np.asarray(self._sample_lanes(logits[:, 0]))
+
+        closing = 0
+        for i in active:
+            rid = self.lanes[i]
+            st = self.resident[rid]
+            tok = int(nxt[i])
+            st.req.out.append(tok)
+            st.length += 1
+            st.last_tok = tok
+            st.remaining -= 1
+            self.tokens_generated += 1
+            self.pool.touch(rid, self.tick_no)
+            if st.remaining <= 0 or tok == self.eos_id:
+                st.req.done = True
+                self.finished.append(st.req)
+                freed = self.pool.free_request(rid)
+                for pid in freed:
+                    self.store.release(pid)
+                self.policy.forget_pages(freed)
+                del self.resident[rid]
+                self.lanes[i] = None
+            elif st.remaining <= self.policy.cfg.prefetch_lookahead:
+                closing += 1
+        self.peak_resident_tokens = max(self.peak_resident_tokens,
+                                        self.resident_tokens())
+        # WaSP lookahead: start promoting the next parked requests' cold
+        # pages while the closing lanes finish.
+        for rid in list(self.parked)[:max(closing, 0)]:
+            cold = [p for p in self.pool.table(rid)
+                    if self.store.tier[p] == TIER_COLD]
+            if cold:
+                self.policy.schedule_prefetch(cold)
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        """Drive ticks until done.  If the loop ends with ``self.queue``
+        non-empty, those requests are structurally inadmissible under the
+        configured budgets (prompt needs more hot pages than the tier can
+        ever free) -- they are left queued for the caller to inspect."""
+        ticks = 0
+        while (self.queue or self.resident) and ticks < max_ticks:
+            if not self.step():
+                break
+            ticks += 1
+        return self.finished
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {"tick": self.tick_no,
+                "queued": len(self.queue),
+                "parked": len(self.parked),
+                "resident_tokens": self.resident_tokens(),
+                "peak_resident_tokens": self.peak_resident_tokens,
+                "tokens_generated": self.tokens_generated,
+                "hbm_bytes_used": self.store.hbm_bytes_used(),
+                "cold_bytes": self.store.cold_bytes,
+                "tiers": self.store.tier_counts(),
+                "pool": dataclasses.asdict(self.pool.stats),
+                "store": dict(self.store.stats),
+                "policy": dict(self.policy.stats),
+                "trigger": (dataclasses.asdict(self.policy.decision)
+                            if self.policy.decision else None)}

@@ -1,0 +1,221 @@
+"""repro.cache unit tests: block-pool invariants, tier round-trips, policy.
+
+The pool invariants are the subsystem's safety bar: no page leaked, no page
+aliased across requests, free + owned == total, under randomized
+allocate/free traffic.  The tier ladder's contract: hot -> warm is bounded
+by the int8 absmax quantization error (the kv_cache bound), warm -> cold ->
+warm is BIT-EXACT (the packing is lossless).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cache import (BlockPool, CachePolicy, PageGeometry, TierConfig,
+                         TieredKVStore, TIER_COLD, TIER_HOT, TIER_WARM,
+                         decode_roofline_terms)
+from repro.cache.block_pool import PoolExhausted
+from repro.cache.policy import kv_site, warm_ratio
+from repro.core.controller import AssistController, RooflineTerms
+
+
+# -- block pool --------------------------------------------------------------
+
+def test_pool_alloc_free_roundtrip():
+    pool = BlockPool(num_pages=8, page_size=16)
+    a = pool.allocate(0, 3)
+    b = pool.allocate(1, 2)
+    pool.check()
+    assert len(set(a) | set(b)) == 5 and pool.n_free == 3
+    assert pool.pages_for(1) == 1 and pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    freed = pool.free_request(0)
+    assert sorted(freed) == sorted(a)
+    pool.check()
+    assert pool.n_free == 6
+
+
+def test_pool_exhaustion_and_no_alias():
+    pool = BlockPool(num_pages=4, page_size=8)
+    pool.allocate(0, 4)
+    with pytest.raises(PoolExhausted):
+        pool.allocate(1, 1)
+    pool.check()
+
+
+def test_pool_randomized_invariants(rng):
+    pool = BlockPool(num_pages=32, page_size=8)
+    live: set[int] = set()
+    for step in range(300):
+        if live and rng.random() < 0.4:
+            rid = int(rng.choice(sorted(live)))
+            pool.free_request(rid)
+            live.discard(rid)
+        else:
+            rid = step + 1000
+            n = int(rng.integers(1, 5))
+            try:
+                pool.allocate(rid, n)
+                live.add(rid)
+            except PoolExhausted:
+                pass
+        pool.check()
+    for rid in sorted(live):
+        pool.free_request(rid)
+    pool.check()
+    assert pool.n_free == pool.num_pages
+
+
+def test_pool_lru_order():
+    pool = BlockPool(num_pages=4, page_size=8)
+    pool.allocate(0, 2)
+    pool.allocate(1, 2)
+    pool.touch(0, tick=5)
+    pool.touch(1, tick=3)
+    order = pool.lru_order(range(4))
+    assert set(order[:2]) == set(pool.table(1))     # older stamps first
+
+
+# -- tier ladder -------------------------------------------------------------
+
+@pytest.fixture
+def store_and_data(rng):
+    geom = PageGeometry(n_pat=1, n_scan=2, n_kv_heads=2, page_size=8,
+                        head_dim=16)
+    store = TieredKVStore(geom, num_pages=8, hot_pages=4, warm_pages=4)
+    k = jnp.asarray(rng.standard_normal((2, 2, 16, 16)), jnp.float32) \
+           .astype(jnp.bfloat16)                    # [n_scan, G, 2*ps, dh]
+    v = jnp.asarray(rng.standard_normal((2, 2, 16, 16)), jnp.float32) \
+           .astype(jnp.bfloat16)
+    slots = [store.place_hot(0), store.place_hot(1)]
+    store.write_prefill(slots, [(k, v)], S=16)
+    return store, k, v
+
+
+def _hot_page(store, pid):
+    s = int(store.slot[pid])
+    return (np.asarray(store.pools[0]["kh"][:, s], np.float32),
+            np.asarray(store.pools[0]["vh"][:, s], np.float32))
+
+
+def test_prefill_scatter_lands_in_pages(store_and_data):
+    store, k, v = store_and_data
+    ps = store.geom.page_size
+    for pid in (0, 1):
+        kp, vp = _hot_page(store, pid)
+        np.testing.assert_array_equal(
+            kp, np.asarray(k[:, :, pid * ps:(pid + 1) * ps], np.float32))
+        np.testing.assert_array_equal(
+            vp, np.asarray(v[:, :, pid * ps:(pid + 1) * ps], np.float32))
+
+
+def test_tier_roundtrip_bounds(store_and_data):
+    store, k, v = store_and_data
+    ps = store.geom.page_size
+    orig_k = np.asarray(k[:, :, :ps], np.float32)
+
+    store.demote_to_warm(0)
+    assert store.tier_of(0) == TIER_WARM
+    ws = int(store.slot[0])
+    k8 = np.asarray(store.pools[0]["k8"][:, ws])
+    ks = np.asarray(store.pools[0]["ks"][:, ws])
+    back = k8.astype(np.float32) * ks[..., None]
+    bound = np.abs(orig_k).max() / 127 + 1e-6       # absmax int8 bound
+    assert np.abs(back - orig_k).max() <= bound * 1.01
+
+    # warm -> cold -> warm must be bit-exact (lossless packing)
+    store.demote_to_cold(0)
+    assert store.tier_of(0) == TIER_COLD and store.cold_bytes > 0
+    store.promote_to_warm(0)
+    ws2 = int(store.slot[0])
+    np.testing.assert_array_equal(k8, np.asarray(store.pools[0]["k8"][:, ws2]))
+    np.testing.assert_array_equal(ks, np.asarray(store.pools[0]["ks"][:, ws2]))
+    assert store.cold_bytes == 0
+
+    # warm -> hot carries the (already paid) quantization error only
+    store.promote_to_hot(0)
+    assert store.tier_of(0) == TIER_HOT
+    kp, _ = _hot_page(store, 0)
+    assert np.abs(kp - orig_k).max() <= bound * 1.01
+
+
+def test_tier_accounting(store_and_data):
+    store, *_ = store_and_data
+    g = store.geom
+    assert store.hbm_bytes_used() == 2 * g.hot_page_bytes
+    store.demote_to_warm(1)
+    assert store.hbm_bytes_used() == g.hot_page_bytes + g.warm_page_bytes
+    assert g.warm_page_bytes < g.hot_page_bytes
+    store.release(0)
+    store.release(1)
+    assert store.hbm_bytes_used() == 0
+    assert store.n_free_hot == store.hot_pages
+
+
+# -- policy ------------------------------------------------------------------
+
+def test_roofline_trigger_gates_compression():
+    from repro.configs import ARCHS, reduced
+    cfg = reduced(ARCHS["qwen2-7b"])
+    tier = TierConfig(enable_warm=True, enable_cold=True)
+    ctl = AssistController()
+    # decode is memory-bound -> compression on
+    terms = decode_roofline_terms(cfg, batch=4, resident_tokens=4096)
+    assert terms.bottleneck == "memory"
+    pol = CachePolicy(tier, controller=ctl, terms=terms,
+                      site=kv_site(cfg, 4096),
+                      measured_ratio=warm_ratio(cfg.head_dim))
+    assert pol.compression_enabled and pol.cold_enabled
+    # a compute-bound step -> the AWC throttle rejects the site
+    busy = RooflineTerms(compute=1.0, memory=1e-6, collective=0.0)
+    pol2 = CachePolicy(tier, controller=ctl, terms=busy,
+                       site=kv_site(cfg, 4096),
+                       measured_ratio=warm_ratio(cfg.head_dim))
+    assert not pol2.compression_enabled and not pol2.cold_enabled
+    assert not pol2.decision.enabled
+
+
+def test_policy_lru_demotion_and_protection():
+    geom = PageGeometry(n_pat=1, n_scan=1, n_kv_heads=1, page_size=8,
+                        head_dim=16)
+    pool = BlockPool(num_pages=6, page_size=8)
+    store = TieredKVStore(geom, num_pages=6, hot_pages=3, warm_pages=3)
+    for rid in range(3):
+        (pid,) = pool.allocate(rid, 1)
+        store.place_hot(pid)
+        pool.touch(rid, tick=rid)          # rid 0 is LRU
+    pol = CachePolicy(TierConfig(enable_warm=True, enable_cold=True))
+    assert store.n_free_hot == 0
+    assert pol.make_hot_room(pool, store, protected=set(pool.table(0)))
+    # the protected (LRU) page must NOT have been demoted
+    assert store.tier_of(pool.table(0)[0]) == TIER_HOT
+    assert store.tier_of(pool.table(1)[0]) == TIER_WARM   # next-LRU victim
+
+    # with compression disabled there is no way to make room
+    pol_off = CachePolicy(TierConfig(enable_warm=False))
+    full_pool = BlockPool(num_pages=3, page_size=8)
+    full_store = TieredKVStore(geom, num_pages=3, hot_pages=3, warm_pages=1)
+    for rid in range(3):
+        (pid,) = full_pool.allocate(rid, 1)
+        full_store.place_hot(pid)
+    assert not pol_off.make_hot_room(full_pool, full_store, set())
+
+
+def test_prefetch_queue_promotes_ahead(store_and_data):
+    store, *_ = store_and_data
+    pool = BlockPool(num_pages=8, page_size=8)
+    pool.allocate(0, 2)                   # pages 0, 1 (already placed hot)
+    store.demote_to_warm(0)
+    store.demote_to_cold(0)
+    pol = CachePolicy(TierConfig(enable_warm=True, enable_cold=True,
+                                 pages_per_prefetch_tick=2))
+    pol.schedule_prefetch([0])
+    assert pol.stats["prefetch_issued"] == 1
+    pol.drain_prefetch(pool, store, protected=set())
+    assert store.tier_of(0) == TIER_WARM
+    pol.account_swap_in([0, 1], cold_page_ids=[])
+    assert pol.stats["prefetch_hits"] == 1
+    assert pol.stats["prefetch_misses"] == 0
+    # a page still cold at swap-in is a miss, counted once
+    pol.account_swap_in([0, 1], cold_page_ids=[1])
+    assert pol.stats["prefetch_misses"] == 1
