@@ -2,15 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig8,fig13] [--smoke]
 
+    # tier-1 tests + smoke benchmarks (incl. the serving_micro attention-
+    # backend matrix) as ONE command:
+    PYTHONPATH=src python -m benchmarks.run --smoke --with-tier1
+
 Each module prints its table and asserts its paper-validation bounds; a
 failed validation fails the run (EXPERIMENTS.md SS Paper-validation is
 generated from this output).  ``--smoke`` forwards a reduced workload to
-the modules that support it (CI mode).
+the modules that support it (CI mode); serving_micro's smoke run includes
+the per-backend (gather/pallas/pallas_int8) decode matrix.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import subprocess
 import sys
 import time
 import traceback
@@ -34,10 +40,20 @@ def main() -> None:
                     help="comma-separated subset, e.g. fig8,fig13")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads (fast CI check)")
+    ap.add_argument("--with-tier1", action="store_true",
+                    help="run the tier-1 pytest suite before the benchmarks")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     failures = []
+    if args.with_tier1:
+        print(f"{'=' * 72}\nRUNNING tier-1 (pytest)\n{'=' * 72}")
+        import pathlib
+        repo_root = pathlib.Path(__file__).resolve().parents[1]
+        rc = subprocess.run([sys.executable, "-m", "pytest"],
+                            cwd=repo_root).returncode
+        if rc != 0:
+            failures.append(("tier1", f"pytest exit {rc}"))
     for name, modname in MODULES:
         if only and name not in only:
             continue

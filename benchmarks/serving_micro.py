@@ -1,5 +1,6 @@
 """Serving microbenchmark: resident-token capacity and tokens/s across
-tier configurations of the paged KV cache (repro.cache).
+tier configurations of the paged KV cache (repro.cache), plus tokens/s per
+ATTENTION BACKEND (kernels/decode_attn/ops.py registry).
 
 Under ONE fixed HBM budget, three engines admit the same request stream:
 
@@ -10,6 +11,13 @@ Under ONE fixed HBM budget, three engines admit the same request stream:
 Validation target (the subsystem's acceptance bar): the tiered configs hold
 >= 2x the resident tokens of hot-only under the same HBM budget, while
 every admitted request still completes.
+
+The backend section decodes the same stream through each registered
+attention backend (gather / pallas / pallas_int8), hot-only and with the
+int8 warm tier forced into play, and reports tokens/s so the Pallas path's
+cost/benefit is MEASURED -- on CPU the kernels run in interpret mode, so
+absolute numbers only bound relative behavior until the TPU re-measure
+(ROADMAP).
 
 ``main(smoke=True)`` shrinks the workload for CI (benchmarks/run.py
 --smoke).
@@ -23,6 +31,7 @@ import jax
 
 from repro.cache import PageGeometry, TierConfig
 from repro.configs import ARCHS, reduced
+from repro.kernels.decode_attn.ops import attn_backend_names
 from repro.models.model import build_model
 from repro.models.transformer import stack_plan
 from repro.serving.engine import Request
@@ -103,6 +112,104 @@ def run(smoke: bool = False):
     return results
 
 
+def run_backends(smoke: bool = False):
+    """Per-backend tokens/s, hot-only and with the warm tier in play.
+
+    Every backend decodes the same greedy stream; hot-only outputs must
+    agree token-for-token across backends (the equivalence bar the test
+    matrix enforces -- re-checked here on live traffic).
+    """
+    cfg = reduced(ARCHS["qwen2-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+
+    n_req = 4 if smoke else 8
+    max_new = 4 if smoke else 8
+    ticks = 6 if smoke else 16
+    tiers = {
+        # budget sized to the stream: an over-large budget allocates an
+        # over-large hot pool, and pool size dominates CPU gather time
+        "hot-only": TierConfig(page_size=PAGE,
+                               hbm_budget_bytes=24 * geom.hot_page_bytes,
+                               enable_warm=False, enable_cold=False),
+        # tight hot tier so parked requests actually demote to int8 pages
+        "int8-warm": TierConfig(page_size=PAGE,
+                                hbm_budget_bytes=10 * geom.hot_page_bytes,
+                                hot_fraction=0.5, enable_warm=True,
+                                enable_cold=False),
+    }
+    results = {}
+    rows = []
+    outputs = {}
+    for tier_name, tier in tiers.items():
+        for backend in attn_backend_names():
+            rng = np.random.default_rng(0)
+            eng = PagedEngine(model, params, lanes=2, max_len=48, tier=tier,
+                              eos_id=0, use_roofline_trigger=False,
+                              backend=backend)
+            for rid in range(n_req):
+                eng.submit(Request(rid=rid,
+                                   prompt=list(rng.integers(
+                                       2, cfg.vocab_size,
+                                       int(rng.integers(10, 25)))),
+                                   max_new=max_new))
+            eng.step()                       # admit + first decode (compile)
+            t0 = time.time()
+            tok0 = eng.tokens_generated
+            for _ in range(ticks):
+                if not eng.step():
+                    break
+            dt = time.time() - t0
+            tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+            done = eng.run(max_ticks=2000)
+            outputs[(tier_name, backend)] = {r.rid: tuple(r.out)
+                                             for r in done}
+            results[(tier_name, backend)] = {"tokens_per_s": tps,
+                                             "finished": len(done)}
+            rows.append([tier_name, backend, round(tps, 1), len(done)])
+            eng.pool.check()
+    print_table("serving_micro backends: tokens/s per attention backend "
+                "(CPU interpret mode)",
+                ["tier", "backend", "tok/s", "done"], rows)
+    return results, outputs
+
+
+def run_local_window(smoke: bool = False):
+    """A local-attention-window model end-to-end through the paged path
+    (per-layer capability dispatch: attn + attn_local segments)."""
+    import dataclasses
+    cfg = dataclasses.replace(reduced(ARCHS["qwen2-7b"]), name="qwen2-local",
+                              n_layers=4,
+                              block_pattern=("attn", "attn_local"), window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+    tier = TierConfig(page_size=PAGE,
+                      hbm_budget_bytes=16 * geom.hot_page_bytes,
+                      enable_warm=False, enable_cold=False)
+    n_req = 3 if smoke else 6
+    rng = np.random.default_rng(0)
+    eng = PagedEngine(model, params, lanes=2, max_len=48, tier=tier,
+                      eos_id=0, use_roofline_trigger=False,
+                      backend="pallas_int8")
+    for rid in range(n_req):
+        eng.submit(Request(rid=rid,
+                           prompt=list(rng.integers(2, cfg.vocab_size,
+                                                    int(rng.integers(10, 25)))),
+                           max_new=4 if smoke else 6))
+    done = eng.run(max_ticks=2000)
+    eng.pool.check()
+    assert len(done) == n_req, (len(done), n_req)
+    print(f"[serving_micro] local-window PASS: {n_req} requests decoded "
+          f"through the paged path (attn+attn_local, pallas_int8 backend)")
+    return done
+
+
 def main(smoke: bool = False):
     res = run(smoke=smoke)
     hot = res["hot-only"]["capacity"]
@@ -117,6 +224,20 @@ def main(smoke: bool = False):
     print(f"\n[serving_micro] PASS: capacity {hot} -> {warm} (warm) -> "
           f"{cold} (cold) resident tokens under one HBM budget "
           f"({cold / hot:.2f}x >= 2x)")
+
+    bres, bouts = run_backends(smoke=smoke)
+    backends = attn_backend_names()
+    # equivalence bar on live traffic: hot-only greedy outputs identical
+    ref = bouts[("hot-only", backends[0])]
+    for be in backends[1:]:
+        assert bouts[("hot-only", be)] == ref, \
+            f"hot-only outputs diverge: {backends[0]} vs {be}"
+    # warm mode: all backends complete the same request set
+    done = {bres[("int8-warm", be)]["finished"] for be in backends}
+    assert len(done) == 1, f"warm-mode finished counts diverge: {done}"
+    print(f"[serving_micro] backends PASS: {', '.join(backends)} "
+          f"token-identical hot-only, all complete with int8 warm")
+    run_local_window(smoke=smoke)
     return res
 
 

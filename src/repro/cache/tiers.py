@@ -46,23 +46,43 @@ COLD_SCHEMES = ("bdi", "fpc")
 
 @dataclasses.dataclass(frozen=True)
 class PageGeometry:
-    """Shape of one page across the stack (engine derives this from cfg)."""
+    """Shape of one page across the stack (engine derives this from cfg).
+
+    The stack is a sequence of pool-owning SEGMENTS: by default the
+    ``n_pat`` scanned pattern positions, each stacking ``n_scan`` layers.
+    Models with unstacked head/tail layers pass ``seg_stacks`` explicitly --
+    one entry per segment giving its stacked-layer count (1 for a head or
+    tail layer, n_scan for a pattern position).
+    """
     n_pat: int          # attention positions per scanned superblock
     n_scan: int         # scanned superblocks
     n_kv_heads: int
     page_size: int
     head_dim: int
+    seg_stacks: Optional[tuple] = None   # per-segment layer counts
+
+    @property
+    def stacks(self) -> tuple:
+        return self.seg_stacks or (self.n_scan,) * self.n_pat
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.stacks)
+
+    @property
+    def layers_total(self) -> int:
+        return sum(self.stacks)
 
     @property
     def hot_page_bytes(self) -> int:
         """HBM bytes of one page in the hot tier (k + v, bf16)."""
-        per = self.n_pat * self.n_scan * self.n_kv_heads * self.page_size
+        per = self.layers_total * self.n_kv_heads * self.page_size
         return 2 * per * self.head_dim * 2
 
     @property
     def warm_page_bytes(self) -> int:
         """HBM bytes of one page in the warm tier (int8 + f32 scales)."""
-        per = self.n_pat * self.n_scan * self.n_kv_heads * self.page_size
+        per = self.layers_total * self.n_kv_heads * self.page_size
         return 2 * per * self.head_dim + 2 * per * 4
 
     @property
@@ -178,21 +198,22 @@ class TieredKVStore:
         self.host_budget_bytes = host_budget_bytes
         g = geom
 
-        def mk(n_slots, dtype):
-            return jnp.zeros((g.n_scan, n_slots, g.n_kv_heads, g.page_size,
+        def mk(stack, n_slots, dtype):
+            return jnp.zeros((stack, n_slots, g.n_kv_heads, g.page_size,
                               g.head_dim), dtype)
 
-        # one pool set per pattern position; slot 0 reserved (trash)
+        # one pool set per segment (pattern position / head / tail layer);
+        # slot 0 reserved (trash)
         self.pools = tuple(
-            {"kh": mk(1 + hot_pages, kv_dtype),
-             "vh": mk(1 + hot_pages, kv_dtype),
-             "k8": mk(1 + max(warm_pages, 1), jnp.int8),
-             "v8": mk(1 + max(warm_pages, 1), jnp.int8),
-             "ks": jnp.ones((g.n_scan, 1 + max(warm_pages, 1),
+            {"kh": mk(stack, 1 + hot_pages, kv_dtype),
+             "vh": mk(stack, 1 + hot_pages, kv_dtype),
+             "k8": mk(stack, 1 + max(warm_pages, 1), jnp.int8),
+             "v8": mk(stack, 1 + max(warm_pages, 1), jnp.int8),
+             "ks": jnp.ones((stack, 1 + max(warm_pages, 1),
                              g.n_kv_heads, g.page_size), jnp.float32),
-             "vs": jnp.ones((g.n_scan, 1 + max(warm_pages, 1),
+             "vs": jnp.ones((stack, 1 + max(warm_pages, 1),
                              g.n_kv_heads, g.page_size), jnp.float32)}
-            for _ in range(g.n_pat))
+            for stack in g.stacks)
         self.tier = np.full(num_pages, TIER_FREE, np.int8)
         self.slot = np.zeros(num_pages, np.int32)
         self._free_hot = list(range(hot_pages, 0, -1))     # slots N..1
@@ -297,7 +318,7 @@ class TieredKVStore:
             raise PoolExhausted("warm tier full")
         hs = int(self.slot[pid])
         ws = self._free_warm.pop()
-        for j in range(self.geom.n_pat):
+        for j in range(self.geom.n_segments):
             self.pools = self.pools[:j] + (_demote_hot_to_warm(
                 self.pools[j], hs, ws),) + self.pools[j + 1:]
         self._free_hot.append(hs)
@@ -311,7 +332,7 @@ class TieredKVStore:
         assert self.tier[pid] == TIER_WARM
         ws = int(self.slot[pid])
         blobs, schemes, scales, nbytes = [], [], [], 0
-        for j in range(self.geom.n_pat):
+        for j in range(self.geom.n_segments):
             pj = self.pools[j]
             k8 = np.asarray(pj["k8"][:, ws])
             v8 = np.asarray(pj["v8"][:, ws])
@@ -343,8 +364,8 @@ class TieredKVStore:
         rec = self.cold.pop(pid)
         self.cold_bytes -= rec.nbytes
         g = self.geom
-        shp = (g.n_scan, g.n_kv_heads, g.page_size, g.head_dim)
-        for j in range(g.n_pat):
+        for j in range(g.n_segments):
+            shp = (g.stacks[j], g.n_kv_heads, g.page_size, g.head_dim)
             (kn, vn) = rec.schemes[j]
             k8 = _unpack_cold(kn, rec.blobs[j][0]).reshape(shp)
             v8 = _unpack_cold(vn, rec.blobs[j][1]).reshape(shp)
@@ -364,7 +385,7 @@ class TieredKVStore:
             raise PoolExhausted("hot tier full")
         ws = int(self.slot[pid])
         hs = self._free_hot.pop()
-        for j in range(self.geom.n_pat):
+        for j in range(self.geom.n_segments):
             self.pools = self.pools[:j] + (_promote_warm_to_hot(
                 self.pools[j], ws, hs),) + self.pools[j + 1:]
         self._free_warm.append(ws)

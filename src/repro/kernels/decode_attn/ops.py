@@ -49,3 +49,162 @@ def paged_decode_attn_raw(q, k_pool, v_pool, block_table, lengths, *,
     dummy = jnp.ones((P, G, ps), jnp.float32)
     return pg.paged_decode_attn(q, k_pool, dummy, v_pool, dummy,
                                 block_table, lengths, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# attention-backend registry (paged decode)
+# ---------------------------------------------------------------------------
+#
+# A backend computes one layer's paged decode attention over the tiered
+# pools.  Uniform signature:
+#
+#   backend(q, pools_j, bt, lengths, *, window=0, has_warm=True,
+#           interpret=True) -> out
+#
+#   q        bf16[B, H, dh]        this tick's queries (post-rope)
+#   pools_j  one layer's tier pools: kh/vh bf16[1+hot, G, ps, dh],
+#            k8/v8 int8[1+warm, G, ps, dh], ks/vs f32[1+warm, G, ps]
+#   bt       int32[B, maxp]        ENCODED locations (>0 hot slot, <0 warm
+#                                  slot -loc, 0 trash -- repro.cache tiers)
+#   lengths  int32[B]              valid tokens INCLUDING this tick's write
+#   window   static; >0 masks attention to the last `window` positions
+#   has_warm static; False promises bt >= 0 so the int8 tier compiles out
+#
+# The engine picks a backend by name (ServeConfig.attn_backend /
+# PagedEngine(backend=...)); models/transformer.py threads the choice into
+# every attention layer.  All backends are numerically interchangeable:
+# gather is the jnp baseline, pallas runs the bf16 kernel (warm pages paid
+# for by a dense dequant materialization per step), pallas_int8 reads warm
+# pages as int8 and dequantizes in VMEM right after the DMA (the CABA
+# fused-decompression path).
+
+ATTN_BACKENDS: dict = {}
+
+
+def register_attn_backend(name: str):
+    def deco(fn):
+        ATTN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_attn_backend(name: str):
+    try:
+        return ATTN_BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {attn_backend_names()}") from None
+
+
+def attn_backend_names() -> tuple:
+    return tuple(sorted(ATTN_BACKENDS))
+
+
+def _pool_valid(bt, lengths, ps: int, window: int):
+    """bool[B, maxp*ps] position validity for a paged request."""
+    maxp = bt.shape[1]
+    pos = jnp.arange(maxp * ps)[None, :]
+    valid = pos < lengths[:, None]
+    if window:
+        valid &= pos >= lengths[:, None] - window
+    return valid
+
+
+NEG_INF = -1e30
+
+
+def masked_decode_attn(q, k, v, valid):
+    """q: [B,H,dh]; k/v: [B,G,S,dh] (any float dtype); valid: bool[B,S]
+    -> [B,H,dh].
+
+    Plain (non-online) f32 softmax.  This is THE reference decode
+    attention: the dense engine's cache path
+    (models/transformer.py::_masked_decode_attn) delegates here, so the
+    gather backend is bit-identical to it by construction -- the
+    equivalence oracle for the whole backend matrix.
+    """
+    B, H, dh = q.shape
+    G = k.shape[1]
+    group = H // G
+    qf = (q.astype(jnp.float32) * dh ** -0.5).reshape(B, G, group, dh)
+    logits = jnp.einsum("bghd,bgsd->bghs", qf, k.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    pr = jnp.exp(logits - m)
+    out = jnp.einsum("bghs,bgsd->bghd", pr, v.astype(jnp.float32))
+    out = out / jnp.sum(pr, axis=-1)[..., None]
+    return out.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
+_masked_attn = masked_decode_attn      # registry-internal alias
+
+
+@register_attn_backend("gather")
+def attn_backend_gather(q, pools_j, bt, lengths, *, window: int = 0,
+                        has_warm: bool = True, interpret: bool = True):
+    """jnp baseline: gather both tiers into a dense f32 cache, then mask."""
+    del interpret
+    kh, vh = pools_j["kh"], pools_j["vh"]
+    B = q.shape[0]
+    G, ps = kh.shape[1], kh.shape[2]
+    maxp = bt.shape[1]
+    is_warm = bt < 0
+    hot_idx = jnp.where(bt > 0, bt, 0)
+    warm_idx = jnp.where(is_warm, -bt, 0)
+    sel = is_warm[:, :, None, None, None]
+
+    def gathered(hot_pool, q8_pool, sc_pool):
+        hot = hot_pool[hot_idx].astype(jnp.float32)   # [B, maxp, G, ps, dh]
+        if has_warm:
+            warm = (q8_pool[warm_idx].astype(jnp.float32)
+                    * sc_pool[warm_idx][..., None])
+            hot = jnp.where(sel, warm, hot)
+        return hot.transpose(0, 2, 1, 3, 4).reshape(
+            B, G, maxp * ps, hot_pool.shape[-1])
+
+    k = gathered(kh, pools_j["k8"], pools_j["ks"])
+    v = gathered(vh, pools_j["v8"], pools_j["vs"])
+    return _masked_attn(q, k, v, _pool_valid(bt, lengths, ps, window))
+
+
+@register_attn_backend("pallas")
+def attn_backend_pallas(q, pools_j, bt, lengths, *, window: int = 0,
+                        has_warm: bool = True, interpret: bool = True):
+    """The bf16 paged Pallas kernel (paged.py).  Warm pages must first be
+    dequantized into a dense pool appended after the hot slots -- the
+    materialization cost pallas_int8 exists to avoid."""
+    from repro.kernels.decode_attn import paged as pg
+    if has_warm:
+        # f32 concat keeps warm-page numerics identical to the gather
+        # backend (dequant stays exact); this whole materialization is the
+        # per-step cost pallas_int8 avoids
+        kw = pools_j["k8"].astype(jnp.float32) * pools_j["ks"][..., None]
+        vw = pools_j["v8"].astype(jnp.float32) * pools_j["vs"][..., None]
+        k_pool = jnp.concatenate([pools_j["kh"].astype(jnp.float32), kw],
+                                 axis=0)
+        v_pool = jnp.concatenate([pools_j["vh"].astype(jnp.float32), vw],
+                                 axis=0)
+        n_hot = pools_j["kh"].shape[0]
+        bt = jnp.where(bt < 0, n_hot - bt, bt)        # warm slot w -> n_hot+w
+    else:
+        # hot-only: feed the bf16 pools straight through (the kernel casts
+        # tiles to f32 in VMEM, which is exact for bf16)
+        k_pool, v_pool = pools_j["kh"], pools_j["vh"]
+    P, G, ps, _ = k_pool.shape
+    dummy = jnp.ones((P, G, ps), jnp.float32)
+    return pg.paged_decode_attn(q, k_pool, dummy, v_pool, dummy, bt, lengths,
+                                out_dtype=q.dtype, window=window,
+                                interpret=interpret)
+
+
+@register_attn_backend("pallas_int8")
+def attn_backend_pallas_int8(q, pools_j, bt, lengths, *, window: int = 0,
+                             has_warm: bool = True, interpret: bool = True):
+    """Tiered Pallas kernel: hot tiles stream bf16, warm tiles stream int8
+    and dequantize in VMEM right after the DMA (fused decompression)."""
+    del has_warm                       # the select handles hot-only tables
+    from repro.kernels.decode_attn import paged as pg
+    return pg.paged_decode_attn_tiered(
+        q, pools_j["kh"], pools_j["vh"], pools_j["k8"], pools_j["ks"],
+        pools_j["v8"], pools_j["vs"], bt, lengths, out_dtype=q.dtype,
+        window=window, interpret=interpret)

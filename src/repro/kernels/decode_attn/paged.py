@@ -23,31 +23,25 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(len_ref, bt_ref, q_ref, k8_ref, ks_ref, v8_ref, vs_ref,
-                  o_ref, m_s, l_s, acc_s, *, np_: int, ps: int,
-                  quantized: bool):
-    b = pl.program_id(0)
-    s = pl.program_id(2)
-
+def _flash_step(s, np_, ps, window, len_b, q_ref, k, v, o_ref, m_s, l_s,
+                acc_s):
+    """One page's online-softmax accumulation, shared by every paged kernel
+    (they differ only in how the [ps, D] K/V tiles are produced)."""
     @pl.when(s == 0)
     def _init():
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
 
-    group, D = q_ref.shape[2], q_ref.shape[3]
+    D = q_ref.shape[3]
     q = q_ref[0, 0].astype(jnp.float32)                   # [group, D]
-    if quantized:
-        k = k8_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
-        v = v8_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
-    else:
-        k = k8_ref[0, 0].astype(jnp.float32)              # [ps, D]
-        v = v8_ref[0, 0].astype(jnp.float32)
     logits = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * (D ** -0.5)  # [group, ps]
     pos = s * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-    valid = pos < len_ref[b]
+    valid = pos < len_b
+    if window:                       # local attention: last `window` tokens
+        valid &= pos >= len_b - window
     logits = jnp.where(valid, logits, NEG_INF)
 
     m_prev = m_s[...]
@@ -66,12 +60,28 @@ def _paged_kernel(len_ref, bt_ref, q_ref, k8_ref, ks_ref, v8_ref, vs_ref,
         o_ref[0, 0] = (acc_s[...] / denom).astype(o_ref.dtype)
 
 
+def _paged_kernel(len_ref, bt_ref, q_ref, k8_ref, ks_ref, v8_ref, vs_ref,
+                  o_ref, m_s, l_s, acc_s, *, np_: int, ps: int,
+                  quantized: bool, window: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    if quantized:
+        k = k8_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+        v = v8_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+    else:
+        k = k8_ref[0, 0].astype(jnp.float32)              # [ps, D]
+        v = v8_ref[0, 0].astype(jnp.float32)
+    _flash_step(s, np_, ps, window, len_ref[b], q_ref, k, v, o_ref, m_s,
+                l_s, acc_s)
+
+
 def paged_decode_attn(q, k_pool, ks_pool, v_pool, vs_pool, block_table,
-                      lengths, *, out_dtype=jnp.bfloat16,
+                      lengths, *, out_dtype=jnp.bfloat16, window: int = 0,
                       interpret: bool = True):
     """q: [B, H, D]; pools: int8/bf16[P, G, ps, D] (+ f32[P, G, ps] scales,
     ignored unless int8); block_table: int32[B, n_pages] pool slots;
-    lengths: int32[B] -> [B, H, D]."""
+    lengths: int32[B] -> [B, H, D].  ``window > 0`` masks to the last
+    ``window`` positions (local attention)."""
     B, H, D = q.shape
     P, G, ps, _ = k_pool.shape
     group = H // G
@@ -79,7 +89,7 @@ def paged_decode_attn(q, k_pool, ks_pool, v_pool, vs_pool, block_table,
     quantized = (k_pool.dtype == jnp.int8)
     q4 = q.reshape(B, G, group, D)
     kernel = functools.partial(_paged_kernel, np_=np_, ps=ps,
-                               quantized=quantized)
+                               quantized=quantized, window=window)
     # the KV tile for grid step (b, g, s) is page block_table[b, s]
     pool_map = lambda b, g, s, L, BT: (BT[b, s], g, 0, 0)
     scale_map = lambda b, g, s, L, BT: (BT[b, s], g, 0)
@@ -112,6 +122,87 @@ def paged_decode_attn(q, k_pool, ks_pool, v_pool, vs_pool, block_table,
         out_shape=jax.ShapeDtypeStruct((B, G, group, D), out_dtype),
         interpret=interpret,
     )(lengths, block_table, q4, k_pool, ks_pool, v_pool, vs_pool)
+    return out.reshape(B, H, D)
+
+
+# -- tiered kernel: hot bf16 + warm int8 through one encoded table -----------
+#
+# Block-table entries use the repro.cache encoded-location convention:
+# loc > 0 hot slot, loc < 0 warm slot -loc, loc == 0 trash.  Each grid step
+# DMAs BOTH candidate tiles (hot slot max(loc,0), warm slot max(-loc,0)) and
+# selects in VMEM, dequantizing the warm tile right after the move -- the
+# CABA fused-decompression contract without materializing a dense bf16 copy
+# of the warm tier (which is what the plain bf16 kernel must do).
+
+def _tiered_kernel(len_ref, bt_ref, q_ref, kh_ref, k8_ref, ks_ref, vh_ref,
+                   v8_ref, vs_ref, o_ref, m_s, l_s, acc_s, *, np_: int,
+                   ps: int, window: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    is_warm = bt_ref[b, s] < 0
+    k = jnp.where(is_warm,
+                  k8_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None],
+                  kh_ref[0, 0].astype(jnp.float32))       # [ps, D]
+    v = jnp.where(is_warm,
+                  v8_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None],
+                  vh_ref[0, 0].astype(jnp.float32))
+    _flash_step(s, np_, ps, window, len_ref[b], q_ref, k, v, o_ref, m_s,
+                l_s, acc_s)
+
+
+def paged_decode_attn_tiered(q, kh_pool, vh_pool, k8_pool, ks_pool, v8_pool,
+                             vs_pool, block_table, lengths, *,
+                             out_dtype=jnp.bfloat16, window: int = 0,
+                             interpret: bool = True):
+    """Mixed hot/warm paged flash-decode through an ENCODED block table.
+
+    q: [B, H, D]; hot pools bf16[P_hot, G, ps, D]; warm pools
+    int8[P_warm, G, ps, D] + f32[P_warm, G, ps] scales; block_table:
+    int32[B, n_pages] encoded locations (>0 hot, <0 warm, 0 trash);
+    lengths: int32[B] valid-token counts -> [B, H, D]."""
+    B, H, D = q.shape
+    _, G, ps, _ = kh_pool.shape
+    group = H // G
+    np_ = block_table.shape[1]
+    q4 = q.reshape(B, G, group, D)
+    kernel = functools.partial(_tiered_kernel, np_=np_, ps=ps, window=window)
+    hot_map = lambda b, g, s, L, BT: (jnp.maximum(BT[b, s], 0), g, 0, 0)
+    warm_map = lambda b, g, s, L, BT: (jnp.maximum(-BT[b, s], 0), g, 0, 0)
+    wscale_map = lambda b, g, s, L, BT: (jnp.maximum(-BT[b, s], 0), g, 0)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, G, np_),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, D),
+                             lambda b, g, s, L, BT: (b, g, 0, 0),
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps, D), hot_map,
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps, D), warm_map,
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps), wscale_map,
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps, D), hot_map,
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps, D), warm_map,
+                             memory_space=pltpu.VMEM),
+                pl.BlockSpec((1, 1, ps), wscale_map,
+                             memory_space=pltpu.VMEM),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, D),
+                                   lambda b, g, s, L, BT: (b, g, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, G, group, D), out_dtype),
+        interpret=interpret,
+    )(lengths, block_table, q4, kh_pool, k8_pool, ks_pool, vh_pool, v8_pool,
+      vs_pool)
     return out.reshape(B, H, D)
 
 

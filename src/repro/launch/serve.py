@@ -7,18 +7,70 @@
     # residency is bounded by the HBM budget instead of the slot count
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
         --requests 16 --slots 4 --paged --hbm-budget-mb 1
+
+    # attention backend for the paged decode step (kernels/decode_attn/
+    # ops.py registry): gather (jnp), pallas (bf16 kernel), pallas_int8
+    # (tiered kernel, in-VMEM warm dequant)
+    ... --paged --attn-backend pallas_int8
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 import jax
 
 from repro.configs import get_arch, reduced as reduce_cfg
+from repro.kernels.decode_attn.ops import attn_backend_names
 from repro.models.model import build_model
 from repro.serving.engine import Engine, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Declarative serving configuration (CLI flags map 1:1).
+
+    ``attn_backend`` picks the paged decode attention implementation from
+    the kernels/decode_attn/ops.py registry; it only applies with
+    ``paged=True``.
+    """
+    arch: str
+    reduced: bool = False
+    requests: int = 8
+    slots: int = 4                  # dense: batch slots; paged: decode lanes
+    max_len: int = 128
+    max_new: int = 12
+    kv_mode: str = "bf16"           # dense engine cache mode (bf16 | int8)
+    seed: int = 0
+    paged: bool = False
+    page_size: int = 16
+    hbm_budget_mb: float = 64.0
+    attn_backend: str = "gather"
+
+
+def build_engine(scfg: ServeConfig):
+    """(engine, model, params) for a ServeConfig."""
+    cfg = get_arch(scfg.arch)
+    if scfg.reduced:
+        cfg = reduce_cfg(cfg)
+    if not cfg.causal:
+        raise SystemExit(f"{cfg.name} is encoder-only: no serving path")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(scfg.seed))
+    if scfg.paged:
+        from repro.cache import TierConfig
+        from repro.serving.paged_engine import PagedEngine
+        tier = TierConfig(page_size=scfg.page_size,
+                          hbm_budget_bytes=int(scfg.hbm_budget_mb * 2 ** 20))
+        eng = PagedEngine(model, params, lanes=scfg.slots,
+                          max_len=scfg.max_len, tier=tier, eos_id=0,
+                          backend=scfg.attn_backend)
+    else:
+        eng = Engine(model, params, batch_slots=scfg.slots,
+                     max_len=scfg.max_len, kv_mode=scfg.kv_mode, eos_id=0)
+    return eng, model, params
 
 
 def main(argv=None):
@@ -35,44 +87,33 @@ def main(argv=None):
                     help="use the paged, tiered KV cache (repro.cache)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--hbm-budget-mb", type=float, default=64.0)
+    ap.add_argument("--attn-backend", default="gather",
+                    choices=attn_backend_names(),
+                    help="paged decode attention backend")
     args = ap.parse_args(argv)
+    scfg = ServeConfig(**vars(args))     # argparse dests match field names
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
-    if not cfg.causal:
-        raise SystemExit(f"{cfg.name} is encoder-only: no serving path")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    if args.paged:
-        from repro.cache import TierConfig
-        from repro.serving.paged_engine import PagedEngine
-        tier = TierConfig(page_size=args.page_size,
-                          hbm_budget_bytes=int(args.hbm_budget_mb * 2 ** 20))
-        eng = PagedEngine(model, params, lanes=args.slots,
-                          max_len=args.max_len, tier=tier, eos_id=0)
-    else:
-        eng = Engine(model, params, batch_slots=args.slots,
-                     max_len=args.max_len, kv_mode=args.kv_mode, eos_id=0)
-
-    rng = np.random.default_rng(args.seed)
+    eng, model, _ = build_engine(scfg)
+    cfg = model.cfg
+    rng = np.random.default_rng(scfg.seed)
     t0 = time.time()
-    for rid in range(args.requests):
-        plen = int(rng.integers(4, args.max_len - args.max_new - 1))
+    for rid in range(scfg.requests):
+        plen = int(rng.integers(4, scfg.max_len - scfg.max_new - 1))
         eng.submit(Request(rid=rid,
                            prompt=list(rng.integers(2, cfg.vocab_size,
                                                     plen)),
-                           max_new=args.max_new))
+                           max_new=scfg.max_new))
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
     for r in sorted(done, key=lambda r: r.rid)[:8]:
         print(f"req {r.rid:3d}: prompt={len(r.prompt):3d} tok "
               f"-> {r.out[:8]}{'...' if len(r.out) > 8 else ''}")
-    mode = "paged" if args.paged else f"kv={args.kv_mode}"
+    mode = (f"paged/{scfg.attn_backend}" if scfg.paged
+            else f"kv={scfg.kv_mode}")
     print(f"\n{len(done)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s, {mode})")
-    if args.paged:
+    if scfg.paged:
         print(f"cache stats: {eng.stats()}")
     return done
 

@@ -60,22 +60,25 @@ def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
         return total, {"ce": ce, "aux": aux}
 
     def prefill(params, batch, max_len: int, *, moe_dropless: bool = False,
-                kv_mode: str = "bf16"):
+                kv_mode: str = "bf16", paged_layout: bool = False):
         logits, _, state = T.stack_apply_seq(cfg, params, batch,
                                              want_state=True, remat=False,
                                              max_len=max_len,
                                              moe_dropless=moe_dropless,
-                                             kv_mode=kv_mode)
+                                             kv_mode=kv_mode,
+                                             paged_layout=paged_layout)
         return logits, state
 
     def decode_step(params, state, tokens):
         return T.stack_decode_step(cfg, params, state, tokens)
 
     def paged_decode_step(params, pools, tokens, block_table, lengths, *,
-                          has_warm: bool = True):
+                          has_warm: bool = True, backend: str = "gather",
+                          interpret: bool = True):
         return T.stack_paged_decode_step(cfg, params, pools, tokens,
                                          block_table, lengths,
-                                         has_warm=has_warm)
+                                         has_warm=has_warm, backend=backend,
+                                         interpret=interpret)
 
     def init_state(batch: int, max_len: int, kv_dtype=jnp.bfloat16,
                    kv_mode: str = "bf16", uniform_pos: bool = False):

@@ -221,18 +221,14 @@ def _gqa_cached_decode(cfg, p, x, state, pos, *, local: bool):
 
 
 def _masked_decode_attn(q, k, v, valid):
-    """q: [B,H,1,dh]; k/v: [B,G,W,dh]; valid: bool[B,W]."""
-    B, H, _, dh = q.shape
-    G, W = k.shape[1], k.shape[2]
-    group = H // G
-    qf = (q.astype(jnp.float32) * dh ** -0.5).reshape(B, G, group, dh)
-    logits = jnp.einsum("bghd,bgsd->bghs", qf, k.astype(jnp.float32))
-    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
-    m = jnp.max(logits, axis=-1, keepdims=True)
-    pr = jnp.exp(logits - m)
-    out = jnp.einsum("bghs,bgsd->bghd", pr, v.astype(jnp.float32))
-    out = out / jnp.sum(pr, axis=-1)[..., None]
-    return out.reshape(B, H, 1, v.shape[-1]).astype(q.dtype)
+    """q: [B,H,1,dh]; k/v: [B,G,W,dh]; valid: bool[B,W].
+
+    Delegates to the shared reference attention
+    (kernels/decode_attn/ops.py::masked_decode_attn) -- one implementation
+    keeps the dense engine and the gather backend bit-identical.
+    """
+    from repro.kernels.decode_attn.ops import masked_decode_attn
+    return masked_decode_attn(q[:, :, 0], k, v, valid)[:, :, None, :]
 
 
 def _masked_decode_attn_q8(q, k8, ks, v8, vs, valid):
@@ -344,7 +340,7 @@ def _logits(cfg: ArchConfig, params, x):
 def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
                     remat: bool = True, kv_dtype=jnp.bfloat16,
                     max_len: int | None = None, moe_dropless: bool = False,
-                    kv_mode: str = "bf16"):
+                    kv_mode: str = "bf16", paged_layout: bool = False):
     """Full-sequence forward (train / prefill).
 
     Returns (logits f32[B,S,V], aux_loss, state_or_None).  When
@@ -375,7 +371,9 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
         x, aux, st = run_block(kind, params["head_layers"][i], x, None)
         aux_total += aux
         if want_state:
-            states[f"head_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len, kv_dtype, kv_mode)
+            states[f"head_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len,
+                                                 kv_dtype, kv_mode,
+                                                 paged_layout)
 
     # scanned segment
     if plan.n_scan:
@@ -385,7 +383,8 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
             for j, kind in enumerate(plan.pattern):
                 x, a, st = run_block(kind, layer_p[j], x, None)
                 aux += a
-                sts.append(_pad_seq_state(cfg, kind, st, S, max_len, kv_dtype, kv_mode)
+                sts.append(_pad_seq_state(cfg, kind, st, S, max_len,
+                                          kv_dtype, kv_mode, paged_layout)
                            if want_state else 0)
             x = shard(x, "batch", None, None)
             return (x, aux), tuple(sts)
@@ -402,7 +401,9 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
                                x, None)
         aux_total += aux
         if want_state:
-            states[f"tail_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len, kv_dtype, kv_mode)
+            states[f"tail_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len,
+                                                 kv_dtype, kv_mode,
+                                                 paged_layout)
 
     logits = _logits(cfg, params, x)
     if want_state:
@@ -412,8 +413,14 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
 
 
 def _pad_seq_state(cfg, kind, st, S: int, max_len: int,
-                   kv_dtype=jnp.bfloat16, kv_mode: str = "bf16"):
-    """Turn a full-seq block state into a decode cache of size max_len."""
+                   kv_dtype=jnp.bfloat16, kv_mode: str = "bf16",
+                   paged_layout: bool = False):
+    """Turn a full-seq block state into a decode cache of size max_len.
+
+    ``paged_layout`` keeps local-attention layers at FULL positional layout
+    (no rolling-window compaction): the paged engine scatters prefill KV
+    into absolute-position pages and masks the window at attention time.
+    """
     if st is None:
         return None
     if kind in ("mamba2", "rwkv6"):
@@ -430,7 +437,7 @@ def _pad_seq_state(cfg, kind, st, S: int, max_len: int,
         return {"c": c, "r": r}
     local = kind == "attn_local" or (kind == "shared_attn" and cfg.window > 0)
     k, v = st["k"], st["v"]
-    if local and cfg.window and cfg.window < max_len:
+    if local and cfg.window and cfg.window < max_len and not paged_layout:
         W = cfg.window
         B, G = k.shape[0], k.shape[1]
         # keep the last `window` keys, placed at their rolling slots
@@ -530,20 +537,80 @@ def stack_decode_step(cfg: ArchConfig, params, state, tokens):
 # The KV cache is a pool of fixed-size pages instead of a dense [B, max_len]
 # slab; each request's pages are named by an int32 block table whose entries
 # encode the page's tier (tiers.py): loc > 0 hot slot, loc < 0 warm slot
-# -loc (int8, dequantized in the gather -- the CABA KV site), loc == 0 the
-# reserved trash page (masked by the length mask).  With every page hot the
-# math below is bit-identical to _gqa_cached_decode over a dense cache of
-# the same max_len, which is the paged engine's drop-in guarantee.
+# -loc (int8, dequantized by the attention backend -- the CABA KV site),
+# loc == 0 the reserved trash page (masked by the length mask).  With every
+# page hot the math below is bit-identical to _gqa_cached_decode over a
+# dense cache of the same max_len, which is the paged engine's drop-in
+# guarantee.
+#
+# Coverage is dispatched PER LAYER, not per model: each layer kind maps to
+# a capability (global-GQA / local-window-GQA) and the stack is walked as
+# SEGMENTS -- unstacked head layers, the scanned pattern, unstacked tail
+# layers -- each segment owning one entry of the tiered pool tuple.  The
+# attention math itself is a pluggable backend (kernels/decode_attn/ops.py
+# registry: gather / pallas / pallas_int8).
+
+#: layer kinds the paged path can decode (value: uses cfg.window)
+PAGED_ATTN_KINDS = {"attn": False, "attn_dense": False, "attn_local": True}
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSegment:
+    """One pool-owning slice of the stack: a head/tail layer (n_stack=1) or
+    one scanned pattern position (n_stack=n_scan)."""
+    name: str          # "head_0" | "pat_1" | "tail_0" (state dict keys)
+    kind: str
+    n_stack: int
+
+
+def paged_layer_window(cfg: ArchConfig, kind: str) -> int:
+    """Static attention window for one layer kind (0 = global)."""
+    return cfg.window if PAGED_ATTN_KINDS.get(kind, False) else 0
+
+
+def paged_unsupported_layers(cfg: ArchConfig) -> list:
+    """Layers the paged decode path cannot serve, as "position:kind" tags.
+
+    Per-layer capability dispatch: a model is paged-decodable iff this is
+    empty; the engine surfaces the exact offending layers otherwise."""
+    if cfg.frontend == "audio":
+        return ["*:audio-encoder"]
+    if cfg.mla is not None:
+        return ["*:mla"]
+    plan = stack_plan(cfg)
+    bad = []
+    for i, kind in enumerate(plan.head):
+        if kind not in PAGED_ATTN_KINDS:
+            bad.append(f"head[{i}]:{kind}")
+    for j, kind in enumerate(plan.pattern):
+        if kind not in PAGED_ATTN_KINDS:
+            bad.append(f"pattern[{j}]:{kind}")
+    for i, kind in enumerate(plan.tail):
+        if kind not in PAGED_ATTN_KINDS:
+            bad.append(f"tail[{i}]:{kind}")
+    return bad
+
 
 def paged_decode_supported(cfg: ArchConfig) -> bool:
-    """The paged path covers scanned pure-GQA global-attention stacks."""
+    return not paged_unsupported_layers(cfg)
+
+
+def paged_segments(cfg: ArchConfig) -> tuple:
+    """Pool-tuple layout for a paged-decodable model (head, pattern, tail)."""
     plan = stack_plan(cfg)
-    return (not plan.head and not plan.tail and cfg.mla is None
-            and cfg.frontend != "audio" and not cfg.window
-            and all(k == "attn" for k in plan.pattern))
+    segs = [PagedSegment(f"head_{i}", kind, 1)
+            for i, kind in enumerate(plan.head)]
+    if plan.n_scan:
+        segs += [PagedSegment(f"pat_{j}", kind, plan.n_scan)
+                 for j, kind in enumerate(plan.pattern)]
+    segs += [PagedSegment(f"tail_{i}", kind, 1)
+             for i, kind in enumerate(plan.tail)]
+    return tuple(segs)
 
 
-def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool):
+def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool,
+                      backend: str = "gather", window: int = 0,
+                      interpret: bool = True):
     """One layer's paged GQA decode.
 
     x: [B, 1, D]; pools_j: one layer's slice of a tiers pool dict
@@ -551,48 +618,38 @@ def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool):
     [P_warm, G, ps]); bt: int32[B, max_pages] encoded locations;
     lengths: int32[B].  The write page (lengths // ps) must be hot.
     ``has_warm=False`` (static) promises bt has no warm entries and
-    compiles the int8 gather out entirely.
+    compiles the int8 gather out entirely.  ``backend`` names a registered
+    attention backend (kernels/decode_attn/ops.py).
     """
+    from repro.kernels.decode_attn import ops as attn_ops
     B = x.shape[0]
     kh, vh = pools_j["kh"], pools_j["vh"]
     ps = kh.shape[2]
-    maxp = bt.shape[1]
     q, k_new, v_new = L.gqa_qkv(cfg, p, x, lengths[:, None])
     # append the new token into its (hot) page
     wp, offs = lengths // ps, lengths % ps
     locs_w = jnp.take_along_axis(bt, wp[:, None], axis=1)[:, 0]
     kh = kh.at[locs_w, :, offs].set(k_new[:, :, 0, :].astype(kh.dtype))
     vh = vh.at[locs_w, :, offs].set(v_new[:, :, 0, :].astype(vh.dtype))
-    # gather the whole table through both tiers
-    is_warm = bt < 0
-    hot_idx = jnp.where(bt > 0, bt, 0)
-    warm_idx = jnp.where(is_warm, -bt, 0)
-    sel = is_warm[:, :, None, None, None]
-
-    def gathered(hot_pool, q8_pool, sc_pool):
-        hot = hot_pool[hot_idx].astype(jnp.float32)   # [B, maxp, G, ps, dh]
-        if has_warm:
-            warm = (q8_pool[warm_idx].astype(jnp.float32)
-                    * sc_pool[warm_idx][..., None])
-            hot = jnp.where(sel, warm, hot)
-        return hot.transpose(0, 2, 1, 3, 4).reshape(
-            B, hot_pool.shape[1], maxp * ps, hot_pool.shape[-1])
-
-    k = gathered(kh, pools_j["k8"], pools_j["ks"])
-    v = gathered(vh, pools_j["v8"], pools_j["vs"])
-    valid = jnp.arange(maxp * ps)[None, :] <= lengths[:, None]
-    out = _masked_decode_attn(q, k, v, valid)
-    out = out.transpose(0, 2, 1, 3).reshape(B, 1, -1)
-    return (jnp.einsum("bsf,fd->bsd", out, Q.getw(p, "wo")),
-            dict(pools_j, kh=kh, vh=vh))
+    pools_j = dict(pools_j, kh=kh, vh=vh)
+    out = attn_ops.get_attn_backend(backend)(
+        q[:, :, 0], pools_j, bt, lengths + 1, window=window,
+        has_warm=has_warm, interpret=interpret)           # [B, H, dh]
+    out = out.reshape(B, 1, -1)
+    return jnp.einsum("bsf,fd->bsd", out, Q.getw(p, "wo")), pools_j
 
 
 def block_apply_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
-                             bt, lengths, *, has_warm: bool = True):
-    assert kind == "attn", f"paged decode does not support {kind!r}"
+                             bt, lengths, *, has_warm: bool = True,
+                             backend: str = "gather",
+                             interpret: bool = True):
+    assert kind in PAGED_ATTN_KINDS, \
+        f"paged decode does not support {kind!r}"
     h = L.norm_apply(cfg, p["norm1"], x)
     out, pools_j = _gqa_paged_decode(cfg, p["attn"], h, pools_j, bt, lengths,
-                                     has_warm=has_warm)
+                                     has_warm=has_warm, backend=backend,
+                                     window=paged_layer_window(cfg, kind),
+                                     interpret=interpret)
     x = x + out
     h = L.norm_apply(cfg, p["norm2"], x)
     out, _ = _ffn_apply(cfg, kind, p, h, moe_dropless=True)
@@ -600,31 +657,63 @@ def block_apply_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
 
 
 def stack_paged_decode_step(cfg: ArchConfig, params, pools, tokens, bt,
-                            lengths, *, has_warm: bool = True):
-    """One paged decode step over the scanned stack.
+                            lengths, *, has_warm: bool = True,
+                            backend: str = "gather",
+                            interpret: bool = True):
+    """One paged decode step over the full stack (head + scan + tail).
 
-    pools: tuple (per pattern position) of tier pool dicts with a leading
-    n_scan axis; tokens: int32[B, 1]; bt: int32[B, max_pages]; lengths:
-    int32[B].  Returns (logits [B, 1, V], pools').
+    pools: tuple of tier pool dicts, one per :func:`paged_segments` entry
+    (leading axis = segment n_stack); tokens: int32[B, 1]; bt:
+    int32[B, max_pages]; lengths: int32[B].  Returns (logits, pools').
     """
     plan = stack_plan(cfg)
-    assert paged_decode_supported(cfg), cfg.name
+    bad = paged_unsupported_layers(cfg)
+    if bad:
+        raise ValueError(f"{cfg.name}: paged decode unsupported for layers "
+                         f"{bad}")
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard(x, "batch", None, None)
+    new_pools = list(pools)
+    idx = 0
 
-    # only the hot planes are written per tick; returning the warm planes
-    # through the scan ys would re-materialize the whole int8 tier every
-    # step, so the ys carry kh/vh and the rest passes through untouched
-    def body(x, inp):
-        layer_p, layer_pools = inp
-        hot_updates = []
-        for j, kind in enumerate(plan.pattern):
-            x, pj = block_apply_paged_decode(cfg, kind, layer_p[j], x,
-                                             layer_pools[j], bt, lengths,
-                                             has_warm=has_warm)
-            hot_updates.append({"kh": pj["kh"], "vh": pj["vh"]})
-        return x, tuple(hot_updates)
+    def run_unstacked(kind, layer_p, x, seg_idx):
+        pj = jax.tree.map(lambda a: a[0], pools[seg_idx])
+        x, pj = block_apply_paged_decode(cfg, kind, layer_p, x, pj, bt,
+                                         lengths, has_warm=has_warm,
+                                         backend=backend, interpret=interpret)
+        new_pools[seg_idx] = dict(pools[seg_idx], kh=pj["kh"][None],
+                                  vh=pj["vh"][None])
+        return x
 
-    x, hot = jax.lax.scan(body, x, (params["scan"], pools))
-    new_pools = tuple(dict(pools[j], **hot[j]) for j in range(len(pools)))
-    return _logits(cfg, params, x), new_pools
+    for i, kind in enumerate(plan.head):
+        x = run_unstacked(kind, params["head_layers"][i], x, idx)
+        idx += 1
+
+    if plan.n_scan:
+        npat = len(plan.pattern)
+        scan_pools = tuple(pools[idx + j] for j in range(npat))
+
+        # only the hot planes are written per tick; returning the warm
+        # planes through the scan ys would re-materialize the whole int8
+        # tier every step, so the ys carry kh/vh and the rest passes
+        # through untouched
+        def body(x, inp):
+            layer_p, layer_pools = inp
+            hot_updates = []
+            for j, kind in enumerate(plan.pattern):
+                x, pj = block_apply_paged_decode(
+                    cfg, kind, layer_p[j], x, layer_pools[j], bt, lengths,
+                    has_warm=has_warm, backend=backend, interpret=interpret)
+                hot_updates.append({"kh": pj["kh"], "vh": pj["vh"]})
+            return x, tuple(hot_updates)
+
+        x, hot = jax.lax.scan(body, x, (params["scan"], scan_pools))
+        for j in range(npat):
+            new_pools[idx + j] = dict(pools[idx + j], **hot[j])
+        idx += npat
+
+    for i, kind in enumerate(plan.tail):
+        x = run_unstacked(kind, params["tail_layers"][i], x, idx)
+        idx += 1
+
+    return _logits(cfg, params, x), tuple(new_pools)

@@ -240,9 +240,7 @@ def analyze(compiled, *, arch: str, shape: str, mesh_desc: str,
     hc = hlocost.analyze_text(hlo, n_devices=n_devices,
                               devices_per_pod=devices_per_pod or 0)
     try:
-        cost = compiled.cost_analysis()
-        if isinstance(cost, list):
-            cost = cost[0]
+        cost = hlocost.xla_cost_analysis(compiled)
         raw_flops = float(cost.get("flops", 0.0))
         raw_bytes = float(cost.get("bytes accessed", 0.0))
     except Exception:

@@ -108,6 +108,16 @@ class HloCost:
         self.hbm_by_kind[kind] = self.hbm_by_kind.get(kind, 0.0) + nbytes
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: 0.4.x
+    returns a one-element list of per-partition dicts, newer jax the dict
+    itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def parse_module(text: str) -> dict[str, Computation]:
     comps: dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -126,8 +136,14 @@ def parse_module(text: str) -> dict[str, Computation]:
         if not m:
             continue
         name, typ, opcode, operands, attrs = m.groups()
-        ops = [o.strip().lstrip("%") for o in operands.split(",")]
-        ops = [o.split(" ")[-1].lstrip("%") for o in ops if o]
+        if "%" in operands:
+            # typed operand form: "f32[128,128]{1,0} %name, ..." -- layout
+            # braces contain commas, so split-on-comma corrupts names; the
+            # %-prefixed identifiers are unambiguous.
+            ops = re.findall(r"%([\w.\-]+)", operands)
+        else:
+            ops = [o.strip().lstrip("%") for o in operands.split(",")]
+            ops = [o.split(" ")[-1].lstrip("%") for o in ops if o]
         op = Op(name, typ, opcode, ops, attrs)
         cur.ops.append(op)
         cur.types[name] = typ

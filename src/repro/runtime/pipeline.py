@@ -36,9 +36,10 @@ def pipeline_fn(fn, mesh, axis: str, n_micro: int):
         rank = jax.lax.axis_index(axis)
         T = n_micro + n_stages - 1
         x0 = x_micro[0]
-        # carries start rank-varying (scan VMA typing)
-        buf = jax.lax.pcast(jnp.zeros_like(x0), (axis,), to="varying")
-        outs = jax.lax.pcast(
+        # carries start rank-varying (scan VMA typing; no-op pre-VMA jax)
+        pcast = getattr(jax.lax, "pcast", None) or (lambda x, *a, **k: x)
+        buf = pcast(jnp.zeros_like(x0), (axis,), to="varying")
+        outs = pcast(
             jnp.zeros((n_micro,) + x0.shape, x0.dtype), (axis,),
             to="varying")
         perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
@@ -68,12 +69,16 @@ def pipeline_fn(fn, mesh, axis: str, n_micro: int):
         outs = jax.lax.psum(outs * owner, axis)
         return outs
 
-    other = tuple(a for a in mesh.axis_names if a != axis)
-    return jax.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
-        axis_names={axis},
+    from repro.launch.sharding import manual_shard_map
+    # fully manual (auto_rest=False): the tick scan cannot live inside a
+    # partial-manual region on jax 0.4.x (XLA IsManualSubgroup crash); the
+    # per-rank body is local compute + pod collectives, so unmentioned mesh
+    # axes just compute redundantly on replicated inputs.
+    return manual_shard_map(
+        per_rank, mesh, {axis},
+        (P(axis), P()),
+        P(),
+        auto_rest=False,
     )
 
 

@@ -57,12 +57,15 @@ class PagedEngine(EngineBase):
                  tier: Optional[TierConfig] = None, eos_id: int = 1,
                  seed: int = 0, controller: Optional[AssistController] = None,
                  use_roofline_trigger: bool = True,
-                 max_cold_pages: Optional[int] = None):
+                 max_cold_pages: Optional[int] = None,
+                 backend: str = "gather", interpret: bool = True):
         cfg = model.cfg
-        if not T.paged_decode_supported(cfg):
-            raise ValueError(
-                f"{cfg.name}: paged decode needs a scanned pure-GQA stack")
+        bad = T.paged_unsupported_layers(cfg)
+        if bad:
+            raise ValueError(f"{cfg.name}: paged decode unsupported for "
+                             f"layers {bad}")
         self.model, self.params, self.cfg = model, params, cfg
+        self.backend = backend
         tier = tier or TierConfig()
         if max_len % tier.page_size:
             raise ValueError("max_len must be a multiple of page_size")
@@ -70,9 +73,12 @@ class PagedEngine(EngineBase):
         self.n_lanes = lanes
         self.maxp = max_len // tier.page_size
         plan = T.stack_plan(cfg)
+        self.segments = T.paged_segments(cfg)
         geom = PageGeometry(n_pat=len(plan.pattern), n_scan=plan.n_scan,
                             n_kv_heads=cfg.n_kv_heads,
-                            page_size=tier.page_size, head_dim=cfg.head_dim)
+                            page_size=tier.page_size, head_dim=cfg.head_dim,
+                            seg_stacks=tuple(s.n_stack
+                                             for s in self.segments))
         self.geom = geom
         hot, warm = tier.split_pages(geom.hot_page_bytes, geom.warm_page_bytes)
         if max_cold_pages is None:
@@ -112,11 +118,14 @@ class PagedEngine(EngineBase):
         # the warm gather/dequant is compiled out entirely when the warm
         # tier is disabled (block tables then never hold negative entries)
         self._decode = jax.jit(
-            functools.partial(model.paged_decode_step, has_warm=warm > 0),
+            functools.partial(model.paged_decode_step, has_warm=warm > 0,
+                              backend=backend, interpret=interpret),
             donate_argnums=(1,))
+        # paged_layout keeps local-attention prefill KV at absolute
+        # positions (no rolling compaction) so it scatters into pages
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, max_len, moe_dropless=True,
-                                       kv_mode="bf16"))
+                                       kv_mode="bf16", paged_layout=True))
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -131,6 +140,19 @@ class PagedEngine(EngineBase):
 
     def resident_tokens(self) -> int:
         return sum(r.length for r in self.resident.values())
+
+    def _segment_kv(self, one_state):
+        """Per-segment (k, v) [stack, G, S, dh] from a B=1 prefill state,
+        in :func:`repro.models.transformer.paged_segments` order."""
+        out = []
+        for seg in self.segments:
+            if seg.name.startswith("pat_"):
+                st = one_state["scan"][int(seg.name[4:])]
+                out.append((st["k"][:, 0], st["v"][:, 0]))  # peel B
+            else:                     # head_i / tail_i: B=1 leading == stack
+                st = one_state[seg.name]
+                out.append((st["k"], st["v"]))
+        return out
 
     def _protected(self) -> set[int]:
         """Pages this tick's decode gather will touch (lane requests)."""
@@ -154,9 +176,7 @@ class PagedEngine(EngineBase):
         slots = [self.store.place_hot(p) for p in pages]
         toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
         logits, one_state = self._prefill(self.params, {"tokens": toks})
-        self.store.write_prefill(
-            slots, [(st["k"][:, 0], st["v"][:, 0])
-                    for st in one_state["scan"]], S=plen)
+        self.store.write_prefill(slots, self._segment_kv(one_state), S=plen)
         tok = int(self._sample(logits[:, -1], req.temperature)[0])
         req.out.append(tok)
         self.resident[req.rid] = _RState(req, plen, tok, req.max_new - 1)
@@ -343,6 +363,7 @@ class PagedEngine(EngineBase):
 
     def stats(self) -> dict:
         return {"tick": self.tick_no,
+                "backend": self.backend,
                 "queued": len(self.queue),
                 "parked": len(self.parked),
                 "resident_tokens": self.resident_tokens(),

@@ -15,12 +15,17 @@ step's quantization error is re-injected next step instead of lost.
     bytes(rs + q8 gather)  =   (g-1)/g N (1 + 1/4)      ->  ~37% saved
                                 (+2 B per 256-value block of scales)
 
-Structure: the loss/grad + reduce-scatter + quantize run in a shard_map
-that is MANUAL over the DP axis only (other mesh axes stay under GSPMD, so
-FSDP/TP inside the model is untouched).  The quantized shard leaves the
-manual region pod-sharded; a sharding constraint outside forces the
-all-gather to happen ON THE INT8 PAYLOAD (the compressed leg), after which
-dequantization is a local VPU op.
+Structure: the loss/grad runs OUTSIDE the manual region, vmapped over an
+explicit per-DP-shard lane dimension (``spmd_axis_name`` threads the DP
+axis into the model's internal sharding constraints, so FSDP/TP inside the
+model is untouched); only the scan-free reduce-scatter + quantize body runs
+in a shard_map that is MANUAL over the DP axis.  Keeping control flow
+(the scanned layer stack) out of the partial-manual region matters: XLA's
+SPMD partitioner cannot partition a while loop inside a manual subgroup
+(hlo_sharding_util ``IsManualSubgroup`` check failure).  The quantized
+shard leaves the manual region pod-sharded; a sharding constraint outside
+forces the all-gather to happen ON THE INT8 PAYLOAD (the compressed leg),
+after which dequantization is a local VPU op.
 """
 from __future__ import annotations
 
@@ -102,19 +107,10 @@ def make_compressed_value_and_grad(loss_fn, mesh, cfg: GradCompressionConfig):
     """
     g = dict(zip(mesh.axis_names, mesh.devices.shape))[cfg.axis]
 
-    def per_shard(params, batch, residual):
-        # pcast params to axis-VARYING before differentiating: otherwise the
-        # VMA transpose rule auto-psums the cotangents over the axis (an
-        # uncompressed all-reduce -- exactly what this path replaces).
-        params = jax.tree.map(
-            lambda p: jax.lax.pcast(p, (cfg.axis,), to="varying"), params)
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        flat = flatten_tree(grads)
-        n = flat.shape[0]
-        pad = padded_len(n, g) - n
-        xp = jnp.pad(flat, (0, pad))
-        shard = jax.lax.psum_scatter(xp.reshape(g, -1), cfg.axis,
+    def reduce_quant(lane_flat, residual):
+        # lane_flat: this shard's lane [1, Npad]; residual: [Npad/g].
+        # Scan-free body -> safe inside a partial-manual (auto-axes) region.
+        shard = jax.lax.psum_scatter(lane_flat.reshape(g, -1), cfg.axis,
                                      scatter_dimension=0, tiled=False)
         shard = shard / g                              # mean over DP shards
         if cfg.error_feedback:
@@ -122,27 +118,45 @@ def make_compressed_value_and_grad(loss_fn, mesh, cfg: GradCompressionConfig):
         q, scale = _quant_blocks(shard, cfg.kind)
         new_res = (shard - _dequant_blocks(q, scale)) if cfg.error_feedback \
             else jnp.zeros_like(shard)
-        loss = jax.lax.pmean(loss, cfg.axis)
-        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, cfg.axis), metrics)
-        return loss, metrics, q, scale, new_res
+        return q, scale, new_res
 
-    sharded = jax.shard_map(
-        per_shard, mesh=mesh,
-        in_specs=(P(), P(cfg.axis), P(cfg.axis)),
-        out_specs=(P(), P(), P(cfg.axis), P(cfg.axis), P(cfg.axis)),
-        axis_names={cfg.axis},
-    )
+    from repro.launch.sharding import manual_shard_map
+    # manual over the DP axis only; remaining mesh axes stay auto (GSPMD)
+    sharded = manual_shard_map(
+        reduce_quant, mesh, {cfg.axis},
+        (P(cfg.axis), P(cfg.axis)),
+        (P(cfg.axis), P(cfg.axis), P(cfg.axis)))
 
     rep = NamedSharding(mesh, P())
+    lane_sh = NamedSharding(mesh, P(cfg.axis))
 
     def fn(params, batch, residual):
-        loss, metrics, q, scale, new_res = sharded(params, batch, residual)
+        # One gradient lane per DP shard: vmap over an explicit leading axis
+        # of size g; spmd_axis_name threads cfg.axis into the model's
+        # internal sharding constraints, so the lane dim partitions over the
+        # DP axis and FSDP/TP constraints inside loss_fn keep working.
+        batch_g = jax.tree.map(
+            lambda b: b.reshape((g, b.shape[0] // g) + b.shape[1:]), batch)
+
+        def lane(b):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, b)
+            return loss, metrics, flatten_tree(grads)
+
+        loss_g, metrics_g, flat_g = jax.vmap(
+            lane, spmd_axis_name=cfg.axis)(batch_g)
+        loss = jnp.mean(loss_g)            # equal lanes: mean == global mean
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_g)
+        n = flat_g.shape[1]
+        pad = padded_len(n, g) - n
+        xp = jnp.pad(flat_g, ((0, 0), (0, pad)))
+        xp = jax.lax.with_sharding_constraint(xp, lane_sh)
+        q, scale, new_res = sharded(xp, residual)
         # compressed all-gather leg: constrain the INT8 payload replicated,
         # so GSPMD's all-gather moves 8-bit bytes; dequant is then local.
         q = jax.lax.with_sharding_constraint(q, rep)
         scale = jax.lax.with_sharding_constraint(scale, rep)
         full = _dequant_blocks(q, scale)
-        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
         grads = unflatten_like(params, full[:n])
         return loss, metrics, grads, new_res
 

@@ -1,0 +1,186 @@
+"""Attention-backend equivalence matrix for the paged decode path.
+
+Backends (kernels/decode_attn/ops.py registry): ``gather`` (jnp),
+``pallas`` (bf16 paged kernel), ``pallas_int8`` (tiered kernel, in-VMEM
+warm dequant).  Models: uniform GQA stack, local-attention windows, and a
+non-uniform head/tail stack (MoE first_dense head + tail layer) -- the
+per-layer capability dispatch coverage.
+
+Bars:
+  * hot-only: every backend is TOKEN-IDENTICAL to the dense engine
+  * int8 warm tier in play: backends agree with EACH OTHER (int8 is lossy
+    vs dense, but the representation -- and so the tokens -- must not
+    depend on which backend reads it)
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cache import TierConfig
+from repro.configs import ARCHS, reduced
+from repro.configs.base import MoEConfig
+from repro.kernels.decode_attn.ops import attn_backend_names
+from repro.models import transformer as T
+from repro.models.model import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.paged_engine import PagedEngine
+
+BACKENDS = ("gather", "pallas", "pallas_int8")
+
+HOT_ONLY = TierConfig(page_size=16, hbm_budget_bytes=1 << 30,
+                      enable_warm=False, enable_cold=False)
+
+
+def _model_cfg(kind: str):
+    base = reduced(ARCHS["qwen2-7b"])
+    if kind == "uniform":
+        return base
+    if kind == "local":
+        return dataclasses.replace(base, name="qwen2-local", n_layers=4,
+                                   block_pattern=("attn", "attn_local"),
+                                   window=8)
+    if kind == "headtail":
+        # MoE first_dense -> one unstacked head layer; n_layers % pattern
+        # -> one unstacked tail layer; scan covers the middle
+        return dataclasses.replace(
+            base, name="qwen2-headtail", n_layers=6,
+            block_pattern=("attn", "attn_local"), window=8,
+            moe=MoEConfig(n_routed=4, n_shared=1, top_k=2, d_expert=32,
+                          first_dense=1))
+    raise ValueError(kind)
+
+
+@pytest.fixture(scope="module", params=["uniform", "local", "headtail"])
+def served(request):
+    cfg = _model_cfg(request.param)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(2, 400, 6 + i)) for i in range(3)]
+    dense = Engine(model, params, batch_slots=3, max_len=48, eos_id=0)
+    for i, p in enumerate(prompts):
+        dense.submit(Request(rid=i, prompt=p, max_new=4))
+    want = {r.rid: r.out for r in dense.run()}
+    return cfg, model, params, prompts, want
+
+
+def _run_paged(model, params, prompts, tier, backend, lanes=3):
+    eng = PagedEngine(model, params, lanes=lanes, max_len=48, tier=tier,
+                      eos_id=0, use_roofline_trigger=False, backend=backend)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=4))
+    got = {r.rid: r.out for r in eng.run()}
+    eng.pool.check()
+    return got, eng
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hot_only_token_identical_to_dense(served, backend):
+    cfg, model, params, prompts, want = served
+    got, _ = _run_paged(model, params, prompts, HOT_ONLY, backend)
+    assert got == want, f"{cfg.name}/{backend} diverged from dense"
+
+
+def test_int8_warm_backends_agree(served):
+    """Tight hot tier forces parked pages down to int8; every backend must
+    read the same warm representation to the same tokens."""
+    cfg, model, params, _, want = served
+    plan = T.stack_plan(cfg)
+    from repro.cache import PageGeometry
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads, 16,
+                        cfg.head_dim,
+                        seg_stacks=tuple(s.n_stack
+                                         for s in T.paged_segments(cfg)))
+    # two-page prompts + a 5-hot-page tier: the lane and one parked
+    # request fit hot, admitting the third forces the parked one's pages
+    # down to int8 warm (admit-then-demote, not serialization)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(2, 400, 20 + 2 * i)) for i in range(3)]
+    tier = TierConfig(page_size=16,
+                      hbm_budget_bytes=10 * geom.hot_page_bytes,
+                      hot_fraction=0.5, enable_warm=True, enable_cold=False)
+    outs = {}
+    demoted = {}
+    for backend in BACKENDS:
+        got, eng = _run_paged(model, params, prompts, tier, backend, lanes=1)
+        outs[backend] = got
+        demoted[backend] = eng.stats()["store"]["demote_warm"]
+        assert sorted(got) == [0, 1, 2], f"{backend}: lost requests"
+    assert outs["pallas"] == outs["gather"], cfg.name
+    assert outs["pallas_int8"] == outs["gather"], cfg.name
+    # the test only means something if the warm tier was actually read
+    assert all(d > 0 for d in demoted.values()), demoted
+
+
+def test_registry_names_and_unknown():
+    from repro.kernels.decode_attn import ops
+    assert set(BACKENDS) <= set(attn_backend_names())
+    with pytest.raises(KeyError, match="registered"):
+        ops.get_attn_backend("nope")
+
+
+def test_per_layer_capability_dispatch():
+    """Unsupported layers are reported per layer, not as a whole-model
+    boolean; the engine surfaces them in its error."""
+    from repro.configs.base import SSMConfig
+    for name, cfg in ARCHS.items():
+        r = reduced(cfg)
+        bad = T.paged_unsupported_layers(r)
+        assert T.paged_decode_supported(r) == (not bad)
+    hybrid = dataclasses.replace(
+        reduced(ARCHS["qwen2-7b"]), name="hyb", n_layers=4,
+        block_pattern=("attn", "mamba2"),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32))
+    bad = T.paged_unsupported_layers(hybrid)
+    assert bad == ["pattern[1]:mamba2"]
+    model = build_model(hybrid)
+    with pytest.raises(ValueError, match=r"pattern\[1\]:mamba2"):
+        PagedEngine(model, model.init(jax.random.PRNGKey(0)), lanes=1,
+                    max_len=32, tier=HOT_ONLY)
+
+
+def test_paged_segments_layout():
+    cfg = _model_cfg("headtail")
+    segs = T.paged_segments(cfg)
+    assert [(s.name, s.kind, s.n_stack) for s in segs] == [
+        ("head_0", "attn_dense", 1),
+        ("pat_0", "attn", 2), ("pat_1", "attn_local", 2),
+        ("tail_0", "attn", 1)]
+
+
+def test_tiered_kernel_matches_gather_backend(rng):
+    """Unit-level: the mixed hot/warm Pallas kernel against the gather
+    backend on a random encoded table, global and windowed."""
+    from repro.kernels.decode_attn import ops
+    B, H, G, D, ps, NP = 2, 4, 2, 32, 3, 3
+    hot_n, warm_n = 5, 4
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.bfloat16)
+    pools = {
+        "kh": jnp.asarray(rng.standard_normal((1 + hot_n, G, ps, D)),
+                          jnp.bfloat16),
+        "vh": jnp.asarray(rng.standard_normal((1 + hot_n, G, ps, D)),
+                          jnp.bfloat16),
+        "k8": jnp.asarray(rng.integers(-127, 128, (1 + warm_n, G, ps, D)),
+                          jnp.int8),
+        "v8": jnp.asarray(rng.integers(-127, 128, (1 + warm_n, G, ps, D)),
+                          jnp.int8),
+        "ks": jnp.asarray(rng.uniform(0.005, 0.02, (1 + warm_n, G, ps)),
+                          jnp.float32),
+        "vs": jnp.asarray(rng.uniform(0.005, 0.02, (1 + warm_n, G, ps)),
+                          jnp.float32),
+    }
+    # encoded table: mix of hot (>0), warm (<0), trash (0) entries
+    bt = jnp.asarray([[1, -2, 3], [-1, 2, 0]], jnp.int32)
+    lengths = jnp.asarray([NP * ps, 2 * ps - 1], jnp.int32)
+    for window in (0, 5):
+        ref = ops.attn_backend_gather(q, pools, bt, lengths, window=window)
+        out = ops.attn_backend_pallas_int8(q, pools, bt, lengths,
+                                           window=window)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=2e-2)
+        out2 = ops.attn_backend_pallas(q, pools, bt, lengths, window=window)
+        np.testing.assert_allclose(np.asarray(out2, np.float32),
+                                   np.asarray(ref, np.float32), atol=2e-2)
