@@ -13,7 +13,7 @@ import numpy as np
 
 from benchmarks.common import (CellTerms, DATA_PATTERNS, caba_design_step,
                                load_dryrun, print_table)
-from repro.core.schemes import selector
+from repro.assist.schemes import selector
 
 ALGOS = ("bdi", "fpc", "cpack")
 

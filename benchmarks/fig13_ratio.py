@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.schemes import selector
+from repro.assist.schemes import selector
 from benchmarks.common import DATA_PATTERNS, print_table
 
 N = 64 * 1024  # values per pattern
@@ -24,7 +24,7 @@ def run():
         x = gen(rng, N)
         ratios = selector.measure_ratios(x, schemes)
         best = selector.best_of_all(x, schemes)
-        from repro.core.schemes import quant
+        from repro.assist.schemes import quant
         r8 = quant.compress(x, "int8").ratio() \
             if x.dtype != jnp.int32 else float("nan")
         row = [name] + [round(ratios[s].ratio, 2) if s in ratios else None

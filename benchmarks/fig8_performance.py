@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from benchmarks.common import (CellTerms, caba_design_step, load_dryrun,
                                print_table)
 from repro.configs import ARCHS, reduced
-from repro.core.schemes import selector
+from repro.assist.schemes import selector
 from repro.models.model import build_model
 
 DESIGNS = ("base", "hw_mem", "hw", "caba", "ideal")

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import print_table, time_fn, VPU_OPS
-from repro.core.schemes import bdi, fpc, cpack, planes, quant
+from repro.assist.schemes import bdi, fpc, cpack, planes, quant
 from repro.roofline.analysis import HBM_BW
 
 N = 256 * 1024  # values

@@ -1,12 +1,18 @@
-"""Serving microbenchmark: resident-token capacity and tokens/s across
-tier configurations of the paged KV cache (repro.cache), plus tokens/s per
-ATTENTION BACKEND (kernels/decode_attn/ops.py registry).
+"""Serving microbenchmark: resident-token capacity, tokens/s and decode
+latency percentiles across tier configurations of the paged KV cache
+(repro.cache), plus tokens/s per ATTENTION BACKEND (kernels/decode_attn/
+ops.py registry).
+
+Engines are constructed through ``ServeConfig.build()`` with a nested
+``AssistSpec`` (repro.assist) -- the same unified path serve.py and the
+examples use -- so the benchmark exercises the production construction
+API, not private constructors.
 
 Under ONE fixed HBM budget, three engines admit the same request stream:
 
   hot-only        bf16 pages, no demotion (a dense-quality paged cache)
   hot+warm        LRU demotion to int8 pages (the CABA KV site)
-  hot+warm+cold   plus BDI/FPC-packed host offload with WaSP prefetch
+  hot+warm+cold   plus delta+BDI/FPC-packed host offload with WaSP prefetch
 
 Validation target (the subsystem's acceptance bar): the tiered configs hold
 >= 2x the resident tokens of hot-only under the same HBM budget, while
@@ -19,6 +25,10 @@ cost/benefit is MEASURED -- on CPU the kernels run in interpret mode, so
 absolute numbers only bound relative behavior until the TPU re-measure
 (ROADMAP).
 
+Per-tick decode latency is recorded over the measured window and reported
+as p50/p95/p99 (ms) -- the serving-facing number capacity planning needs,
+not just mean throughput.
+
 ``main(smoke=True)`` shrinks the workload for CI (benchmarks/run.py
 --smoke).
 """
@@ -29,35 +39,64 @@ import time
 import numpy as np
 import jax
 
-from repro.cache import PageGeometry, TierConfig
+from repro.assist import AssistSpec
+from repro.cache import PageGeometry
 from repro.configs import ARCHS, reduced
 from repro.kernels.decode_attn.ops import attn_backend_names
 from repro.models.model import build_model
 from repro.models.transformer import stack_plan
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Request
-from repro.serving.paged_engine import PagedEngine
 from benchmarks.common import print_table
 
 PAGE = 16
+ARCH = "qwen2-7b"
 
 
-def _tier_configs(hbm_budget: int):
+def _assist_specs(hbm_budget: int):
+    base = dict(paged=True, page_size=PAGE, hbm_budget_bytes=hbm_budget)
     return {
-        "hot-only": TierConfig(page_size=PAGE, hbm_budget_bytes=hbm_budget,
-                               enable_warm=False, enable_cold=False),
-        "hot+warm": TierConfig(page_size=PAGE, hbm_budget_bytes=hbm_budget,
-                               hot_fraction=0.5, enable_warm=True,
+        "hot-only": AssistSpec(**base, enable_warm=False, enable_cold=False),
+        "hot+warm": AssistSpec(**base, hot_fraction=0.5, enable_warm=True,
                                enable_cold=False),
-        "hot+warm+cold": TierConfig(page_size=PAGE,
-                                    hbm_budget_bytes=hbm_budget,
-                                    hot_fraction=0.5, enable_warm=True,
-                                    enable_cold=True,
+        "hot+warm+cold": AssistSpec(**base, hot_fraction=0.5,
+                                    enable_warm=True, enable_cold=True,
                                     host_budget_bytes=hbm_budget),
     }
 
 
+def _build(model, params, spec: AssistSpec, lanes: int, max_len: int):
+    scfg = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
+                       max_len=max_len, eos_id=0, assist=spec)
+    eng, _, _ = scfg.build(model, params)
+    return eng
+
+
+def _tick_window(eng, ticks: int):
+    """(tokens/s, per-tick latencies[s]) over a fixed tick window."""
+    t0 = time.time()
+    tok0 = eng.tokens_generated
+    lats = []
+    for _ in range(ticks):
+        t1 = time.time()
+        if not eng.step():
+            break
+        lats.append(time.time() - t1)
+    dt = time.time() - t0
+    tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+    return tps, lats
+
+
+def _pcts(lats) -> dict:
+    """p50/p95/p99 decode-tick latency in ms (zeros if nothing measured)."""
+    if not lats:
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+    ms = np.asarray(lats) * 1e3
+    return {f"p{p}_ms": float(np.percentile(ms, p)) for p in (50, 95, 99)}
+
+
 def run(smoke: bool = False):
-    cfg = reduced(ARCHS["qwen2-7b"])
+    cfg = reduced(ARCHS[ARCH])
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     plan = stack_plan(cfg)
@@ -74,10 +113,9 @@ def run(smoke: bool = False):
 
     results = {}
     rows = []
-    for name, tier in _tier_configs(hbm_budget).items():
+    for name, spec in _assist_specs(hbm_budget).items():
         rng = np.random.default_rng(0)
-        eng = PagedEngine(model, params, lanes=lanes, max_len=max_len,
-                          tier=tier, eos_id=0)
+        eng = _build(model, params, spec, lanes, max_len)
         for rid in range(n_req):
             plen = int(rng.integers(18, 33))
             eng.submit(Request(rid=rid,
@@ -87,39 +125,38 @@ def run(smoke: bool = False):
         # one tick admits everything the budget allows (capacity probe) ...
         eng.step()
         capacity = eng.resident_tokens()
-        # ... then measure decode throughput over a fixed tick window
-        t0 = time.time()
-        tok0 = eng.tokens_generated
-        for _ in range(ticks):
-            if not eng.step():
-                break
-        dt = time.time() - t0
-        tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+        # ... then measure decode throughput + latency over a tick window
+        tps, lats = _tick_window(eng, ticks)
         eng.run(max_ticks=5000)               # drain: everything completes
         s = eng.stats()
+        pct = _pcts(lats)
         results[name] = {"capacity": capacity, "tokens_per_s": tps,
-                         "finished": len(eng.finished), **s}
+                         "finished": len(eng.finished), **pct, **s}
         rows.append([name, eng.store.hot_pages, eng.store.warm_pages,
-                     capacity, round(tps, 1), len(eng.finished),
-                     s["store"]["demote_warm"], s["store"]["demote_cold"],
+                     capacity, round(tps, 1), round(pct["p50_ms"], 1),
+                     round(pct["p95_ms"], 1), round(pct["p99_ms"], 1),
+                     len(eng.finished), s["store"]["demote_warm"],
+                     s["store"]["demote_cold"],
                      s["policy"]["prefetch_hits"]])
         eng.pool.check()
     print_table(
         f"serving_micro: fixed HBM budget = {hbm_budget // 1024} KiB "
         f"({budget_pages} bf16 pages), {n_req} requests",
         ["tier config", "hot_pg", "warm_pg", "resident_tok", "tok/s",
-         "done", "dem_warm", "dem_cold", "pf_hit"], rows)
+         "p50_ms", "p95_ms", "p99_ms", "done", "dem_warm", "dem_cold",
+         "pf_hit"], rows)
     return results
 
 
 def run_backends(smoke: bool = False):
-    """Per-backend tokens/s, hot-only and with the warm tier in play.
+    """Per-backend tokens/s + latency, hot-only and with the warm tier in
+    play.
 
     Every backend decodes the same greedy stream; hot-only outputs must
     agree token-for-token across backends (the equivalence bar the test
     matrix enforces -- re-checked here on live traffic).
     """
-    cfg = reduced(ARCHS["qwen2-7b"])
+    cfg = reduced(ARCHS[ARCH])
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     plan = stack_plan(cfg)
@@ -132,24 +169,23 @@ def run_backends(smoke: bool = False):
     tiers = {
         # budget sized to the stream: an over-large budget allocates an
         # over-large hot pool, and pool size dominates CPU gather time
-        "hot-only": TierConfig(page_size=PAGE,
-                               hbm_budget_bytes=24 * geom.hot_page_bytes,
-                               enable_warm=False, enable_cold=False),
+        "hot-only": dict(hbm_budget_bytes=24 * geom.hot_page_bytes,
+                         enable_warm=False, enable_cold=False),
         # tight hot tier so parked requests actually demote to int8 pages
-        "int8-warm": TierConfig(page_size=PAGE,
-                                hbm_budget_bytes=10 * geom.hot_page_bytes,
-                                hot_fraction=0.5, enable_warm=True,
-                                enable_cold=False),
+        "int8-warm": dict(hbm_budget_bytes=10 * geom.hot_page_bytes,
+                          hot_fraction=0.5, enable_warm=True,
+                          enable_cold=False),
     }
     results = {}
     rows = []
     outputs = {}
-    for tier_name, tier in tiers.items():
+    for tier_name, tier_kw in tiers.items():
         for backend in attn_backend_names():
             rng = np.random.default_rng(0)
-            eng = PagedEngine(model, params, lanes=2, max_len=48, tier=tier,
-                              eos_id=0, use_roofline_trigger=False,
-                              backend=backend)
+            spec = AssistSpec(paged=True, page_size=PAGE,
+                              attn_backend=backend,
+                              use_roofline_trigger=False, **tier_kw)
+            eng = _build(model, params, spec, lanes=2, max_len=48)
             for rid in range(n_req):
                 eng.submit(Request(rid=rid,
                                    prompt=list(rng.integers(
@@ -157,23 +193,21 @@ def run_backends(smoke: bool = False):
                                        int(rng.integers(10, 25)))),
                                    max_new=max_new))
             eng.step()                       # admit + first decode (compile)
-            t0 = time.time()
-            tok0 = eng.tokens_generated
-            for _ in range(ticks):
-                if not eng.step():
-                    break
-            dt = time.time() - t0
-            tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+            tps, lats = _tick_window(eng, ticks)
             done = eng.run(max_ticks=2000)
+            pct = _pcts(lats)
             outputs[(tier_name, backend)] = {r.rid: tuple(r.out)
                                              for r in done}
             results[(tier_name, backend)] = {"tokens_per_s": tps,
-                                             "finished": len(done)}
-            rows.append([tier_name, backend, round(tps, 1), len(done)])
+                                             "finished": len(done), **pct}
+            rows.append([tier_name, backend, round(tps, 1),
+                         round(pct["p50_ms"], 1), round(pct["p99_ms"], 1),
+                         len(done)])
             eng.pool.check()
     print_table("serving_micro backends: tokens/s per attention backend "
                 "(CPU interpret mode)",
-                ["tier", "backend", "tok/s", "done"], rows)
+                ["tier", "backend", "tok/s", "p50_ms", "p99_ms", "done"],
+                rows)
     return results, outputs
 
 
@@ -181,7 +215,7 @@ def run_local_window(smoke: bool = False):
     """A local-attention-window model end-to-end through the paged path
     (per-layer capability dispatch: attn + attn_local segments)."""
     import dataclasses
-    cfg = dataclasses.replace(reduced(ARCHS["qwen2-7b"]), name="qwen2-local",
+    cfg = dataclasses.replace(reduced(ARCHS[ARCH]), name="qwen2-local",
                               n_layers=4,
                               block_pattern=("attn", "attn_local"), window=8)
     model = build_model(cfg)
@@ -189,14 +223,14 @@ def run_local_window(smoke: bool = False):
     plan = stack_plan(cfg)
     geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
                         PAGE, cfg.head_dim)
-    tier = TierConfig(page_size=PAGE,
+    spec = AssistSpec(paged=True, page_size=PAGE,
                       hbm_budget_bytes=16 * geom.hot_page_bytes,
-                      enable_warm=False, enable_cold=False)
+                      enable_warm=False, enable_cold=False,
+                      attn_backend="pallas_int8",
+                      use_roofline_trigger=False)
     n_req = 3 if smoke else 6
     rng = np.random.default_rng(0)
-    eng = PagedEngine(model, params, lanes=2, max_len=48, tier=tier,
-                      eos_id=0, use_roofline_trigger=False,
-                      backend="pallas_int8")
+    eng = _build(model, params, spec, lanes=2, max_len=48)
     for rid in range(n_req):
         eng.submit(Request(rid=rid,
                            prompt=list(rng.integers(2, cfg.vocab_size,

@@ -14,9 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import bdi, fpc, cpack, planes
-from repro.core.controller import (AssistController, RooflineTerms,
-                                   SiteDescriptor)
+from repro.assist import AssistController, RooflineTerms, SiteDescriptor
+from repro.assist.schemes import bdi, fpc, cpack, planes
 
 print("=" * 64)
 print("1. Schemes on adversarial data (all lossless, tested)")

@@ -14,12 +14,13 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeConfig
-from repro.core.controller import AssistController, RooflineTerms, \
-    SiteDescriptor
-from repro.core.schemes import selector
+from repro.assist import (AssistController, AssistSpec, RooflineTerms,
+                          SiteDescriptor)
+from repro.assist.schemes import selector
 from repro.data.pipeline import arch_batch
 from repro.models.model import build_model
-from repro.serving.engine import Engine, Request
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request
 from repro.training.optimizer import OptConfig
 from repro.training.train_loop import (TrainConfig, init_train_state,
                                        make_train_step)
@@ -71,8 +72,9 @@ print()
 print("=" * 64)
 print("4. Serve with an int8-compressed KV cache (CABA KV site)")
 print("=" * 64)
-eng = Engine(model, state["params"], batch_slots=2, max_len=48,
-             kv_mode="int8", eos_id=0)
+scfg = ServeConfig(arch="qwen2-7b", reduced=True, slots=2, max_len=48,
+                   eos_id=0, assist=AssistSpec(kv="int8"))
+eng, _, _ = scfg.build(model, state["params"])
 rng = np.random.default_rng(0)
 for rid in range(3):
     eng.submit(Request(rid=rid, prompt=list(rng.integers(2, 400, 8)),

@@ -10,7 +10,8 @@ import jax
 
 from repro.configs import ARCHS, reduced
 from repro.models.model import build_model
-from repro.serving.engine import Engine, Request
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request
 from repro.serving.kv_cache import kv_bytes
 
 cfg = reduced(ARCHS["gemma3-4b"])      # local:global pattern -> mixed caches
@@ -22,8 +23,9 @@ prompts = [list(rng.integers(2, 400, int(rng.integers(5, 20))))
 
 outs = {}
 for mode in ("bf16", "int8"):
-    eng = Engine(model, params, batch_slots=3, max_len=64, kv_mode=mode,
-                 eos_id=0)
+    scfg = ServeConfig(arch="gemma3-4b", reduced=True, slots=3, max_len=64,
+                       kv_mode=mode, eos_id=0)
+    eng, _, _ = scfg.build(model, params)
     for rid, p in enumerate(prompts):
         eng.submit(Request(rid=rid, prompt=p, max_new=8))
     done = {r.rid: r.out for r in eng.run()}

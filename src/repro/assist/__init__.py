@@ -1,0 +1,50 @@
+"""repro.assist -- CABA's framework claim as a first-class API.
+
+The paper's contribution is not one optimization but a FRAMEWORK: one
+trigger/throttle/priority mechanism (the Assist Warp Controller)
+dispatching many kinds of assist work from one store (the Assist Warp
+Store).  This package is that framework for the TPU port; serving,
+training and the tiered KV cache all consume it instead of carrying
+private copies.
+
+  Assist Warp Store   -> registry.AssistRegistry   (all task kinds)
+  Assist Warp Ctrl    -> controller.AssistController (roofline-driven)
+  Assist subroutines  -> tasks.{CompressTask,PrefetchTask},
+                         memoize.Memoizer; schemes.{bdi,fpc,cpack,planes,
+                         quant} are the compress payloads
+  Deployment config   -> spec.AssistSpec (nested in ServeConfig /
+                         TrainConfig)
+  Site wiring         -> plan.CompressionPlan
+
+Task taxonomy (paper section -> kind):
+  5    data compression  -> kind="compress"  (CompressTask)
+  8.1  memoization       -> kind="memoize"   (Memoizer / MemoizeTask)
+  8.2  prefetching       -> kind="prefetch"  (PrefetchTask)
+
+``repro.core`` re-exports this API one deprecation cycle longer; new code
+imports from here.
+"""
+from repro.assist.controller import AssistController, MIN_HIT_RATE
+from repro.assist.memoize import (MemoConfig, Memoizer, MemoizeTask,
+                                  hit_rate, init_lut, memoized)
+from repro.assist.plan import (CABA_BDI_PLAN, CABA_FULL_PLAN,
+                               CompressionPlan, RAW_PLAN, sites_for_step)
+from repro.assist.registry import (AssistRegistry, REGISTRY,
+                                   default_registry)
+from repro.assist.spec import AssistSpec
+from repro.assist.tasks import (AssistDecision, AssistSubroutine,
+                                AssistTask, CompressTask, KINDS,
+                                PrefetchTask, RooflineTerms, SiteDecision,
+                                SiteDescriptor, HBM_BW, HOST_BW, ICI_BW,
+                                MIN_RATIO, PEAK_FLOPS, VPU_OPS)
+
+__all__ = [
+    "AssistController", "AssistDecision", "AssistRegistry", "AssistSpec",
+    "AssistSubroutine", "AssistTask", "CompressTask", "CompressionPlan",
+    "KINDS", "MemoConfig", "Memoizer", "MemoizeTask", "PrefetchTask",
+    "REGISTRY", "RooflineTerms", "SiteDecision", "SiteDescriptor",
+    "CABA_BDI_PLAN", "CABA_FULL_PLAN", "RAW_PLAN", "sites_for_step",
+    "default_registry", "hit_rate", "init_lut", "memoized",
+    "HBM_BW", "HOST_BW", "ICI_BW", "MIN_HIT_RATE", "MIN_RATIO",
+    "PEAK_FLOPS", "VPU_OPS",
+]

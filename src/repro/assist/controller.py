@@ -1,0 +1,192 @@
+"""AssistController -- the Assist Warp Controller (paper 4.3/4.4).
+
+The AWC's three jobs, reinterpreted for a statically-compiled TPU program,
+and -- since the assist redesign -- owned HERE for every task kind
+(compress / memoize / prefetch), not re-implemented per consumer:
+
+1. TRIGGER (paper: architectural events; here: compile-time site analysis).
+   A task triggers only when the roofline decomposition of the compiled
+   step says the term the site relieves DOMINATES -- the paper's
+   "memory-bandwidth-limited applications are the best candidates"
+   profiling rule (5.3.1) for compression, its compute-bound mirror for
+   memoization (8.1), and queue pressure for prefetch (8.2) -- and the
+   site clears its profitability threshold (paper 6: >=10% compressibility;
+   we default to ratio >= 1.2; memoize: a minimum observed hit rate).
+
+2. THROTTLE (paper: AWC monitors functional-unit utilization and throttles
+   assist-warp deployment).  The work a task adds must fit in the idle
+   headroom: a site is accepted only if the step's modeled bottleneck
+   strictly improves; prefetch gets a per-tick page budget sized so the
+   promotion DMA hides inside one decode tick's shadow.
+
+3. PRIORITY (paper: blocking high-priority decompression vs idle-cycle
+   compression).  Encoded structurally: decompression is fused into
+   consumer kernels (blocking); compression, cold-page packing and
+   prefetch promotion run producer-side/async (off the critical path).
+   The controller only selects WHERE; the priority discipline is fixed by
+   construction (DESIGN.md 2.2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.assist.tasks import (AssistDecision, CompressTask, RooflineTerms,
+                                SiteDescriptor, SiteDecision,
+                                HBM_BW, HOST_BW, ICI_BW, MIN_RATIO,
+                                PEAK_FLOPS, VPU_OPS)
+
+MIN_HIT_RATE = 0.25       # memoize: disable below this observed hit rate
+
+
+class AssistController:
+    """Compile-time AWC: one trigger/throttle/priority for all task kinds."""
+
+    def __init__(self, registry=None, min_ratio: float = MIN_RATIO,
+                 min_hit_rate: float = MIN_HIT_RATE):
+        if registry is None:
+            from repro.assist.registry import REGISTRY
+            registry = REGISTRY
+        self.registry = registry
+        self.min_ratio = min_ratio
+        self.min_hit_rate = min_hit_rate
+
+    def _task(self, scheme: Union[str, CompressTask]) -> CompressTask:
+        if isinstance(scheme, str):
+            return self.registry.get(scheme)
+        return scheme
+
+    # -- compress: trigger ----------------------------------------------------
+    def decide(self, terms: RooflineTerms, site: SiteDescriptor,
+               measured_ratio: float,
+               scheme: Union[str, CompressTask]) -> AssistDecision:
+        """Should this site compress?  (paper 4.4 Dynamic Feedback, static
+        form: roofline terms come from the compiled dry-run.)"""
+        task = self._task(scheme)
+        relieved = getattr(terms, site.term)
+        if relieved < terms.step_time * 0.999:
+            return AssistDecision(site.name, False, "raw", 1.0,
+                                  f"{site.term} term is not the bottleneck "
+                                  f"({relieved:.3e}s < {terms.step_time:.3e}s)")
+        if measured_ratio < self.min_ratio:
+            return AssistDecision(site.name, False, "raw", measured_ratio,
+                                  f"compressibility {measured_ratio:.2f}x below "
+                                  f"threshold {self.min_ratio}x (paper 6 rule)")
+        new_terms = self.modeled_terms(terms, site, measured_ratio, task)
+        if new_terms.step_time >= terms.step_time * 0.999:
+            return AssistDecision(site.name, False, "raw", measured_ratio,
+                                  "throttled: decompression overhead would not "
+                                  "improve the modeled bottleneck (paper 4.4)")
+        return AssistDecision(site.name, True, task.name, measured_ratio,
+                              f"{site.term}-bound and {measured_ratio:.2f}x "
+                              f"compressible -> modeled step "
+                              f"{terms.step_time:.3e}s -> "
+                              f"{new_terms.step_time:.3e}s")
+
+    # -- compress: throttle model ---------------------------------------------
+    def modeled_terms(self, terms: RooflineTerms, site: SiteDescriptor,
+                      ratio: float,
+                      scheme: Union[str, CompressTask]) -> RooflineTerms:
+        """Roofline terms after enabling the site (napkin model the paper's
+        AWC would evaluate before deploying warps)."""
+        task = self._task(scheme)
+        saved = site.bytes_per_step * (1.0 - 1.0 / ratio)
+        decomp_s = site.bytes_per_step * task.decomp_ops_per_byte / VPU_OPS
+        compute = terms.compute + decomp_s
+        memory = terms.memory - (saved / HBM_BW if site.term == "memory" else 0.0)
+        coll = terms.collective - (saved / ICI_BW if site.term == "collective" else 0.0)
+        return RooflineTerms(compute, max(memory, 0.0), max(coll, 0.0))
+
+    # -- memoize: trigger + throttle (paper 8.1) ------------------------------
+    def decide_memoize(self, terms: RooflineTerms, site: SiteDescriptor,
+                       hit_rate: float) -> AssistDecision:
+        """Should this site memoize?  Memoization converts a computational
+        problem into a storage problem (paper 8.1), so the trigger mirrors
+        compression's: the COMPUTE term must dominate, and the observed
+        hit rate must clear the profitability floor -- the old
+        core/memoize.py "caller should disable on low hit rate" note,
+        moved behind the controller where the paper puts it."""
+        if terms.compute < terms.step_time * 0.999:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "compute term is not the bottleneck: "
+                                  "memoization trades storage for compute "
+                                  "(paper 8.1)", kind="memoize")
+        if hit_rate < self.min_hit_rate:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  f"hit rate {hit_rate:.2f} below threshold "
+                                  f"{self.min_hit_rate} (LUT lookups would "
+                                  f"not pay for themselves)", kind="memoize")
+        saved = hit_rate * site.flops_per_step / PEAK_FLOPS
+        lut_s = site.bytes_per_step / HBM_BW        # LUT traffic added
+        new = RooflineTerms(max(terms.compute - saved, 0.0),
+                            terms.memory + lut_s, terms.collective)
+        if new.step_time >= terms.step_time * 0.999:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "throttled: LUT traffic would not improve "
+                                  "the modeled bottleneck (paper 4.4)",
+                                  kind="memoize")
+        speedup = terms.step_time / max(new.step_time, 1e-30)
+        return AssistDecision(site.name, True, "lut", speedup,
+                              f"compute-bound, hit rate {hit_rate:.2f} -> "
+                              f"modeled step {terms.step_time:.3e}s -> "
+                              f"{new.step_time:.3e}s", kind="memoize")
+
+    # -- prefetch: trigger + throttle (paper 8.2) -----------------------------
+    def decide_prefetch(self, terms: Optional[RooflineTerms],
+                        site: SiteDescriptor, *, queued: int,
+                        max_pages: int) -> AssistDecision:
+        """How many queued cold pages may promote this tick?
+
+        Prefetch assist warps are the lowest-priority kind (paper 4.4):
+        they only consume transfer cycles that hide inside the decode
+        tick's shadow.  ``site.bytes_per_step`` is one page's promotion
+        payload; the budget is how many such transfers fit in one modeled
+        step time (floor 1 -- a queued page always makes progress, the
+        paper's guarantee that low-priority warps are not starved)."""
+        if queued == 0:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "prefetch queue empty", kind="prefetch")
+        if max_pages <= 0:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "prefetch disabled (page budget 0)",
+                                  kind="prefetch")
+        if terms is None:
+            return AssistDecision(site.name, True, "coldpage", 1.0,
+                                  "no roofline given: configured budget",
+                                  kind="prefetch", budget=max_pages)
+        transfer_s = site.bytes_per_step / HOST_BW
+        fits = int(terms.step_time / max(transfer_s, 1e-30))
+        budget = max(1, min(max_pages, fits))
+        return AssistDecision(
+            site.name, True, "coldpage", 1.0,
+            f"{queued} queued; {fits} page transfer(s) hide inside one "
+            f"{terms.step_time:.3e}s tick -> budget {budget}",
+            kind="prefetch", budget=budget)
+
+    # -- multi-site planning --------------------------------------------------
+    def plan(self, terms: RooflineTerms,
+             sites: list[tuple[SiteDescriptor, float, str]]) -> list[AssistDecision]:
+        """Greedy multi-site plan: accept sites in order of modeled benefit,
+        updating the terms after each acceptance (so the throttle rule sees
+        the cumulative compute overhead -- the AWC's utilization monitor)."""
+        decisions = []
+        current = terms
+        remaining = list(sites)
+        while remaining:
+            scored = []
+            for i, (site, ratio, scheme) in enumerate(remaining):
+                d = self.decide(current, site, ratio, scheme)
+                gain = (current.step_time
+                        - self.modeled_terms(current, site, ratio, scheme).step_time
+                        if d.enabled else -1.0)
+                scored.append((gain, i, d))
+            gain, i, d = max(scored, key=lambda t: t[0])
+            site, ratio, scheme = remaining.pop(i)
+            decisions.append(d)
+            if d.enabled:
+                current = self.modeled_terms(current, site, ratio, scheme)
+            else:
+                # nothing else can be better under a monotone model
+                for j, (s2, r2, sch2) in enumerate(remaining):
+                    decisions.append(self.decide(current, s2, r2, sch2))
+                break
+        return decisions

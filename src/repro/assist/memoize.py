@@ -1,0 +1,235 @@
+"""Memoization assist (paper 8.1): trade STORAGE for COMPUTE.
+
+The paper's second framework use: when an app is compute-bound, assist
+warps hash computation inputs, look them up in an on-chip LUT, and skip
+redundant computations ("converting the computational problem into a
+storage problem").  Inputs are hashed (optionally after quantization, for
+approximate-tolerant apps); results are cached in the memory hierarchy.
+
+TPU adaptation: XLA's dense dataflow can't skip per-element lanes, so the
+skip happens at BATCH granularity via lax.cond -- the realistic regime on
+TPU, where a kernel either runs or is bypassed:
+
+  * a fixed-size direct-mapped LUT pytree (keys u32[N], values [N, d_out])
+    lives in HBM -- the paper's "available on-chip memory lends itself for
+    use as the LUT" retargeted at the memory hierarchy;
+  * inputs are block-hashed after int-quantization (the paper's hashing of
+    approximate-tolerant inputs);
+  * if EVERY block in the batch hits, the expensive ``fn`` is skipped
+    entirely (the cheap branch of a lax.cond) and results are gathered
+    from the LUT;
+  * otherwise ``fn`` runs once over the batch and the LUT is refreshed.
+
+Like the paper's controller discipline, memoization only pays when
+hit-rate x flops(fn) exceeds the lookup cost.  That rule now lives in the
+AssistController (``decide_memoize``): the ``Memoizer`` task below reports
+its observed hit rate to the controller and disables itself when the
+trigger says the LUT no longer pays -- the paper 4.4 dynamic-feedback
+loop, instead of the old "caller should disable on low hit rate" note.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.assist.tasks import (AssistDecision, RooflineTerms,
+                                SiteDescriptor)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoConfig:
+    lut_slots: int = 4096
+    quant_scale: float = 64.0      # input quantization before hashing
+    key_dtype: object = jnp.uint32
+
+
+def init_lut(cfg: MemoConfig, d_out: int, dtype=jnp.float32):
+    return {
+        "keys": jnp.zeros((cfg.lut_slots,), jnp.uint32),   # 0 = empty
+        "vals": jnp.zeros((cfg.lut_slots, d_out), dtype),
+        "hits": jnp.zeros((), jnp.int32),
+        "calls": jnp.zeros((), jnp.int32),
+    }
+
+
+def _hash_blocks(x, cfg: MemoConfig):
+    """[N, d_in] -> u32[N]: FNV-style hash of the quantized input block."""
+    q = jnp.round(x.astype(jnp.float32) * cfg.quant_scale).astype(jnp.int32)
+    u = q.astype(jnp.uint32)
+    h = jnp.full((x.shape[0],), jnp.uint32(2166136261))
+    # lax.scan over features keeps the unrolled op count flat
+    def step(h, col):
+        return (h ^ col) * jnp.uint32(16777619), None
+    h, _ = jax.lax.scan(step, h, u.T)
+    return jnp.where(h == 0, jnp.uint32(1), h)             # reserve 0=empty
+
+
+def memoized(fn, cfg: MemoConfig = MemoConfig()):
+    """Wrap ``fn: [N, d_in] -> [N, d_out]`` with LUT memoization.
+
+    Returns ``apply(lut, x) -> (y, lut')``; jit-able.  The whole-batch-hit
+    fast path skips ``fn`` via lax.cond (batch-granular skip: the TPU
+    analogue of the paper's per-warp skip).
+    """
+
+    def apply(lut, x):
+        h = _hash_blocks(x, cfg)
+        slot = (h % jnp.uint32(cfg.lut_slots)).astype(jnp.int32)
+        stored = lut["keys"][slot]
+        hit = stored == h
+        all_hit = jnp.all(hit)
+
+        def fast(_):
+            return lut["vals"][slot].astype(x.dtype), lut["keys"], lut["vals"]
+
+        def slow(_):
+            y = fn(x)
+            keys = lut["keys"].at[slot].set(h)
+            vals = lut["vals"].at[slot].set(y.astype(lut["vals"].dtype))
+            # keep hit results from the LUT (approximate-reuse semantics)
+            y = jnp.where(hit[:, None], lut["vals"][slot].astype(y.dtype), y)
+            return y, keys, vals
+
+        y, keys, vals = jax.lax.cond(all_hit, fast, slow, None)
+        new = {
+            "keys": keys, "vals": vals,
+            "hits": lut["hits"] + jnp.sum(hit).astype(jnp.int32),
+            "calls": lut["calls"] + jnp.int32(x.shape[0]),
+        }
+        return y, new
+
+    return apply
+
+
+def hit_rate(lut) -> float:
+    c = int(lut["calls"])
+    return float(lut["hits"]) / c if c else 0.0
+
+
+class Memoizer:
+    """The memoize assist task (paper 8.1) as a stateful object.
+
+    Wraps ``fn: [N, d_in] -> [N, d_out]`` with the LUT machinery above and
+    carries the LUT state, so a consumer holds ONE handle instead of
+    threading ``(lut, apply)`` pairs.  After ``warmup_calls`` block
+    lookups, the task re-consults the AssistController every
+    ``replan_every`` calls and disables itself when the hit rate OVER THE
+    LAST WINDOW falls below the controller's floor -- the dynamic-feedback
+    throttle (paper 4.4) applied to the memoization subroutine.  (Windowed,
+    not lifetime: a distribution shift after a long hot period must shed
+    the LUT promptly, not after the lifetime average finally decays.)
+    """
+
+    kind = "memoize"
+
+    def __init__(self, fn, d_out: int, cfg: MemoConfig = MemoConfig(), *,
+                 name: str = "lut", dtype=jnp.float32,
+                 warmup_calls: int = 1024, replan_every: int = 1024,
+                 controller=None):
+        self.fn = fn
+        self.cfg = cfg
+        self.name = name
+        self.lut = init_lut(cfg, d_out, dtype)
+        self._apply = jax.jit(memoized(fn, cfg))
+        self.warmup_calls = warmup_calls
+        self.replan_every = replan_every
+        self._controller = controller
+        self._since_replan = 0
+        self._calls_host = 0            # mirrors lut["calls"] without a sync
+        self._win_hits = 0              # device counters at last replan
+        self._win_calls = 0
+        self.enabled = True
+
+    def _ctl(self):
+        if self._controller is None:
+            from repro.assist.controller import AssistController
+            self._controller = AssistController()
+        return self._controller
+
+    @property
+    def hit_rate(self) -> float:
+        return hit_rate(self.lut)
+
+    def plan(self, site: SiteDescriptor,
+             roofline: Optional[RooflineTerms]) -> AssistDecision:
+        """Controller verdict for this LUT at the given site.  Uses the
+        observed hit rate once warm; before warmup, the site's
+        ``measured_ratio`` serves as the expected-hit-rate prior."""
+        rate = (self.hit_rate if self._calls_host >= self.warmup_calls
+                else site.measured_ratio)
+        if roofline is None:
+            return AssistDecision(site.name, self.enabled, "lut", 1.0,
+                                  "no roofline given: trigger bypassed",
+                                  kind="memoize")
+        return self._ctl().decide_memoize(roofline, site, rate)
+
+    def apply(self, x):
+        """Memoized call; falls through to ``fn`` once disabled."""
+        if not self.enabled:
+            return self.fn(x)
+        y, self.lut = self._apply(self.lut, x)
+        n = int(x.shape[0])
+        self._since_replan += n
+        self._calls_host += n
+        # the replan branch reads device counters (a sync against the
+        # just-dispatched _apply), so it only runs once per window; all
+        # gating outside it is host-side state
+        if (self._since_replan >= self.replan_every
+                and self._calls_host >= self.warmup_calls):
+            self._since_replan = 0
+            hits, calls = int(self.lut["hits"]), int(self.lut["calls"])
+            win_rate = ((hits - self._win_hits)
+                        / max(calls - self._win_calls, 1))
+            self._win_hits, self._win_calls = hits, calls
+            if win_rate < self._ctl().min_hit_rate:
+                self.enabled = False
+        return y
+
+    __call__ = apply
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "name": self.name,
+                "enabled": self.enabled, "hit_rate": self.hit_rate,
+                "calls": int(self.lut["calls"]),
+                "hits": int(self.lut["hits"])}
+
+
+class MemoizeTask:
+    """Registry entry for the memoize kind: a factory for ``Memoizer``.
+
+    Memoization is function-specific, so the generalized registry holds
+    this prototype; consumers call ``build(fn, d_out=...)`` for a live
+    task (mirrors ``PrefetchTask.build``).
+    """
+
+    kind = "memoize"
+
+    def __init__(self, name: str = "lut"):
+        self.name = name
+
+    def build(self, fn, d_out: int, cfg: MemoConfig = MemoConfig(),
+              **kw) -> Memoizer:
+        return Memoizer(fn, d_out, cfg, name=self.name, **kw)
+
+    def plan(self, site: SiteDescriptor,
+             roofline: Optional[RooflineTerms]) -> AssistDecision:
+        """Prior-based verdict (no LUT yet): ``site.measured_ratio`` is the
+        expected hit rate."""
+        if roofline is None:
+            return AssistDecision(site.name, True, "lut", 1.0,
+                                  "no roofline given: trigger bypassed",
+                                  kind="memoize")
+        from repro.assist.controller import AssistController
+        return AssistController().decide_memoize(roofline, site,
+                                                 site.measured_ratio)
+
+    def apply(self, *a, **kw):
+        raise TypeError("MemoizeTask is a factory; call build(fn, d_out=...) "
+                        "for a live Memoizer")
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "name": self.name}

@@ -1,0 +1,113 @@
+"""AssistRegistry -- the Assist Warp Store (paper 4.3, Figure 5), generalized.
+
+The paper preloads assist-warp subroutines into an on-chip Assist Warp
+Store, indexed by subroutine ID (SR.ID); the AWC triggers them by event.
+On TPU the "subroutines" are jit-able JAX/Pallas callables; the registry
+is the compile-time store that maps ``(kind, name) -> AssistTask`` and is
+consulted by the controller when it wires assist work into a step function.
+
+Since the assist redesign the store holds every task KIND the paper
+frames -- compression schemes (paper 5), the memoization LUT (8.1), and
+cold-page prefetch (8.2) -- not just ``(compress_fn, decompress_fn)``
+pairs.  Like the paper's AWS, it is extensible: registering a new task
+requires no "hardware" change anywhere else -- the flexibility argument
+of 5.1.3 is this API.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.assist.memoize import MemoizeTask
+from repro.assist.schemes import bdi, cpack, fpc, planes, quant
+from repro.assist.tasks import (AssistSubroutine, AssistTask, CompressTask,
+                                KINDS, PrefetchTask)
+
+
+class AssistRegistry:
+    """Registry of assist tasks (the AWS), keyed by (kind, name)."""
+
+    def __init__(self):
+        self._by_key: dict[tuple[str, str], AssistTask] = {}
+        self._next_id = 0
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, name_or_task, compress=None, decompress=None, *,
+                 lossless: bool = False, jit_compress: bool = False,
+                 decomp_ops_per_byte: float = 0.0):
+        """Register a task.
+
+        New API: ``register(task)`` with any ``AssistTask``.
+        Pre-assist API (kept for compatibility): ``register(name,
+        compress, decompress, *, lossless, jit_compress,
+        decomp_ops_per_byte)`` registers a compression scheme.
+        """
+        if isinstance(name_or_task, str):
+            if compress is None or decompress is None:
+                raise TypeError(f"registering scheme {name_or_task!r} "
+                                f"requires both compress and decompress "
+                                f"callables")
+            task = CompressTask(self._next_id, name_or_task, compress,
+                                decompress, lossless, jit_compress,
+                                decomp_ops_per_byte)
+        else:
+            task = name_or_task
+        key = (task.kind, task.name)
+        if key in self._by_key:
+            raise ValueError(f"{task.kind} task {task.name!r} already "
+                             f"registered")
+        if task.kind not in KINDS:
+            raise ValueError(f"unknown task kind {task.kind!r}")
+        self._by_key[key] = task
+        self._next_id += 1
+        return task
+
+    # -- lookup ---------------------------------------------------------------
+
+    def get(self, name: str, kind: str = "compress") -> AssistTask:
+        try:
+            return self._by_key[(kind, name)]
+        except KeyError:
+            raise KeyError(f"no {kind} task {name!r} registered "
+                           f"(have: {self.names(kind)})") from None
+
+    def names(self, kind: str = "compress") -> list[str]:
+        return [n for k, n in self._by_key if k == kind]
+
+    def kinds(self) -> list[str]:
+        return sorted({k for k, _ in self._by_key})
+
+    def tasks(self, kind: Optional[str] = None) -> list[AssistTask]:
+        return [t for (k, _), t in self._by_key.items()
+                if kind is None or k == kind]
+
+    def lossless_names(self) -> list[str]:
+        return [t.name for t in self.tasks("compress") if t.lossless]
+
+
+def default_registry() -> AssistRegistry:
+    """The shipped AWS contents: the paper's three compression algorithms +
+    TPU additions (5), the memoization LUT (8.1), cold-page prefetch (8.2)."""
+    r = AssistRegistry()
+    r.register("bdi", bdi.compress_uniform, bdi.decompress_uniform,
+               lossless=True, jit_compress=False, decomp_ops_per_byte=1.0)
+    r.register("bdi_packed", bdi.compress_packed, bdi.decompress_packed,
+               lossless=True, jit_compress=False, decomp_ops_per_byte=1.0)
+    r.register("fpc", fpc.compress, fpc.decompress,
+               lossless=True, jit_compress=False, decomp_ops_per_byte=2.0)
+    r.register("cpack", cpack.compress, cpack.decompress,
+               lossless=True, jit_compress=True, decomp_ops_per_byte=2.0)
+    r.register("planes", planes.compress, planes.decompress,
+               lossless=True, jit_compress=True, decomp_ops_per_byte=1.5)
+    r.register("int8", lambda x: quant.compress(x, "int8"), quant.decompress,
+               lossless=False, jit_compress=True, decomp_ops_per_byte=1.0)
+    r.register("fp8", lambda x: quant.compress(x, "fp8"), quant.decompress,
+               lossless=False, jit_compress=True, decomp_ops_per_byte=1.0)
+    r.register("int4", lambda x: quant.compress(x, "int4"), quant.decompress,
+               lossless=False, jit_compress=True, decomp_ops_per_byte=1.5)
+    r.register(MemoizeTask("lut"))
+    r.register(PrefetchTask("coldpage"))
+    return r
+
+
+REGISTRY = default_registry()

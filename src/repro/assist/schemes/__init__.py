@@ -1,0 +1,9 @@
+"""Compression schemes -- the compress-kind assist payloads (paper 5).
+
+bdi / fpc / cpack are the paper's algorithms; planes / quant are the TPU
+additions.  selector implements BestOfAll (paper 7.3).  They are
+registered as ``CompressTask``s in ``repro.assist.registry``.
+"""
+from repro.assist.schemes import bdi, cpack, fpc, planes, quant, selector
+
+__all__ = ["bdi", "cpack", "fpc", "planes", "quant", "selector"]

@@ -34,7 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
+from repro.assist import bytesops as bo
 
 # encoding table: id -> (name, word_bytes, delta_bytes)
 # word_bytes == 0 encodes the specials (zeros / rep8 / raw).

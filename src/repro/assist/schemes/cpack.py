@@ -27,7 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
+from repro.assist import bytesops as bo
 
 WORD_BYTES = 4
 NDICT = 4

@@ -29,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
+from repro.assist import bytesops as bo
 
 NDICT = 16  # byte dictionary entries (4-bit codes)
 

@@ -15,7 +15,7 @@ from typing import Any, Callable
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.schemes import bdi, fpc, cpack, planes, quant
+from repro.assist.schemes import bdi, fpc, cpack, planes, quant
 
 # decompression cost in VPU ops per uncompressed byte (napkin-calibrated from
 # the kernel bodies; used by the controller's throttle rule, paper 4.4)

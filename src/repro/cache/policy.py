@@ -1,33 +1,39 @@
 """Admission/eviction/prefetch policy for the tiered KV cache (DESIGN.md 10.3).
 
-Three decisions, three mechanisms:
+Three decisions, three mechanisms -- all three now consumed from the
+assist-task API (``repro.assist``) instead of private re-implementations:
 
-1. WHETHER to compress at all -- the AssistController trigger (paper 4.3/4.4,
-   core/controller.py): build the decode step's roofline terms and ask the
-   controller about the KV site.  Memory-bound and compressible -> demotion
-   enabled; compute-bound (the controller's throttle) -> the cache runs
-   hot-only and parks by capacity alone.  This is CABA's "only deploy assist
-   warps when the relieved term dominates" rule applied to serving.
+1. WHETHER to compress at all -- the compress-task trigger (paper 4.3/4.4,
+   assist/controller.py): build the decode step's roofline terms and ask
+   the AssistController about the KV site.  Memory-bound and compressible
+   -> demotion enabled; compute-bound (the controller's throttle) -> the
+   cache runs hot-only and parks by capacity alone.  This is CABA's "only
+   deploy assist warps when the relieved term dominates" rule applied to
+   serving.
 
 2. WHO gets demoted -- LRU over pages (BlockPool.last_access stamps), with
    the active requests' pages protected so the decode gather never loses a
    page it needs this tick.
 
-3. WHEN cold pages come back -- WaSP-style lookahead prefetch: when a decode
-   lane is within ``prefetch_lookahead`` steps of finishing, the next parked
-   request's cold pages start promoting warm-ward ahead of the swap-in, so
-   the promotion latency hides behind decode ticks instead of stalling
-   admission (prefetch hits vs misses are counted).
+3. WHEN cold pages come back -- the ``prefetch`` assist task
+   (assist/tasks.py ``PrefetchTask``, WaSP-style lookahead): when a decode
+   lane is within ``prefetch_lookahead`` steps of finishing, the next
+   parked request's cold pages start promoting warm-ward ahead of the
+   swap-in, so the promotion latency hides behind decode ticks instead of
+   stalling admission.  The per-tick page budget comes from the
+   controller's prefetch throttle (transfers that hide inside one tick's
+   shadow); promotion itself is an async ``jax.device_put`` drained by a
+   barrier at tick start (paged_engine).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
+from repro.assist import (AssistController, REGISTRY, RooflineTerms,
+                          SiteDescriptor, HBM_BW, PEAK_FLOPS)
 from repro.cache.block_pool import BlockPool, PoolExhausted
 from repro.cache.tiers import TIER_HOT, TIER_WARM, TIER_COLD, TieredKVStore
-from repro.core.controller import (AssistController, RooflineTerms,
-                                   SiteDescriptor, PEAK_FLOPS, HBM_BW)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +47,8 @@ class TierConfig:
     host_budget_bytes: Optional[int] = None   # None = unbounded host spill
     prefetch_lookahead: int = 2
     pages_per_prefetch_tick: int = 2
+    cold_delta: bool = True         # delta-along-sequence before packing
+    async_prefetch: bool = True     # overlap promotion via async device_put
 
     def split_pages(self, hot_page_bytes: int, warm_page_bytes: int):
         """(hot_pages, warm_pages) under the HBM budget.
@@ -78,9 +86,11 @@ def kv_bytes_per_token(cfg) -> float:
     return cfg.n_layers * 2.0 * cfg.n_kv_heads * cfg.head_dim * 2.0
 
 
-def kv_site(cfg, resident_tokens: int) -> SiteDescriptor:
+def kv_site(cfg, resident_tokens: int,
+            measured_ratio: float = 1.0) -> SiteDescriptor:
     return SiteDescriptor("kv", resident_tokens * kv_bytes_per_token(cfg),
-                          "memory", lossless_required=False)
+                          "memory", lossless_required=False,
+                          measured_ratio=measured_ratio)
 
 
 # int8+scales vs bf16 (the warm tier's true HBM ratio for dh-dim heads):
@@ -90,26 +100,32 @@ def warm_ratio(head_dim: int) -> float:
 
 
 class CachePolicy:
-    """LRU + AWC-trigger + prefetch policy over (BlockPool, TieredKVStore)."""
+    """LRU + assist-task policy over (BlockPool, TieredKVStore)."""
 
     def __init__(self, cfg: TierConfig, *,
                  controller: Optional[AssistController] = None,
                  terms: Optional[RooflineTerms] = None,
                  site: Optional[SiteDescriptor] = None,
-                 measured_ratio: float = 1.78):
+                 measured_ratio: float = 1.78,
+                 registry=REGISTRY):
         self.cfg = cfg
+        self.controller = controller or AssistController(registry)
+        self.terms = terms
         self.decision = None
         enabled = cfg.enable_warm
-        if controller is not None and terms is not None and site is not None:
-            self.decision = controller.decide(terms, site, measured_ratio,
-                                              "int8")
+        if terms is not None and site is not None:
+            # the warm tier is the KV compress site: ask the AWC trigger
+            site = dataclasses.replace(site, measured_ratio=measured_ratio)
+            self.decision = self.controller.decide(terms, site,
+                                                   measured_ratio, "int8")
             enabled = enabled and self.decision.enabled
         self.compression_enabled = enabled
         self.cold_enabled = cfg.enable_cold and enabled
-        self._prefetch: list[int] = []          # page ids queued cold->warm
-        self._prefetched: set[int] = set()      # promoted ahead of swap-in
-        self.stats = {"prefetch_issued": 0, "prefetch_hits": 0,
-                      "prefetch_misses": 0}
+        # cold-page promotion is the prefetch assist task
+        self.prefetch = registry.get("coldpage", kind="prefetch").build(
+            pages_per_tick=cfg.pages_per_prefetch_tick,
+            async_promote=cfg.async_prefetch)
+        self.stats = self.prefetch.counters
 
     # -- victim selection ----------------------------------------------------
 
@@ -160,51 +176,34 @@ class CachePolicy:
             except PoolExhausted:      # host budget full; real bugs propagate
                 return False
             # a page demoted back to cold is no longer a usable prefetch
-            self._prefetched.discard(victim)
+            self.prefetch.discard_prefetched(victim)
         return store.n_free_warm >= n
 
-    # -- WaSP-style prefetch -------------------------------------------------
+    # -- prefetch task delegation (WaSP lookahead, paper 8.2) ----------------
 
     def schedule_prefetch(self, page_ids):
         """Queue cold pages of a soon-to-run request for async promotion."""
-        for p in page_ids:
-            if p not in self._prefetch:
-                self._prefetch.append(p)
-                self.stats["prefetch_issued"] += 1
+        self.prefetch.schedule(page_ids)
 
     def drain_prefetch(self, pool: BlockPool, store: TieredKVStore,
                        protected: set[int]):
-        """Promote up to pages_per_prefetch_tick queued cold pages."""
-        budget = self.cfg.pages_per_prefetch_tick
-        while budget > 0 and self._prefetch:
-            pid = self._prefetch[0]
-            if store.tier[pid] != TIER_COLD:      # already resident / freed
-                self._prefetch.pop(0)
-                continue
-            if store.n_free_warm == 0 and \
-                    not self.make_warm_room(pool, store, protected):
+        """Promote queued cold pages up to the controller's page budget."""
+        budget = None
+        if self.terms is not None:
+            site = SiteDescriptor("kv_cold", store.geom.warm_page_bytes,
+                                  "memory", lossless_required=False)
+            d = self.prefetch.plan(site, self.terms)
+            if not d.enabled:
                 return
-            self._prefetch.pop(0)
-            store.promote_to_warm(pid)
-            self._prefetched.add(pid)
-            budget -= 1
+            budget = min(d.budget, self.cfg.pages_per_prefetch_tick)
+        self.prefetch.apply(
+            store, protected,
+            lambda prot: self.make_warm_room(pool, store, prot),
+            is_cold=lambda pid: store.tier[pid] == TIER_COLD,
+            budget=budget)
 
     def account_swap_in(self, page_ids, cold_page_ids):
-        """Called ONCE per successful swap-in of a parked request:
-        ``cold_page_ids`` (still cold when scheduling started) needed a
-        blocking promotion (miss); pages the prefetch queue promoted ahead
-        of time are hits (the WaSP payoff)."""
-        cold = set(cold_page_ids)
-        self.stats["prefetch_misses"] += len(cold)
-        for p in page_ids:
-            if p not in cold and p in self._prefetched:
-                self.stats["prefetch_hits"] += 1
-                self._prefetched.discard(p)
+        self.prefetch.account_swap_in(page_ids, cold_page_ids)
 
     def forget_pages(self, page_ids):
-        """Drop freed pages from prefetch state so recycled page ids can
-        never be miscounted as hits for a different request."""
-        for p in page_ids:
-            self._prefetched.discard(p)
-            if p in self._prefetch:
-                self._prefetch.remove(p)
+        self.prefetch.forget_pages(page_ids)

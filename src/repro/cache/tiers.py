@@ -20,11 +20,22 @@ page be a single int32 consumed by the decode gather and the paged kernel:
 WARM is the CABA KV-compression site (same per-token absmax int8 as
 serving/kv_cache.py, DESIGN.md 4): ~1.8x denser than bf16 in HBM.  COLD
 pages leave HBM entirely: the warm (int8 + scales) representation is packed
-with the best of the lossless schemes in core/schemes (BDI / FPC, RAW
+with the best of the registered lossless compress tasks (BDI / FPC, RAW
 fallback) and parked as a host-memory record -- the Morpheus move of
-spending idle compute to extend effective cache capacity.  Cold round-trips
-back to warm bit-exactly (the lossless bar of test_schemes_property); the
-only lossy edge is hot -> warm quantization, bounded like kv_cache int8.
+spending idle compute to extend effective cache capacity.  Before packing,
+an invertible DELTA-ALONG-SEQUENCE transform (d[t] = x[t] - x[t-1] mod 256
+along the page's token axis) turns the temporal correlation of decode KV
+into near-zero bytes BDI/FPC can actually exploit; the packer tries both
+the raw and delta planes and keeps the smaller, so incompressible pages
+never regress past RAW.  Cold round-trips back to warm bit-exactly (the
+lossless bar of test_schemes_property); the only lossy edge is hot -> warm
+quantization, bounded like kv_cache int8.
+
+Prefetch promotions (cold -> warm ahead of a swap-in) can run ASYNC: the
+unpacked planes are shipped with ``jax.device_put`` (an async host->HBM
+DMA), and the pool write is deferred to ``commit_promotions()`` -- the
+explicit drain barrier the engine runs at tick start, so the transfer
+hides behind the previous decode tick (paper 8.2's helper-thread overlap).
 """
 from __future__ import annotations
 
@@ -37,11 +48,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.cache.block_pool import PoolExhausted
-from repro.core.schemes import bdi, fpc
+from repro.assist.registry import REGISTRY
 from repro.serving.kv_cache import quantize_token
 
 TIER_FREE, TIER_HOT, TIER_WARM, TIER_COLD = -1, 0, 1, 2
-COLD_SCHEMES = ("bdi", "fpc")
+# cold packing consumes the DEFAULT registry's compress tasks, not the
+# scheme modules directly -- per-block BDI and FPC with RAW fallback.
+# (Bound at import: stores don't take a registry; swap here to retarget.)
+COLD_TASKS = {"bdi": REGISTRY.get("bdi_packed"), "fpc": REGISTRY.get("fpc")}
+DELTA_SUFFIX = "+delta"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,23 +114,57 @@ class ColdPage:
     nbytes: int
 
 
-def _pack_cold(x8: np.ndarray):
-    """Pack one int8 plane with the best lossless scheme (RAW fallback)."""
-    arr = jnp.asarray(x8)
+def delta_seq(x8: np.ndarray, axis: int = -2) -> np.ndarray:
+    """Invertible per-page delta along the token (sequence) axis.
+
+    d[0] = x[0]; d[t] = x[t] - x[t-1] (mod 256, int8 two's complement).
+    Decode KV is temporally correlated, so consecutive tokens quantize to
+    nearby codes and the deltas concentrate near zero -- exactly the
+    value distribution BDI's zeros/low-delta encodings and FPC's
+    zero/sign-extended patterns are built for.
+    """
+    x16 = x8.astype(np.int16)
+    first = np.take(x16, [0], axis=axis)
+    d = np.concatenate([first, np.diff(x16, axis=axis)], axis=axis)
+    return d.astype(np.int8)                  # mod-256 wrap
+
+
+def undelta_seq(d8: np.ndarray, axis: int = -2) -> np.ndarray:
+    """Inverse of :func:`delta_seq` (exact under mod-256 arithmetic)."""
+    return np.cumsum(d8.astype(np.int64), axis=axis).astype(np.int8)
+
+
+def _pack_cold(x8: np.ndarray, use_delta: bool = True):
+    """Pack one int8 plane with the best lossless scheme (RAW fallback).
+
+    Tries BDI/FPC on the plane as-is and, when ``use_delta``, on its
+    delta-along-sequence transform; keeps the smallest encoding.  The
+    scheme name records the transform (``"bdi+delta"``) so unpacking can
+    invert it.
+    """
+    planes_to_try = [("", x8)]
+    if use_delta:
+        planes_to_try.append((DELTA_SUFFIX, delta_seq(x8)))
     best_name, best_obj, best_bytes = "raw", np.asarray(x8), x8.nbytes
-    for name in COLD_SCHEMES:
-        c = (bdi.compress_packed(arr) if name == "bdi" else fpc.compress(arr))
-        if c.compressed_bytes() < best_bytes:
-            best_name, best_obj, best_bytes = name, c, c.compressed_bytes()
+    for suffix, plane in planes_to_try:
+        arr = jnp.asarray(plane)
+        for name, task in COLD_TASKS.items():
+            c = task.compress(arr)
+            if c.compressed_bytes() < best_bytes:
+                best_name = name + suffix
+                best_obj, best_bytes = c, c.compressed_bytes()
     return best_name, best_obj, best_bytes
 
 
-def _unpack_cold(name: str, obj) -> np.ndarray:
+def _unpack_cold(name: str, obj, shape) -> np.ndarray:
+    """Inverse of :func:`_pack_cold`: decode, reshape, un-delta."""
     if name == "raw":
-        return obj
-    dec = (bdi.decompress_packed(obj) if name == "bdi"
-           else fpc.decompress(obj))
-    return np.asarray(dec)
+        return np.asarray(obj).reshape(shape)
+    base, delta = name, False
+    if name.endswith(DELTA_SUFFIX):
+        base, delta = name[:-len(DELTA_SUFFIX)], True
+    out = np.asarray(COLD_TASKS[base].decompress(obj)).reshape(shape)
+    return undelta_seq(out) if delta else out
 
 
 # -- jitted page movement (donated pools; one page per call) -----------------
@@ -188,9 +237,10 @@ class TieredKVStore:
     def __init__(self, geom: PageGeometry, num_pages: int, *,
                  hot_pages: int, warm_pages: int,
                  host_budget_bytes: Optional[int] = None,
-                 kv_dtype=jnp.bfloat16):
+                 kv_dtype=jnp.bfloat16, cold_delta: bool = True):
         if hot_pages < 1:
             raise ValueError("need at least one hot page")
+        self.cold_delta = cold_delta
         self.geom = geom
         self.num_pages = num_pages
         self.hot_pages = hot_pages
@@ -223,8 +273,12 @@ class TieredKVStore:
         self._warm_ids: set[int] = set()
         self.cold: dict[int, ColdPage] = {}
         self.cold_bytes = 0
+        # async prefetch promotions awaiting the tick-start drain barrier:
+        # pid -> (warm_slot, per-segment device arrays in flight)
+        self._pending_warm: dict[int, tuple[int, list]] = {}
         self.stats = {"demote_warm": 0, "demote_cold": 0,
-                      "promote_warm": 0, "promote_hot": 0}
+                      "promote_warm": 0, "promote_warm_async": 0,
+                      "promote_hot": 0}
 
     # -- placement queries ---------------------------------------------------
 
@@ -278,6 +332,7 @@ class TieredKVStore:
 
     def release(self, pid: int):
         """Free a page's physical residence (request retired)."""
+        self._pending_warm.pop(pid, None)   # in-flight data no longer needed
         t = self.tier[pid]
         if t == TIER_HOT:
             self._free_hot.append(int(self.slot[pid]))
@@ -328,16 +383,18 @@ class TieredKVStore:
         self.stats["demote_warm"] += 1
 
     def demote_to_cold(self, pid: int):
-        """warm -> cold: pack the int8 planes (BDI/FPC/RAW) into host memory."""
+        """warm -> cold: pack the int8 planes (delta + BDI/FPC, RAW
+        fallback) into host memory."""
         assert self.tier[pid] == TIER_WARM
+        self._commit_one(pid)               # flush any in-flight promotion
         ws = int(self.slot[pid])
         blobs, schemes, scales, nbytes = [], [], [], 0
         for j in range(self.geom.n_segments):
             pj = self.pools[j]
             k8 = np.asarray(pj["k8"][:, ws])
             v8 = np.asarray(pj["v8"][:, ws])
-            kn, ko, kb = _pack_cold(k8)
-            vn, vo, vb = _pack_cold(v8)
+            kn, ko, kb = _pack_cold(k8, self.cold_delta)
+            vn, vo, vb = _pack_cold(v8, self.cold_delta)
             ks = np.asarray(pj["ks"][:, ws])
             vs = np.asarray(pj["vs"][:, ws])
             blobs.append((ko, vo))
@@ -354,9 +411,15 @@ class TieredKVStore:
         self._warm_ids.discard(pid)
         self.stats["demote_cold"] += 1
 
-    def promote_to_warm(self, pid: int):
+    def promote_to_warm(self, pid: int, *, async_: bool = False):
         """cold -> warm: unpack the int8 planes back into the warm pool
-        (bit-exact -- the packing is lossless)."""
+        (bit-exact -- the packing is lossless).
+
+        ``async_=True`` (the prefetch path) ships the planes with
+        ``jax.device_put`` -- an asynchronous host->HBM DMA -- and defers
+        the pool write to :meth:`commit_promotions`, the engine's
+        tick-start drain barrier, so the transfer overlaps the previous
+        decode tick instead of blocking this call."""
         assert self.tier[pid] == TIER_COLD
         if not self._free_warm:
             raise PoolExhausted("warm tier full")
@@ -364,23 +427,61 @@ class TieredKVStore:
         rec = self.cold.pop(pid)
         self.cold_bytes -= rec.nbytes
         g = self.geom
+        in_flight = []
         for j in range(g.n_segments):
             shp = (g.stacks[j], g.n_kv_heads, g.page_size, g.head_dim)
             (kn, vn) = rec.schemes[j]
-            k8 = _unpack_cold(kn, rec.blobs[j][0]).reshape(shp)
-            v8 = _unpack_cold(vn, rec.blobs[j][1]).reshape(shp)
+            k8 = _unpack_cold(kn, rec.blobs[j][0], shp)
+            v8 = _unpack_cold(vn, rec.blobs[j][1], shp)
             ks, vs = rec.scales[j]
-            self.pools = self.pools[:j] + (_write_warm(
-                self.pools[j], ws, jnp.asarray(k8, jnp.int8),
-                jnp.asarray(ks), jnp.asarray(v8, jnp.int8),
-                jnp.asarray(vs)),) + self.pools[j + 1:]
+            if async_:
+                in_flight.append(tuple(
+                    jax.device_put(a) for a in
+                    (np.asarray(k8, np.int8), np.asarray(ks, np.float32),
+                     np.asarray(v8, np.int8), np.asarray(vs, np.float32))))
+            else:
+                self.pools = self.pools[:j] + (_write_warm(
+                    self.pools[j], ws, jnp.asarray(k8, jnp.int8),
+                    jnp.asarray(ks), jnp.asarray(v8, jnp.int8),
+                    jnp.asarray(vs)),) + self.pools[j + 1:]
+        if async_:
+            self._pending_warm[pid] = (ws, in_flight)
+            self.stats["promote_warm_async"] += 1
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
         self._warm_ids.add(pid)
         self.stats["promote_warm"] += 1
 
+    def commit_page(self, pid: int):
+        """Land one page's in-flight promotion now (no-op if none).  Used
+        when a page is about to be read this tick -- joins a decode block
+        table or transitions tier -- ahead of the tick-start barrier."""
+        self._commit_one(pid)
+
+    def _commit_one(self, pid: int):
+        """Land one in-flight async promotion into the warm pool."""
+        pending = self._pending_warm.pop(pid, None)
+        if pending is None:
+            return
+        ws, in_flight = pending
+        for j, (k8, ks, v8, vs) in enumerate(in_flight):
+            jax.block_until_ready((k8, ks, v8, vs))
+            self.pools = self.pools[:j] + (_write_warm(
+                self.pools[j], ws, k8, ks, v8, vs),) + self.pools[j + 1:]
+
+    def commit_promotions(self) -> int:
+        """The explicit drain barrier: land every in-flight async
+        promotion.  The engine calls this at tick start, BEFORE any decode
+        gather or tier transition can read the warm pool, so deferred
+        writes are never observable."""
+        n = len(self._pending_warm)
+        for pid in list(self._pending_warm):
+            self._commit_one(pid)
+        return n
+
     def promote_to_hot(self, pid: int):
         """warm -> hot: dequantize into a hot slot (needed for page writes)."""
         assert self.tier[pid] == TIER_WARM
+        self._commit_one(pid)               # flush any in-flight promotion
         if not self._free_hot:
             raise PoolExhausted("hot tier full")
         ws = int(self.slot[pid])

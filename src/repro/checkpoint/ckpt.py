@@ -54,7 +54,7 @@ def _save_array(path: str, arr: np.ndarray, compress: bool) -> dict:
     """Write one array; returns manifest entry."""
     meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
     if compress and arr.nbytes >= 4096:
-        from repro.core.schemes import bdi
+        from repro.assist.schemes import bdi
         # bf16 saved via uint16 view (numpy has no bf16); bitpattern exact
         view = arr
         if arr.dtype == jnp.bfloat16:
@@ -91,7 +91,7 @@ def _load_array(path: str, meta: dict) -> np.ndarray:
     if _hash(raw) != meta["hash"]:
         raise IOError(f"checkpoint shard corrupt: {path}")
     if meta["scheme"] == "bdi":
-        from repro.core.schemes import bdi
+        from repro.assist.schemes import bdi
         z = np.load(path)
         c = bdi.BDIPacked(stream=jnp.asarray(z["stream"]),
                           offsets=jnp.asarray(z["offsets"]),

@@ -1,12 +1,21 @@
-"""CABA core: the paper's contribution as a composable JAX feature.
+"""DEPRECATED: ``repro.core`` moved to ``repro.assist`` (assist-task API).
 
-Assist Warp Store  -> registry.AssistRegistry
-Assist Warp Ctrl   -> controller.AssistController (roofline-driven)
-Assist subroutines -> schemes.{bdi,fpc,cpack,planes,quant}
-Site wiring        -> policy.CompressionPlan
+The registry/controller/schemes stack became the generalized assist-task
+framework in ``repro.assist`` (compress + memoize + prefetch kinds, one
+AssistController, declarative AssistSpec).  This package re-exports the
+old entry points for one deprecation cycle; new code imports
+``repro.assist`` (see DESIGN.md 11 for the migration map).
 """
-from repro.core.registry import AssistRegistry, REGISTRY, default_registry
-from repro.core.controller import (AssistController, RooflineTerms,
-                                   SiteDescriptor, SiteDecision)
-from repro.core.policy import (CompressionPlan, RAW_PLAN, CABA_BDI_PLAN,
+import warnings as _warnings
+
+_warnings.warn(
+    "repro.core is deprecated: the assist framework moved to repro.assist "
+    "(repro.core.schemes -> repro.assist.schemes, controller/registry/"
+    "memoize/policy likewise); this shim lasts one PR cycle",
+    DeprecationWarning, stacklevel=2)
+
+from repro.assist.registry import AssistRegistry, REGISTRY, default_registry
+from repro.assist.controller import AssistController
+from repro.assist.tasks import (RooflineTerms, SiteDescriptor, SiteDecision)
+from repro.assist.plan import (CompressionPlan, RAW_PLAN, CABA_BDI_PLAN,
                                CABA_FULL_PLAN, sites_for_step)

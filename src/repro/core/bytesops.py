@@ -1,195 +1,9 @@
-"""Byte/word manipulation primitives shared by all compression schemes.
+"""DEPRECATED shim: repro.core.bytesops moved to repro.assist.bytesops."""
+import sys as _sys
+import warnings as _warnings
 
-Everything here is pure-jnp, shape-static, and works in 32-bit mode (no
-jax_enable_x64): 8-byte words are carried as (lo, hi) uint32 pairs.
+import repro.assist.bytesops as _new
 
-TPU mapping note (paper 5.1): the paper operates on 64-byte cache lines in
-warp-wide SIMT lanes.  Our "cache line" is a BLOCK of ``block_bytes`` bytes
-(default 512 B = 256 bf16 values = two 8x128 VREG rows), and lane operations
-become vectorized jnp ops over the trailing word axis.
-"""
-from __future__ import annotations
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-DEFAULT_BLOCK_BYTES = 512  # 256 bf16 values; the TPU "cache line"
-
-
-# ---------------------------------------------------------------------------
-# dtype <-> bytes
-# ---------------------------------------------------------------------------
-
-def to_bytes(x: jax.Array) -> jax.Array:
-    """Reinterpret any array as uint8 with a trailing itemsize axis, flattened.
-
-    Returns a 1-D uint8 array of ``x.size * itemsize`` bytes (little-endian,
-    the native layout on both CPU and TPU).
-    """
-    if x.dtype == jnp.uint8:
-        return x.reshape(-1)
-    b = jax.lax.bitcast_convert_type(x, jnp.uint8)  # [..., itemsize]
-    return b.reshape(-1)
-
-
-def from_bytes(b: jax.Array, dtype, shape) -> jax.Array:
-    """Inverse of :func:`to_bytes`."""
-    dtype = jnp.dtype(dtype)
-    if dtype == jnp.uint8:
-        return b.reshape(shape)
-    itemsize = dtype.itemsize
-    words = jax.lax.bitcast_convert_type(b.reshape(-1, itemsize), dtype)
-    return words.reshape(shape)
-
-
-def pad_to_blocks(flat_u8: jax.Array, block_bytes: int) -> tuple[jax.Array, int]:
-    """Pad a flat byte array to a whole number of blocks; returns (blocks, pad)."""
-    n = flat_u8.shape[0]
-    nblocks = -(-n // block_bytes)
-    pad = nblocks * block_bytes - n
-    if pad:
-        flat_u8 = jnp.concatenate([flat_u8, jnp.zeros((pad,), jnp.uint8)])
-    return flat_u8.reshape(nblocks, block_bytes), pad
-
-
-# ---------------------------------------------------------------------------
-# words <-> bytes   (word sizes 1, 2, 4 as uint32; 8 as (lo, hi) uint32 pairs)
-# ---------------------------------------------------------------------------
-
-def words_from_block(blk: jax.Array, word_bytes: int):
-    """blk: uint8[..., B] -> words.
-
-    word_bytes in {1,2,4}: returns uint32[..., W]
-    word_bytes == 8:       returns (lo, hi) uint32[..., W] pair
-    """
-    B = blk.shape[-1]
-    W = B // word_bytes
-    lead = blk.shape[:-1]
-    if word_bytes == 1:
-        return blk.astype(jnp.uint32)
-    if word_bytes == 2:
-        w = jax.lax.bitcast_convert_type(blk.reshape(*lead, W, 2), jnp.uint16)
-        return w.astype(jnp.uint32)
-    if word_bytes == 4:
-        return jax.lax.bitcast_convert_type(blk.reshape(*lead, W, 4), jnp.uint32)
-    if word_bytes == 8:
-        pairs = jax.lax.bitcast_convert_type(
-            blk.reshape(*lead, W, 2, 4), jnp.uint32)  # [..., W, 2]
-        return pairs[..., 0], pairs[..., 1]  # little-endian: lo first
-    raise ValueError(f"bad word_bytes {word_bytes}")
-
-
-def block_from_words(words, word_bytes: int, block_bytes: int) -> jax.Array:
-    """Inverse of :func:`words_from_block`; returns uint8[..., block_bytes]."""
-    if word_bytes == 1:
-        out = words.astype(jnp.uint8)
-        return out
-    if word_bytes == 2:
-        w16 = words.astype(jnp.uint16)
-        b = jax.lax.bitcast_convert_type(w16, jnp.uint8)  # [..., W, 2]
-        return b.reshape(*b.shape[:-2], block_bytes)
-    if word_bytes == 4:
-        b = jax.lax.bitcast_convert_type(words.astype(jnp.uint32), jnp.uint8)
-        return b.reshape(*b.shape[:-2], block_bytes)
-    if word_bytes == 8:
-        lo, hi = words
-        pair = jnp.stack([lo, hi], axis=-1)  # [..., W, 2]
-        b = jax.lax.bitcast_convert_type(pair, jnp.uint8)  # [..., W, 2, 4]
-        return b.reshape(*b.shape[:-3], block_bytes)
-    raise ValueError(f"bad word_bytes {word_bytes}")
-
-
-# ---------------------------------------------------------------------------
-# signed-range checks and sign extension on uint32 carriers
-# ---------------------------------------------------------------------------
-
-def fits_signed32(u: jax.Array, d_bytes: int) -> jax.Array:
-    """True where the 32-bit two's-complement value in ``u`` fits in d bytes."""
-    if d_bytes >= 4:
-        return jnp.ones(u.shape, bool)
-    half = jnp.uint32(1 << (8 * d_bytes - 1))
-    full = jnp.uint32(1 << (8 * d_bytes))
-    return (u + half) < full  # uint32 wraparound intended
-
-
-def fits_signed64(lo: jax.Array, hi: jax.Array, d_bytes: int) -> jax.Array:
-    """True where the 64-bit value (lo, hi) fits in d signed bytes (d<=4)."""
-    if d_bytes == 4:
-        pos = (hi == 0) & (lo < jnp.uint32(1 << 31))
-        neg = (hi == jnp.uint32(0xFFFFFFFF)) & (lo >= jnp.uint32(1 << 31))
-        return pos | neg
-    in32 = fits_signed32(lo, d_bytes)
-    sign = (lo >> jnp.uint32(8 * d_bytes - 1)) & jnp.uint32(1)
-    hi_ok = jnp.where(sign == 1, hi == jnp.uint32(0xFFFFFFFF), hi == 0)
-    return in32 & hi_ok
-
-
-def sext32(u: jax.Array, d_bytes: int) -> jax.Array:
-    """Sign-extend the low d bytes of ``u`` to a full uint32 carrier."""
-    if d_bytes >= 4:
-        return u
-    shift = 32 - 8 * d_bytes
-    s = jax.lax.bitcast_convert_type(
-        u.astype(jnp.uint32) << jnp.uint32(shift), jnp.int32)
-    s = s >> jnp.int32(shift)  # arithmetic shift on int32
-    return jax.lax.bitcast_convert_type(s, jnp.uint32)
-
-
-def sub64(a_lo, a_hi, b_lo, b_hi):
-    """(a - b) on 64-bit (lo, hi) uint32 pairs, with borrow."""
-    lo = a_lo - b_lo
-    borrow = (a_lo < b_lo).astype(jnp.uint32)
-    hi = a_hi - b_hi - borrow
-    return lo, hi
-
-
-def add64(a_lo, a_hi, b_lo, b_hi):
-    """(a + b) on 64-bit (lo, hi) uint32 pairs, with carry."""
-    lo = a_lo + b_lo
-    carry = (lo < a_lo).astype(jnp.uint32)
-    hi = a_hi + b_hi + carry
-    return lo, hi
-
-
-# ---------------------------------------------------------------------------
-# bit/byte packing
-# ---------------------------------------------------------------------------
-
-_BIT_WEIGHTS = np.array([1, 2, 4, 8, 16, 32, 64, 128], np.uint32)
-
-
-def pack_bits(bits: jax.Array) -> jax.Array:
-    """bool[..., W] -> uint8[..., ceil(W/8)] little-bit-endian."""
-    W = bits.shape[-1]
-    Wp = -(-W // 8) * 8
-    if Wp != W:
-        bits = jnp.concatenate(
-            [bits, jnp.zeros((*bits.shape[:-1], Wp - W), bool)], axis=-1)
-    g = bits.reshape(*bits.shape[:-1], Wp // 8, 8).astype(jnp.uint32)
-    packed = jnp.sum(g * _BIT_WEIGHTS, axis=-1)
-    return packed.astype(jnp.uint8)
-
-
-def unpack_bits(packed: jax.Array, W: int) -> jax.Array:
-    """uint8[..., ceil(W/8)] -> bool[..., W]."""
-    p = packed.astype(jnp.uint32)[..., :, None]
-    bits = (p >> jnp.arange(8, dtype=jnp.uint32)) & jnp.uint32(1)
-    bits = bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8)
-    return bits[..., :W].astype(bool)
-
-
-def pack_low_bytes(u: jax.Array, d_bytes: int) -> jax.Array:
-    """uint32[..., W] -> low d bytes, little-endian: uint8[..., W*d]."""
-    parts = [(u >> jnp.uint32(8 * k)).astype(jnp.uint8) for k in range(d_bytes)]
-    stacked = jnp.stack(parts, axis=-1)  # [..., W, d]
-    return stacked.reshape(*u.shape[:-1], u.shape[-1] * d_bytes)
-
-
-def unpack_low_bytes(b: jax.Array, W: int, d_bytes: int) -> jax.Array:
-    """Inverse of pack_low_bytes: uint8[..., W*d] -> uint32[..., W] (zero-ext)."""
-    g = b.reshape(*b.shape[:-1], W, d_bytes).astype(jnp.uint32)
-    out = jnp.zeros(g.shape[:-1], jnp.uint32)
-    for k in range(d_bytes):
-        out = out | (g[..., k] << jnp.uint32(8 * k))
-    return out
+_warnings.warn("repro.core.bytesops is deprecated; import repro.assist.bytesops",
+               DeprecationWarning, stacklevel=2)
+_sys.modules[__name__] = _new

@@ -1,155 +1,9 @@
-"""AssistController -- the Assist Warp Controller (paper 4.3/4.4).
+"""DEPRECATED shim: repro.core.controller moved to repro.assist.controller."""
+import sys as _sys
+import warnings as _warnings
 
-The AWC's three jobs, reinterpreted for a statically-compiled TPU program:
+import repro.assist.controller as _new
 
-1. TRIGGER (paper: architectural events; here: compile-time site analysis).
-   A compression site (weights / kv / grads / acts / opt-state) triggers only
-   when the roofline decomposition of the compiled step says the term that
-   the site relieves (memory or collective) DOMINATES -- the paper's
-   "memory-bandwidth-limited applications are the best candidates" profiling
-   rule (5.3.1), and the data at the site is compressible enough (paper 6:
-   >=10% compressibility threshold; we default to ratio >= 1.2).
-
-2. THROTTLE (paper: AWC monitors functional-unit utilization and throttles
-   assist-warp deployment).  The decompression work added to the compute term
-   must fit in the idle-compute headroom: we accept a site only if
-       compute' = compute + decomp_ops/VPU_throughput
-       max(compute', memory', collective') < max(compute, memory, collective)
-   i.e. the step's modeled bottleneck strictly improves.  Otherwise the site
-   is rejected -- the analogue of not issuing low-priority assist warps when
-   pipelines are busy.
-
-3. PRIORITY (paper: blocking high-priority decompression vs idle-cycle
-   compression).  Encoded structurally: decompression is fused into consumer
-   kernels (blocking); compression runs producer-side/async (off critical
-   path).  The controller only selects WHERE, the priority discipline is
-   fixed by construction (DESIGN.md 2.2).
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Any
-
-from repro.core.registry import AssistRegistry, REGISTRY
-from repro.core.schemes import selector
-
-# TPU v5e hardware constants (roofline/analysis.py shares these)
-PEAK_FLOPS = 197e12       # bf16 MXU
-HBM_BW = 819e9            # bytes/s
-ICI_BW = 50e9             # bytes/s per link
-VPU_OPS = 4 * 8 * 128 * 940e6  # ~3.9e12 elementwise lanes/s (8x128x4 @ 940MHz)
-
-MIN_RATIO = 1.2           # paper 6: applications with >=10% compressibility;
-                          # we require 20% to clear metadata overheads
-
-
-@dataclasses.dataclass(frozen=True)
-class RooflineTerms:
-    """Per-device seconds for one step (from roofline/analysis.py)."""
-    compute: float
-    memory: float
-    collective: float
-
-    @property
-    def bottleneck(self) -> str:
-        terms = {"compute": self.compute, "memory": self.memory,
-                 "collective": self.collective}
-        return max(terms, key=terms.get)
-
-    @property
-    def step_time(self) -> float:
-        # perfect-overlap lower bound: the dominant term
-        return max(self.compute, self.memory, self.collective)
-
-
-@dataclasses.dataclass(frozen=True)
-class SiteDescriptor:
-    """One compression opportunity in a step function."""
-    name: str                  # e.g. "weights", "kv", "grads"
-    bytes_per_step: float      # uncompressed bytes this site moves per step
-    term: str                  # which roofline term it relieves: memory|collective
-    lossless_required: bool    # grads/kv tolerate lossy; weights in-jit don't
-
-
-@dataclasses.dataclass(frozen=True)
-class SiteDecision:
-    site: str
-    enabled: bool
-    scheme: str
-    ratio: float
-    reason: str
-
-
-class AssistController:
-    """Compile-time AWC: decides which sites compress, with which scheme."""
-
-    def __init__(self, registry: AssistRegistry = REGISTRY,
-                 min_ratio: float = MIN_RATIO):
-        self.registry = registry
-        self.min_ratio = min_ratio
-
-    # -- trigger ------------------------------------------------------------
-    def decide(self, terms: RooflineTerms, site: SiteDescriptor,
-               measured_ratio: float, scheme: str) -> SiteDecision:
-        """Should this site compress?  (paper 4.4 Dynamic Feedback, static
-        form: roofline terms come from the compiled dry-run.)"""
-        relieved = getattr(terms, site.term)
-        if relieved < terms.step_time * 0.999:
-            return SiteDecision(site.name, False, "raw", 1.0,
-                                f"{site.term} term is not the bottleneck "
-                                f"({relieved:.3e}s < {terms.step_time:.3e}s)")
-        if measured_ratio < self.min_ratio:
-            return SiteDecision(site.name, False, "raw", measured_ratio,
-                                f"compressibility {measured_ratio:.2f}x below "
-                                f"threshold {self.min_ratio}x (paper 6 rule)")
-        new_terms = self.modeled_terms(terms, site, measured_ratio, scheme)
-        if new_terms.step_time >= terms.step_time * 0.999:
-            return SiteDecision(site.name, False, "raw", measured_ratio,
-                                "throttled: decompression overhead would not "
-                                "improve the modeled bottleneck (paper 4.4)")
-        return SiteDecision(site.name, True, scheme, measured_ratio,
-                            f"{site.term}-bound and {measured_ratio:.2f}x "
-                            f"compressible -> modeled step "
-                            f"{terms.step_time:.3e}s -> {new_terms.step_time:.3e}s")
-
-    # -- throttle model -----------------------------------------------------
-    def modeled_terms(self, terms: RooflineTerms, site: SiteDescriptor,
-                      ratio: float, scheme: str) -> RooflineTerms:
-        """Roofline terms after enabling the site (napkin model the paper's
-        AWC would evaluate before deploying warps)."""
-        sub = self.registry.get(scheme)
-        saved = site.bytes_per_step * (1.0 - 1.0 / ratio)
-        decomp_s = site.bytes_per_step * sub.decomp_ops_per_byte / VPU_OPS
-        compute = terms.compute + decomp_s
-        memory = terms.memory - (saved / HBM_BW if site.term == "memory" else 0.0)
-        coll = terms.collective - (saved / ICI_BW if site.term == "collective" else 0.0)
-        return RooflineTerms(compute, max(memory, 0.0), max(coll, 0.0))
-
-    # -- site planning ------------------------------------------------------
-    def plan(self, terms: RooflineTerms,
-             sites: list[tuple[SiteDescriptor, float, str]]) -> list[SiteDecision]:
-        """Greedy multi-site plan: accept sites in order of modeled benefit,
-        updating the terms after each acceptance (so the throttle rule sees
-        the cumulative compute overhead -- the AWC's utilization monitor)."""
-        decisions = []
-        current = terms
-        remaining = list(sites)
-        while remaining:
-            scored = []
-            for i, (site, ratio, scheme) in enumerate(remaining):
-                d = self.decide(current, site, ratio, scheme)
-                gain = (current.step_time
-                        - self.modeled_terms(current, site, ratio, scheme).step_time
-                        if d.enabled else -1.0)
-                scored.append((gain, i, d))
-            gain, i, d = max(scored, key=lambda t: t[0])
-            site, ratio, scheme = remaining.pop(i)
-            decisions.append(d)
-            if d.enabled:
-                current = self.modeled_terms(current, site, ratio, scheme)
-            else:
-                # nothing else can be better under a monotone model
-                for j, (s2, r2, sch2) in enumerate(remaining):
-                    decisions.append(self.decide(current, s2, r2, sch2))
-                break
-        return decisions
+_warnings.warn("repro.core.controller is deprecated; import repro.assist.controller",
+               DeprecationWarning, stacklevel=2)
+_sys.modules[__name__] = _new

@@ -1,103 +1,9 @@
-"""Memoization assist (paper 8.1): trade STORAGE for COMPUTE.
+"""DEPRECATED shim: repro.core.memoize moved to repro.assist.memoize."""
+import sys as _sys
+import warnings as _warnings
 
-The paper's second framework use: when an app is compute-bound, assist
-warps hash computation inputs, look them up in an on-chip LUT, and skip
-redundant computations ("converting the computational problem into a
-storage problem").  Inputs are hashed (optionally after quantization, for
-approximate-tolerant apps); results are cached in the memory hierarchy.
+import repro.assist.memoize as _new
 
-TPU adaptation: XLA's dense dataflow can't skip per-element lanes, so the
-skip happens at BATCH granularity via lax.cond -- the realistic regime on
-TPU, where a kernel either runs or is bypassed:
-
-  * a fixed-size direct-mapped LUT pytree (keys u32[N], values [N, d_out])
-    lives in HBM -- the paper's "available on-chip memory lends itself for
-    use as the LUT" retargeted at the memory hierarchy;
-  * inputs are block-hashed after int-quantization (the paper's hashing of
-    approximate-tolerant inputs);
-  * if EVERY block in the batch hits, the expensive ``fn`` is skipped
-    entirely (the cheap branch of a lax.cond) and results are gathered
-    from the LUT;
-  * otherwise ``fn`` runs once over the batch and the LUT is refreshed.
-
-Like the paper's controller discipline, memoization only pays when
-hit-rate x flops(fn) exceeds the lookup cost; `MemoStats` reports the
-observed hit rate so a caller (or the AssistController) can disable it.
-"""
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-
-@dataclasses.dataclass(frozen=True)
-class MemoConfig:
-    lut_slots: int = 4096
-    quant_scale: float = 64.0      # input quantization before hashing
-    key_dtype: object = jnp.uint32
-
-
-def init_lut(cfg: MemoConfig, d_out: int, dtype=jnp.float32):
-    return {
-        "keys": jnp.zeros((cfg.lut_slots,), jnp.uint32),   # 0 = empty
-        "vals": jnp.zeros((cfg.lut_slots, d_out), dtype),
-        "hits": jnp.zeros((), jnp.int64),
-        "calls": jnp.zeros((), jnp.int64),
-    }
-
-
-def _hash_blocks(x, cfg: MemoConfig):
-    """[N, d_in] -> u32[N]: FNV-style hash of the quantized input block."""
-    q = jnp.round(x.astype(jnp.float32) * cfg.quant_scale).astype(jnp.int32)
-    u = q.astype(jnp.uint32)
-    h = jnp.full((x.shape[0],), jnp.uint32(2166136261))
-    # lax.scan over features keeps the unrolled op count flat
-    def step(h, col):
-        return (h ^ col) * jnp.uint32(16777619), None
-    h, _ = jax.lax.scan(step, h, u.T)
-    return jnp.where(h == 0, jnp.uint32(1), h)             # reserve 0=empty
-
-
-def memoized(fn, cfg: MemoConfig = MemoConfig()):
-    """Wrap ``fn: [N, d_in] -> [N, d_out]`` with LUT memoization.
-
-    Returns ``apply(lut, x) -> (y, lut')``; jit-able.  The whole-batch-hit
-    fast path skips ``fn`` via lax.cond (batch-granular skip: the TPU
-    analogue of the paper's per-warp skip).
-    """
-
-    def apply(lut, x):
-        h = _hash_blocks(x, cfg)
-        slot = (h % jnp.uint32(cfg.lut_slots)).astype(jnp.int32)
-        stored = lut["keys"][slot]
-        hit = stored == h
-        all_hit = jnp.all(hit)
-
-        def fast(_):
-            return lut["vals"][slot].astype(x.dtype), lut["keys"], lut["vals"]
-
-        def slow(_):
-            y = fn(x)
-            keys = lut["keys"].at[slot].set(h)
-            vals = lut["vals"].at[slot].set(y.astype(lut["vals"].dtype))
-            # keep hit results from the LUT (approximate-reuse semantics)
-            y = jnp.where(hit[:, None], lut["vals"][slot].astype(y.dtype), y)
-            return y, keys, vals
-
-        y, keys, vals = jax.lax.cond(all_hit, fast, slow, None)
-        new = {
-            "keys": keys, "vals": vals,
-            "hits": lut["hits"] + jnp.sum(hit).astype(jnp.int64),
-            "calls": lut["calls"] + jnp.int64(x.shape[0]),
-        }
-        return y, new
-
-    return apply
-
-
-def hit_rate(lut) -> float:
-    c = int(lut["calls"])
-    return float(lut["hits"]) / c if c else 0.0
+_warnings.warn("repro.core.memoize is deprecated; import repro.assist.memoize",
+               DeprecationWarning, stacklevel=2)
+_sys.modules[__name__] = _new

@@ -1,54 +1,9 @@
-"""Compression-site policies: where CABA plugs into a model (DESIGN.md 4).
+"""DEPRECATED shim: repro.core.policy moved to repro.assist.plan."""
+import sys as _sys
+import warnings as _warnings
 
-A policy describes, for one (arch x shape) cell, the set of compression
-sites, how many bytes each moves per step, which roofline term each relieves,
-and the candidate scheme.  The controller turns policies + roofline terms +
-measured compressibility into decisions; the train/serve step factories read
-the decisions and wire the compressed paths in.
-"""
-from __future__ import annotations
+import repro.assist.plan as _new
 
-import dataclasses
-from typing import Any
-
-from repro.core.controller import SiteDescriptor
-
-
-@dataclasses.dataclass(frozen=True)
-class CompressionPlan:
-    """Static plan consumed by the step factories."""
-    weights: str = "raw"        # "raw" | "bdi" | "planes" | "int8" ...
-    kv: str = "raw"             # "raw" | "int8" | "int4"
-    grads: str = "raw"          # "raw" | "int8" | "fp8"
-    acts: str = "raw"           # remat stash: "raw" | "int8"
-    opt_state: str = "raw"      # "raw" | "int8"
-
-    def enabled_sites(self) -> list[str]:
-        return [f for f in ("weights", "kv", "grads", "acts", "opt_state")
-                if getattr(self, f) != "raw"]
-
-
-RAW_PLAN = CompressionPlan()
-
-# paper-faithful CABA deployment: lossless algorithm on the memory-resident
-# read-many data (weights), compression performed host-side at load (5.3.1)
-CABA_BDI_PLAN = CompressionPlan(weights="bdi")
-
-# beyond-paper full deployment (documented lossy sites, DESIGN.md 2.3)
-CABA_FULL_PLAN = CompressionPlan(weights="planes", kv="int8", grads="fp8",
-                                 acts="int8", opt_state="int8")
-
-
-def sites_for_step(kind: str, *, weight_bytes: float, kv_bytes: float,
-                   grad_bytes: float, act_bytes: float) -> list[SiteDescriptor]:
-    """Candidate sites per step kind with their per-step byte volumes."""
-    sites = []
-    if kind in ("train",):
-        sites.append(SiteDescriptor("grads", grad_bytes, "collective", False))
-        sites.append(SiteDescriptor("acts", act_bytes, "memory", False))
-        sites.append(SiteDescriptor("weights", weight_bytes, "memory", True))
-    if kind in ("prefill", "decode"):
-        sites.append(SiteDescriptor("weights", weight_bytes, "memory", True))
-        if kv_bytes > 0:
-            sites.append(SiteDescriptor("kv", kv_bytes, "memory", False))
-    return sites
+_warnings.warn("repro.core.policy is deprecated; import repro.assist.plan",
+               DeprecationWarning, stacklevel=2)
+_sys.modules[__name__] = _new

@@ -1,83 +1,9 @@
-"""AssistRegistry -- the Assist Warp Store (paper 4.3, Figure 5).
+"""DEPRECATED shim: repro.core.registry moved to repro.assist.registry."""
+import sys as _sys
+import warnings as _warnings
 
-The paper preloads assist-warp subroutines into an on-chip Assist Warp Store,
-indexed by subroutine ID (SR.ID); the AWC triggers them by event.  On TPU the
-"subroutines" are jit-able JAX/Pallas callables; the registry is the
-compile-time store that maps ``SR.ID -> (compress_fn, decompress_fn, traits)``
-and is consulted by the controller when it wires compression into a step
-function.
+import repro.assist.registry as _new
 
-Like the paper's AWS, the registry is extensible: registering a new scheme
-(algorithm) requires no "hardware" change anywhere else -- the flexibility
-argument of 5.1.3 is this API.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Callable
-
-from repro.core.schemes import bdi, cpack, fpc, planes, quant
-
-
-@dataclasses.dataclass(frozen=True)
-class AssistSubroutine:
-    """One registered scheme (paper: one AWS subroutine slot)."""
-    sr_id: int
-    name: str
-    compress: Callable[..., Any]
-    decompress: Callable[[Any], Any]
-    lossless: bool
-    jit_compress: bool        # usable inside jit (fixed-rate)?
-    decomp_ops_per_byte: float
-
-
-class AssistRegistry:
-    """Registry of compression subroutines (the AWS)."""
-
-    def __init__(self):
-        self._by_name: dict[str, AssistSubroutine] = {}
-        self._next_id = 0
-
-    def register(self, name: str, compress, decompress, *, lossless: bool,
-                 jit_compress: bool, decomp_ops_per_byte: float) -> AssistSubroutine:
-        if name in self._by_name:
-            raise ValueError(f"scheme {name!r} already registered")
-        sub = AssistSubroutine(self._next_id, name, compress, decompress,
-                               lossless, jit_compress, decomp_ops_per_byte)
-        self._by_name[name] = sub
-        self._next_id += 1
-        return sub
-
-    def get(self, name: str) -> AssistSubroutine:
-        return self._by_name[name]
-
-    def names(self) -> list[str]:
-        return list(self._by_name)
-
-    def lossless_names(self) -> list[str]:
-        return [n for n, s in self._by_name.items() if s.lossless]
-
-
-def default_registry() -> AssistRegistry:
-    """The shipped AWS contents: the paper's three algorithms + TPU additions."""
-    r = AssistRegistry()
-    r.register("bdi", bdi.compress_uniform, bdi.decompress_uniform,
-               lossless=True, jit_compress=False, decomp_ops_per_byte=1.0)
-    r.register("bdi_packed", bdi.compress_packed, bdi.decompress_packed,
-               lossless=True, jit_compress=False, decomp_ops_per_byte=1.0)
-    r.register("fpc", fpc.compress, fpc.decompress,
-               lossless=True, jit_compress=False, decomp_ops_per_byte=2.0)
-    r.register("cpack", cpack.compress, cpack.decompress,
-               lossless=True, jit_compress=True, decomp_ops_per_byte=2.0)
-    r.register("planes", planes.compress, planes.decompress,
-               lossless=True, jit_compress=True, decomp_ops_per_byte=1.5)
-    r.register("int8", lambda x: quant.compress(x, "int8"), quant.decompress,
-               lossless=False, jit_compress=True, decomp_ops_per_byte=1.0)
-    r.register("fp8", lambda x: quant.compress(x, "fp8"), quant.decompress,
-               lossless=False, jit_compress=True, decomp_ops_per_byte=1.0)
-    r.register("int4", lambda x: quant.compress(x, "int4"), quant.decompress,
-               lossless=False, jit_compress=True, decomp_ops_per_byte=1.5)
-    return r
-
-
-REGISTRY = default_registry()
+_warnings.warn("repro.core.registry is deprecated; import repro.assist.registry",
+               DeprecationWarning, stacklevel=2)
+_sys.modules[__name__] = _new

@@ -1,0 +1,11 @@
+"""DEPRECATED shim: ``repro.core.schemes`` moved to ``repro.assist.schemes``."""
+import sys as _sys
+import warnings as _warnings
+
+from repro.assist import schemes as _schemes
+
+_warnings.warn("repro.core.schemes is deprecated; import "
+               "repro.assist.schemes", DeprecationWarning, stacklevel=2)
+for _n in ("bdi", "cpack", "fpc", "planes", "quant", "selector"):
+    _sys.modules[__name__ + "." + _n] = getattr(_schemes, _n)
+_sys.modules[__name__] = _schemes

@@ -105,8 +105,13 @@ def device_batch(cfg: DataConfig, step: int, sharding=None) -> dict:
 
 
 def arch_batch(arch: ArchConfig, shape: ShapeConfig, step: int, *,
-               seed: int = 0, sharding=None) -> dict:
-    """Batch matching models.model.input_specs for (arch, shape)."""
+               seed: int = 0, sharding=None, eos_id: int = 1) -> dict:
+    """Batch matching models.model.input_specs for (arch, shape).
+
+    ``eos_id`` is the document-separator token; launch drivers thread it
+    from their config so the stream's separator matches the id serving
+    stops on (ServeConfig.eos_id) when train/serve share a vocabulary.
+    """
     rng = np.random.default_rng(seed * 1_000_003 + step)
     B, S = shape.global_batch, shape.seq_len
     if arch.frontend == "audio":
@@ -115,7 +120,7 @@ def arch_batch(arch: ArchConfig, shape: ShapeConfig, step: int, *,
         return {"frames": jnp.asarray(frames, jnp.bfloat16),
                 "labels": jnp.asarray(labels)}
     dcfg = DataConfig(vocab_size=arch.vocab_size, seq_len=S, global_batch=B,
-                      seed=seed + step)
+                      seed=seed + step, eos_id=eos_id)
     if arch.frontend == "vision":
         P = arch.n_patches
         dcfg = dataclasses.replace(dcfg, seq_len=S - P)

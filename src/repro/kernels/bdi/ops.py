@@ -7,8 +7,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
-from repro.core.schemes import bdi as bdi_scheme
+from repro.assist import bytesops as bo
+from repro.assist.schemes import bdi as bdi_scheme
 from repro.kernels.bdi import bdi as bdi_kernel
 from repro.kernels.bdi import ref as bdi_ref
 

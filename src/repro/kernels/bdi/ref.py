@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
+from repro.assist import bytesops as bo
 
 ENC_PARAMS = {"b2d1": (2, 1), "b4d1": (4, 1), "b4d2": (4, 2)}
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.schemes.cpack import (NDICT, CODE_ZERO, CODE_FULL0,
+from repro.assist.schemes.cpack import (NDICT, CODE_ZERO, CODE_FULL0,
                                       CODE_PART0, CODE_ZEXT)
 
 

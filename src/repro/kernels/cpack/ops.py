@@ -7,8 +7,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
-from repro.core.schemes.cpack import CPacked, compress
+from repro.assist import bytesops as bo
+from repro.assist.schemes.cpack import CPacked, compress
 from repro.kernels.cpack import cpack as cpack_kernel
 
 

@@ -1,5 +1,5 @@
 """Oracle for the C-Pack decompress kernel = the scheme-level decoder."""
-from repro.core.schemes.cpack import (compress, decompress, CPacked,
+from repro.assist.schemes.cpack import (compress, decompress, CPacked,
                                       compressed_block_bytes, NDICT,
                                       CODE_ZERO, CODE_FULL0, CODE_PART0,
                                       CODE_ZEXT)

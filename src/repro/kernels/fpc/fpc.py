@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.schemes.fpc import PATTERNS, SEG_WORDS, SEG_BYTES
+from repro.assist.schemes.fpc import PATTERNS, SEG_WORDS, SEG_BYTES
 
 _SEG_SIZES = np.array([int(p[2] * SEG_WORDS) for p in PATTERNS], np.int32)
 

@@ -7,8 +7,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import bytesops as bo
-from repro.core.schemes.fpc import FPCPacked, compress
+from repro.assist import bytesops as bo
+from repro.assist.schemes.fpc import FPCPacked, compress
 from repro.kernels.fpc import fpc as fpc_kernel
 
 

@@ -1,5 +1,5 @@
 """Oracle for the FPC decompress kernel = the scheme-level decoder."""
-from repro.core.schemes.fpc import (compress, decompress, FPCPacked,
+from repro.assist.schemes.fpc import (compress, decompress, FPCPacked,
                                     PATTERNS, SEG_WORDS, SEG_BYTES,
                                     seg_payload_bytes)
 

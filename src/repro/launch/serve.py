@@ -12,65 +12,31 @@
     # ops.py registry): gather (jnp), pallas (bf16 kernel), pallas_int8
     # (tiered kernel, in-VMEM warm dequant)
     ... --paged --attn-backend pallas_int8
+
+Engine construction goes through ``ServeConfig.build()`` (repro.serving.
+config): the CLI's flat flags fold into the config's nested ``AssistSpec``
+(repro.assist), and ``EngineBase.from_config`` picks the dense or paged
+engine -- one construction path for both.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import numpy as np
-import jax
 
-from repro.configs import get_arch, reduced as reduce_cfg
 from repro.kernels.decode_attn.ops import attn_backend_names
-from repro.models.model import build_model
-from repro.serving.engine import Engine, Request
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    """Declarative serving configuration (CLI flags map 1:1).
-
-    ``attn_backend`` picks the paged decode attention implementation from
-    the kernels/decode_attn/ops.py registry; it only applies with
-    ``paged=True``.
-    """
-    arch: str
-    reduced: bool = False
-    requests: int = 8
-    slots: int = 4                  # dense: batch slots; paged: decode lanes
-    max_len: int = 128
-    max_new: int = 12
-    kv_mode: str = "bf16"           # dense engine cache mode (bf16 | int8)
-    seed: int = 0
-    paged: bool = False
-    page_size: int = 16
-    hbm_budget_mb: float = 64.0
-    attn_backend: str = "gather"
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request
 
 
 def build_engine(scfg: ServeConfig):
-    """(engine, model, params) for a ServeConfig."""
-    cfg = get_arch(scfg.arch)
-    if scfg.reduced:
-        cfg = reduce_cfg(cfg)
-    if not cfg.causal:
-        raise SystemExit(f"{cfg.name} is encoder-only: no serving path")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(scfg.seed))
-    if scfg.paged:
-        from repro.cache import TierConfig
-        from repro.serving.paged_engine import PagedEngine
-        tier = TierConfig(page_size=scfg.page_size,
-                          hbm_budget_bytes=int(scfg.hbm_budget_mb * 2 ** 20))
-        eng = PagedEngine(model, params, lanes=scfg.slots,
-                          max_len=scfg.max_len, tier=tier, eos_id=0,
-                          backend=scfg.attn_backend)
-    else:
-        eng = Engine(model, params, batch_slots=scfg.slots,
-                     max_len=scfg.max_len, kv_mode=scfg.kv_mode, eos_id=0)
-    return eng, model, params
+    """(engine, model, params) for a ServeConfig.
+
+    Thin alias of :meth:`ServeConfig.build`, kept for callers of the
+    pre-assist API.
+    """
+    return scfg.build()
 
 
 def main(argv=None):
@@ -83,6 +49,8 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--kv-mode", default="bf16", choices=("bf16", "int8"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=0,
+                    help="end-of-sequence token id (stops a request)")
     ap.add_argument("--paged", action="store_true",
                     help="use the paged, tiered KV cache (repro.cache)")
     ap.add_argument("--page-size", type=int, default=16)
@@ -93,7 +61,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     scfg = ServeConfig(**vars(args))     # argparse dests match field names
 
-    eng, model, _ = build_engine(scfg)
+    eng, model, _ = scfg.build()
     cfg = model.cfg
     rng = np.random.default_rng(scfg.seed)
     t0 = time.time()
@@ -109,11 +77,12 @@ def main(argv=None):
     for r in sorted(done, key=lambda r: r.rid)[:8]:
         print(f"req {r.rid:3d}: prompt={len(r.prompt):3d} tok "
               f"-> {r.out[:8]}{'...' if len(r.out) > 8 else ''}")
-    mode = (f"paged/{scfg.attn_backend}" if scfg.paged
-            else f"kv={scfg.kv_mode}")
+    spec = scfg.assist
+    mode = (f"paged/{spec.attn_backend}" if spec.paged
+            else f"kv={spec.kv}")
     print(f"\n{len(done)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s, {mode})")
-    if scfg.paged:
+    if spec.paged:
         print(f"cache stats: {eng.stats()}")
     return done
 

@@ -20,6 +20,7 @@ import time
 import numpy as np
 import jax
 
+from repro.assist import AssistSpec
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import arch_batch
@@ -27,7 +28,6 @@ from repro.models.model import build_model
 from repro.training.optimizer import OptConfig
 from repro.training.train_loop import (TrainConfig, make_train_step,
                                        init_train_state)
-from repro.training.grad_compress import GradCompressionConfig
 from repro.checkpoint.ckpt import CkptConfig
 from repro.runtime.fault_tolerance import Supervisor, SupervisorConfig
 from repro.launch.sharding import ShardingRules
@@ -47,6 +47,11 @@ def main(argv=None):
                     choices=(None, "int8"))
     ap.add_argument("--grad-compress-axis", default=None,
                     help="mesh axis for compressed grad collective")
+    ap.add_argument("--grad-compress-kind", default="int8",
+                    choices=("int8", "fp8"),
+                    help="grad-collective scheme (with --grad-compress-axis)")
+    ap.add_argument("--eos-id", type=int, default=1,
+                    help="document-separator token in the synthetic stream")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -60,20 +65,24 @@ def main(argv=None):
     model = build_model(cfg)
 
     mesh = None
-    gcc = None
     if args.grad_compress_axis:
         n = len(jax.devices())
         mesh = make_mesh_for(n, model=1, pod=2 if n % 2 == 0 else 1)
-        gcc = GradCompressionConfig(axis=args.grad_compress_axis, kind="int8")
 
+    # declarative assist sites: the train loop derives the concrete
+    # grad-collective / optimizer-state knobs from this spec
+    spec = AssistSpec(
+        grads=args.grad_compress_kind if args.grad_compress_axis else "raw",
+        grad_axis=args.grad_compress_axis or "pod",
+        opt_state=args.opt_compression or "raw")
     tcfg = TrainConfig(
         opt=OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
-                      decay_steps=args.steps,
-                      state_compression=args.opt_compression),
-        grad_accum=args.grad_accum, grad_compression=gcc)
+                      decay_steps=args.steps),
+        grad_accum=args.grad_accum, assist=spec)
 
     step_fn = jax.jit(make_train_step(model, tcfg, mesh))
-    data_fn = lambda s: arch_batch(cfg, shape, s, seed=args.seed)
+    data_fn = lambda s: arch_batch(cfg, shape, s, seed=args.seed,
+                                   eos_id=args.eos_id)
 
     def mk_state():
         return init_train_state(model, tcfg, jax.random.PRNGKey(args.seed),

@@ -43,8 +43,26 @@ class EngineBase:
     """Request intake + sampling shared by the dense and paged engines.
 
     Subclasses provide ``self.queue`` / ``self.rng`` and call
-    ``_init_intake()`` from their constructor.
+    ``_init_intake()`` from their constructor.  ``from_config`` is the
+    unified construction path: one ``ServeConfig`` (with its nested
+    ``AssistSpec``) builds either engine, so callers never touch the
+    divergent constructor signatures directly.
     """
+
+    @classmethod
+    def from_config(cls, scfg, model, params) -> "EngineBase":
+        """Build the engine a ServeConfig describes (dense or paged)."""
+        spec = scfg.assist
+        if spec.paged:
+            from repro.serving.paged_engine import PagedEngine
+            return PagedEngine(
+                model, params, lanes=scfg.slots, max_len=scfg.max_len,
+                tier=scfg.tier_config(), eos_id=scfg.eos_id,
+                seed=scfg.seed, backend=spec.attn_backend,
+                use_roofline_trigger=spec.use_roofline_trigger)
+        return Engine(model, params, batch_slots=scfg.slots,
+                      max_len=scfg.max_len, kv_mode=spec.kv,
+                      eos_id=scfg.eos_id, seed=scfg.seed)
 
     def _init_intake(self):
         self._seen_rids: set[int] = set()

@@ -30,12 +30,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.assist import AssistController
 from repro.cache import (BlockPool, CachePolicy, PageGeometry, TierConfig,
                          TieredKVStore, TIER_COLD, TIER_WARM,
                          decode_roofline_terms)
 from repro.cache.block_pool import PoolExhausted
 from repro.cache.policy import kv_site, warm_ratio
-from repro.core.controller import AssistController
 from repro.models import transformer as T
 from repro.models.model import ModelFns
 from repro.serving.engine import EngineBase, Request
@@ -92,7 +92,8 @@ class PagedEngine(EngineBase):
         self.pool = BlockPool(num_pages, tier.page_size)
         self.store = TieredKVStore(geom, num_pages, hot_pages=hot,
                                    warm_pages=warm,
-                                   host_budget_bytes=tier.host_budget_bytes)
+                                   host_budget_bytes=tier.host_budget_bytes,
+                                   cold_delta=tier.cold_delta)
         terms = site = None
         if use_roofline_trigger:
             resident_est = hot * tier.page_size
@@ -216,6 +217,10 @@ class PagedEngine(EngineBase):
                                                   protected):
                     return False
                 self.store.promote_to_warm(pid)
+            else:
+                # page may have been async-promoted THIS tick (after the
+                # tick-start barrier): land it before the gather reads it
+                self.store.commit_page(pid)
         wp = table[st.length // self.pool.page_size]
         if self.store.tier[wp] == TIER_WARM:
             if not self.policy.make_hot_room(self.pool, self.store,
@@ -281,9 +286,13 @@ class PagedEngine(EngineBase):
     # -- main loop -----------------------------------------------------------
 
     def step(self) -> bool:
-        """One tick: prefetch, schedule, admit, decode, retire."""
+        """One tick: drain barrier, prefetch, schedule, admit, decode,
+        retire."""
         self.tick_no += 1
         self.admission_blocked = False
+        # drain barrier: land last tick's async prefetch promotions BEFORE
+        # anything can read the warm pool this tick (assist prefetch task)
+        self.store.commit_promotions()
         protected = self._protected()
         self.policy.drain_prefetch(self.pool, self.store, protected)
         self._fill_lanes(protected)

@@ -37,7 +37,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-BLOCK = 256  # quantization block (values), matches core/schemes/quant.py
+from repro.assist.schemes.quant import BLOCK_VALUES as BLOCK
+# quantization block (values) shared with the assist quant scheme, so the
+# grad site's fixed-rate payload matches the registered compress task
 
 
 def flatten_tree(tree):

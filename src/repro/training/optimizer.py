@@ -16,7 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import quant
+from repro.assist.schemes import quant
 
 
 @dataclasses.dataclass(frozen=True)

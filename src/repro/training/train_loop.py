@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.assist import AssistSpec
 from repro.training import optimizer as opt_mod
 from repro.training import grad_compress as gc_mod
 
@@ -28,6 +29,23 @@ class TrainConfig:
     opt: opt_mod.OptConfig = opt_mod.OptConfig()
     grad_accum: int = 1
     grad_compression: Optional[gc_mod.GradCompressionConfig] = None
+    # declarative assist sites (repro.assist); folded into the concrete
+    # knobs by resolved() -- explicit grad_compression/opt settings win
+    assist: Optional[AssistSpec] = None
+
+    def resolved(self) -> "TrainConfig":
+        """Fold the assist spec into the concrete training knobs."""
+        if self.assist is None:
+            return self
+        spec = self.assist
+        gc = self.grad_compression
+        if gc is None and spec.grads != "raw":
+            gc = gc_mod.GradCompressionConfig(axis=spec.grad_axis,
+                                              kind=spec.grads)
+        opt = self.opt
+        if opt.state_compression is None and spec.opt_state != "raw":
+            opt = dataclasses.replace(opt, state_compression=spec.opt_state)
+        return dataclasses.replace(self, opt=opt, grad_compression=gc)
 
 
 def _split_microbatches(batch, n: int):
@@ -45,6 +63,7 @@ def make_train_step(model, tcfg: TrainConfig, mesh=None):
     train_state: dict(params, opt, residual?) -- a plain pytree so it
     checkpoints/reshards trivially.
     """
+    tcfg = tcfg.resolved()
     loss_fn = model.loss
 
     if tcfg.grad_compression is not None:
@@ -94,6 +113,7 @@ def make_train_step(model, tcfg: TrainConfig, mesh=None):
 
 
 def init_train_state(model, tcfg: TrainConfig, rng, mesh=None):
+    tcfg = tcfg.resolved()
     params = model.init(rng)
     state = {"params": params, "opt": opt_mod.init_opt_state(params, tcfg.opt)}
     if tcfg.grad_compression is not None:
