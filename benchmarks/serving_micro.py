@@ -244,6 +244,83 @@ def run_local_window(smoke: bool = False):
     return done
 
 
+def _capacity_run(arch: str, spec: AssistSpec, lanes: int, max_len: int,
+                  n_req: int, model, params, cfg):
+    """Admit a stream and probe resident-token capacity + completion."""
+    rng = np.random.default_rng(0)
+    eng = _build_arch(arch, model, params, spec, lanes, max_len)
+    lens = []
+    for rid in range(n_req):
+        plen = int(rng.integers(18, 33))
+        lens.append(plen)
+        eng.submit(Request(rid=rid,
+                           prompt=list(rng.integers(2, cfg.vocab_size, plen)),
+                           max_new=4))
+    eng.step()                          # one tick admits all the budget allows
+    capacity = eng.resident_tokens()
+    done = eng.run(max_ticks=3000)
+    eng.pool.check()
+    return capacity, len(done), float(np.mean(lens))
+
+
+def _build_arch(arch, model, params, spec, lanes, max_len):
+    scfg = ServeConfig(arch=arch, reduced=True, slots=lanes,
+                       max_len=max_len, assist=spec)
+    eng, _, _ = scfg.build(model, params)
+    return eng
+
+
+def run_page_kinds(smoke: bool = False):
+    """Resident-token capacity for the NEW page kinds (ISSUE 4): one MLA
+    config (latent pages) and one hybrid (SSM state parking), tiered vs
+    the bf16 DENSE-SLAB baseline under the same HBM budget.
+
+    The dense-slab baseline is the dense engine's storage model: every
+    admitted request owns a full ``[max_len]`` bf16 slab (plus its f32
+    recurrence state for hybrids) regardless of its actual length --
+    capacity = floor(budget / slab_bytes) * mean resident length.  The
+    tiered paged engine must hold >= 2x that (MLA: the acceptance bar).
+    """
+    from repro.models.transformer import paged_geometry
+    max_len, lanes = 48, 2
+    # the stream must OVERSUBSCRIBE the budget, or capacity saturates at
+    # the stream size and the ratio measures nothing
+    n_req = 28 if smoke else 56
+    rows, results = [], {}
+    for arch_id, label in (("deepseek-v2-lite-16b", "mla-latent"),
+                           ("zamba2-1.2b", "hybrid-state")):
+        cfg = reduced(ARCHS[arch_id])
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        geom = paged_geometry(cfg, PAGE)
+        per_tok = geom.hot_page_bytes / PAGE
+        budget_pages = 8 if smoke else 16
+        budget = int(budget_pages * max_len * per_tok
+                     + 6 * geom.state_hot_bytes)
+        spec = AssistSpec(paged=True, page_size=PAGE,
+                          hbm_budget_bytes=budget, hot_fraction=0.5,
+                          enable_warm=True, enable_cold=True,
+                          host_budget_bytes=budget,
+                          use_roofline_trigger=False)
+        capacity, finished, mean_len = _capacity_run(
+            arch_id, spec, lanes, max_len, n_req, model, params, cfg)
+        slab_bytes = max_len * per_tok + geom.state_hot_bytes
+        dense_slots = int(budget // slab_bytes)
+        dense_capacity = dense_slots * mean_len
+        ratio = capacity / max(dense_capacity, 1.0)
+        results[label] = {"capacity": capacity,
+                          "dense_slab_capacity": dense_capacity,
+                          "ratio": ratio, "finished": finished}
+        rows.append([label, cfg.name, budget // 1024, capacity,
+                     round(dense_capacity), round(ratio, 2), finished])
+    print_table(
+        "serving_micro page kinds: tiered resident-token capacity vs bf16 "
+        "dense slabs (same HBM budget)",
+        ["page kind", "arch", "budget_KiB", "resident_tok",
+         "dense_slab_tok", "ratio", "done"], rows)
+    return results
+
+
 def main(smoke: bool = False):
     res = run(smoke=smoke)
     hot = res["hot-only"]["capacity"]
@@ -272,6 +349,18 @@ def main(smoke: bool = False):
     print(f"[serving_micro] backends PASS: {', '.join(backends)} "
           f"token-identical hot-only, all complete with int8 warm")
     run_local_window(smoke=smoke)
+    kinds = run_page_kinds(smoke=smoke)
+    # acceptance bar (ISSUE 4): the tiered MLA config holds >= 2x the
+    # resident tokens of bf16 dense slabs under the same HBM budget, and
+    # every admitted request completes for both new page kinds
+    mla = kinds["mla-latent"]
+    assert mla["ratio"] >= 2.0, mla
+    for label, r in kinds.items():
+        assert r["finished"] > 0, (label, r)
+    print(f"[serving_micro] page kinds PASS: MLA latent pages hold "
+          f"{mla['ratio']:.2f}x >= 2x the dense-slab resident tokens; "
+          f"hybrid state parking ratio "
+          f"{kinds['hybrid-state']['ratio']:.2f}x")
     return res
 
 

@@ -21,12 +21,15 @@ Task taxonomy (paper section -> kind):
   8.1  memoization       -> kind="memoize"   (Memoizer / MemoizeTask)
   8.2  prefetching       -> kind="prefetch"  (PrefetchTask)
 
-``repro.core`` re-exports this API one deprecation cycle longer; new code
-imports from here.
+``repro.core`` (the pre-assist home) shipped aliasing shims for exactly
+one deprecation cycle and was then removed; this package is the only
+import path.
 """
 from repro.assist.controller import AssistController, MIN_HIT_RATE
 from repro.assist.memoize import (MemoConfig, Memoizer, MemoizeTask,
                                   hit_rate, init_lut, memoized)
+from repro.assist.page_kinds import (ATTN_KV, MLA_LATENT, PAGE_KINDS,
+                                     PageKind, STATE_SLAB, page_kind)
 from repro.assist.plan import (CABA_BDI_PLAN, CABA_FULL_PLAN,
                                CompressionPlan, RAW_PLAN, sites_for_step)
 from repro.assist.registry import (AssistRegistry, REGISTRY,
@@ -43,6 +46,8 @@ __all__ = [
     "AssistSubroutine", "AssistTask", "CompressTask", "CompressionPlan",
     "KINDS", "MemoConfig", "Memoizer", "MemoizeTask", "PrefetchTask",
     "REGISTRY", "RooflineTerms", "SiteDecision", "SiteDescriptor",
+    "ATTN_KV", "MLA_LATENT", "PAGE_KINDS", "PageKind", "STATE_SLAB",
+    "page_kind",
     "CABA_BDI_PLAN", "CABA_FULL_PLAN", "RAW_PLAN", "sites_for_step",
     "default_registry", "hit_rate", "init_lut", "memoized",
     "HBM_BW", "HOST_BW", "ICI_BW", "MIN_HIT_RATE", "MIN_RATIO",

@@ -20,11 +20,11 @@ in ``repro.serving.paged_engine``.
 """
 from repro.cache.block_pool import BlockPool
 from repro.cache.tiers import (TIER_HOT, TIER_WARM, TIER_COLD, PageGeometry,
-                               TieredKVStore)
+                               SegmentGeometry, TieredKVStore)
 from repro.cache.policy import CachePolicy, TierConfig, decode_roofline_terms
 
 __all__ = [
-    "BlockPool", "TieredKVStore", "PageGeometry",
+    "BlockPool", "TieredKVStore", "PageGeometry", "SegmentGeometry",
     "TIER_HOT", "TIER_WARM", "TIER_COLD",
     "CachePolicy", "TierConfig", "decode_roofline_terms",
 ]

@@ -50,31 +50,39 @@ class TierConfig:
     cold_delta: bool = True         # delta-along-sequence before packing
     async_prefetch: bool = True     # overlap promotion via async device_put
 
-    def split_pages(self, hot_page_bytes: int, warm_page_bytes: int):
+    def split_pages(self, hot_page_bytes: int, warm_page_bytes: int,
+                    budget: Optional[int] = None):
         """(hot_pages, warm_pages) under the HBM budget.
 
         ``hot`` is floored at 1 (the engine cannot run without a hot
         page); ``warm`` only ever gets the budget hot left over, so a
         tiered split never exceeds the stated budget beyond that floor.
+        ``budget`` overrides ``hbm_budget_bytes`` (the engine passes the
+        budget left after carving out state-slab slots).
         """
+        budget = self.hbm_budget_bytes if budget is None else budget
         hot_frac = self.hot_fraction if self.enable_warm else 1.0
-        hot = max(1, int(self.hbm_budget_bytes * hot_frac) // hot_page_bytes)
+        hot = max(1, int(budget * hot_frac) // hot_page_bytes)
         warm = 0
         if self.enable_warm:
-            warm = max(0, (self.hbm_budget_bytes - hot * hot_page_bytes)
+            warm = max(0, (budget - hot * hot_page_bytes)
                        // warm_page_bytes)
         return hot, warm
 
 
-def decode_roofline_terms(cfg, batch: int, resident_tokens: int) -> RooflineTerms:
+def decode_roofline_terms(cfg, batch: int, resident_tokens: int,
+                          kv_bytes: Optional[float] = None) -> RooflineTerms:
     """Analytic roofline of one engine decode tick (the trigger input).
 
     Decode streams every parameter once and the resident KV once per step;
-    compute is ~2 active-params FLOPs per token.
+    compute is ~2 active-params FLOPs per token.  ``kv_bytes`` overrides
+    the per-token KV footprint -- the paged engine passes the page-kind-
+    aware value (MLA latents and recurrence-state stacks hold far fewer
+    bytes per token than the dense-GQA formula assumes).
     """
     active = cfg.active_param_count()
     flops = 2.0 * active * batch
-    kv_per_tok = kv_bytes_per_token(cfg)
+    kv_per_tok = kv_bytes_per_token(cfg) if kv_bytes is None else kv_bytes
     param_bytes = cfg.param_count() * 2.0
     mem = param_bytes + resident_tokens * kv_per_tok
     return RooflineTerms(compute=flops / PEAK_FLOPS,
@@ -82,13 +90,16 @@ def decode_roofline_terms(cfg, batch: int, resident_tokens: int) -> RooflineTerm
 
 
 def kv_bytes_per_token(cfg) -> float:
-    """bf16 KV bytes one token holds across the stack."""
+    """bf16 KV bytes one token holds across the stack (dense-GQA
+    approximation; the paged engine derives the exact per-kind value from
+    its PageGeometry instead)."""
     return cfg.n_layers * 2.0 * cfg.n_kv_heads * cfg.head_dim * 2.0
 
 
-def kv_site(cfg, resident_tokens: int,
-            measured_ratio: float = 1.0) -> SiteDescriptor:
-    return SiteDescriptor("kv", resident_tokens * kv_bytes_per_token(cfg),
+def kv_site(cfg, resident_tokens: int, measured_ratio: float = 1.0,
+            kv_bytes: Optional[float] = None) -> SiteDescriptor:
+    per_tok = kv_bytes_per_token(cfg) if kv_bytes is None else kv_bytes
+    return SiteDescriptor("kv", max(resident_tokens * per_tok, 1.0),
                           "memory", lossless_required=False,
                           measured_ratio=measured_ratio)
 
@@ -130,45 +141,57 @@ class CachePolicy:
     # -- victim selection ----------------------------------------------------
 
     def hot_victim(self, pool: BlockPool, store: TieredKVStore,
-                   protected: set[int]) -> Optional[int]:
-        """LRU hot page outside ``protected`` (pages the tick still needs)."""
-        cands = [p for p in store.hot_page_ids() if p not in protected]
-        order = pool.lru_order(cands)
+                   protected: set[int], cls: str = "kv") -> Optional[int]:
+        """LRU hot page outside ``protected`` (pages the tick still needs).
+
+        ``cls`` selects the page class: "kv" (token pages: attn KV / MLA
+        latent) or "state" (recurrence slabs) -- the two classes occupy
+        disjoint slot spaces, so victims never cross."""
+        ids = store.hot_page_ids() if cls == "kv" else store.hot_state_ids()
+        order = pool.lru_order([p for p in ids if p not in protected])
         return order[0] if order else None
 
     def warm_victim(self, pool: BlockPool, store: TieredKVStore,
-                    protected: set[int]) -> Optional[int]:
-        cands = [p for p in store.warm_page_ids() if p not in protected]
-        order = pool.lru_order(cands)
+                    protected: set[int], cls: str = "kv") -> Optional[int]:
+        ids = store.warm_page_ids() if cls == "kv" else store.warm_state_ids()
+        order = pool.lru_order([p for p in ids if p not in protected])
         return order[0] if order else None
 
     # -- demotion paths (capacity pressure) ----------------------------------
 
     def make_hot_room(self, pool: BlockPool, store: TieredKVStore,
-                      protected: set[int], n: int = 1) -> bool:
+                      protected: set[int], n: int = 1,
+                      cls: str = "kv") -> bool:
         """Demote LRU pages until >= n hot slots are free.  Returns success."""
+        free_hot = (lambda: store.n_free_hot) if cls == "kv" \
+            else (lambda: store.n_free_hot_state)
+        free_warm = (lambda: store.n_free_warm) if cls == "kv" \
+            else (lambda: store.n_free_warm_state)
         guard = 0
-        while store.n_free_hot < n and guard < 4 * pool.num_pages:
+        while free_hot() < n and guard < 4 * pool.num_pages:
             guard += 1
             if not self.compression_enabled:
                 return False
-            victim = self.hot_victim(pool, store, protected)
+            victim = self.hot_victim(pool, store, protected, cls)
             if victim is None:
                 return False
-            if store.n_free_warm == 0:
-                if not self.make_warm_room(pool, store, protected):
+            if free_warm() == 0:
+                if not self.make_warm_room(pool, store, protected, cls=cls):
                     return False
             store.demote_to_warm(victim)
-        return store.n_free_hot >= n
+        return free_hot() >= n
 
     def make_warm_room(self, pool: BlockPool, store: TieredKVStore,
-                       protected: set[int], n: int = 1) -> bool:
+                       protected: set[int], n: int = 1,
+                       cls: str = "kv") -> bool:
+        free_warm = (lambda: store.n_free_warm) if cls == "kv" \
+            else (lambda: store.n_free_warm_state)
         guard = 0
-        while store.n_free_warm < n and guard < 4 * pool.num_pages:
+        while free_warm() < n and guard < 4 * pool.num_pages:
             guard += 1
             if not self.cold_enabled:
                 return False
-            victim = self.warm_victim(pool, store, protected)
+            victim = self.warm_victim(pool, store, protected, cls)
             if victim is None:
                 return False
             try:
@@ -177,7 +200,7 @@ class CachePolicy:
                 return False
             # a page demoted back to cold is no longer a usable prefetch
             self.prefetch.discard_prefetched(victim)
-        return store.n_free_warm >= n
+        return free_warm() >= n
 
     # -- prefetch task delegation (WaSP lookahead, paper 8.2) ----------------
 

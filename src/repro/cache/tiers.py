@@ -1,12 +1,28 @@
-"""Per-page representation ladder: bf16 hot / int8 warm / packed cold
-(DESIGN.md 10.2).
+"""Per-page representation ladder: bf16/f32 hot / int8 warm / packed cold
+(DESIGN.md 10.2, 10.6).
 
-Physical layout.  For every attention position ``j`` in the scanned block
-pattern there is one HOT pool and one WARM pool, page-indexed on axis 1:
+Physical layout.  The stack is a sequence of pool-owning SEGMENTS (head
+layer / scanned pattern position / tail layer); each segment's pools are
+page-indexed on axis 1 and shaped by its :class:`SegmentGeometry`, one of
+three PAGE KINDS (repro.assist.page_kinds):
 
-  hot:   kh, vh       bf16[n_scan, 1+hot_pages,  G, ps, dh]
-  warm:  k8, v8       int8[n_scan, 1+warm_pages, G, ps, dh]
-         ks, vs        f32[n_scan, 1+warm_pages, G, ps]     absmax scales
+  attn_kv      hot:  kh, vh     bf16[stack, 1+hot,  G, ps, dh]
+               warm: k8, v8     int8[stack, 1+warm, G, ps, dh]
+                     ks, vs      f32[stack, 1+warm, G, ps]     absmax scales
+  mla_latent   same plane names, but kh carries the absorbed-decode LATENT
+               (G=1, width kv_lora_rank) and vh the shared rope key
+               (G=1, width rope_head_dim) -- the architecture's own KV
+               compression, which the warm/cold ladder compounds
+  state_slab   hot:  sh          f32[stack, 1+hot_state, 1, rows, width]
+               warm: s8, ss      int8/f32 like above
+               the flattened fixed-size recurrence state of an SSM/RWKV
+               layer: NON-GROWING -- one slab per request, allocated at
+               admission, parked (int8) and revived like any page
+
+Growing kinds share one slot space (the token-page pools); state slabs
+have their own (``hot_state``/``warm_state`` slots) -- a page id belongs
+to exactly one CLASS ("kv" or "state") fixed at placement time, and tier
+transitions touch only the segments of that class.
 
 Slot 0 of each pool is a reserved trash page: unmapped block-table entries
 gather from it (masked out by the length mask) and writes for idle lanes
@@ -48,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cache.block_pool import PoolExhausted
+from repro.assist.page_kinds import page_kind
 from repro.assist.registry import REGISTRY
 from repro.serving.kv_cache import quantize_token
 
@@ -60,14 +77,65 @@ DELTA_SUFFIX = "+delta"
 
 
 @dataclasses.dataclass(frozen=True)
+class SegmentGeometry:
+    """Pool shape of one stack segment, under one page kind.
+
+    ``heads``/``rows``/widths name the trailing axes of the hot plane(s):
+    attn_kv has two planes (k, v) of width ``head_dim`` over ``heads``
+    KV heads and ``rows = page_size`` tokens; mla_latent has the latent
+    plane (width kv_lora_rank) and the rope plane (width rope_head_dim)
+    over ONE head; state_slab has a single plane holding the flattened
+    recurrence state as ``rows`` quantization rows of ``width`` floats
+    (``v_width = 0`` marks the v plane absent).
+    """
+    kind: str          # page-kind name (repro.assist.page_kinds)
+    n_stack: int       # scanned layers sharing this pool (1 for head/tail)
+    heads: int
+    rows: int
+    k_width: int
+    v_width: int = 0
+
+    @property
+    def grows(self) -> bool:
+        return page_kind(self.kind).grows
+
+    @property
+    def cls(self) -> str:
+        return "kv" if self.grows else "state"
+
+    @property
+    def hot_itemsize(self) -> int:
+        # state slabs hold f32 (exact bf16/f32 round-trip of the dense
+        # engine's state); token pages hold bf16
+        return 4 if self.kind == "state_slab" else 2
+
+    @property
+    def n_planes(self) -> int:
+        return 2 if self.v_width else 1
+
+    @property
+    def hot_bytes(self) -> int:
+        per = self.n_stack * self.heads * self.rows
+        return per * (self.k_width + self.v_width) * self.hot_itemsize
+
+    @property
+    def warm_bytes(self) -> int:
+        per = self.n_stack * self.heads * self.rows
+        return (per * (self.k_width + self.v_width)      # int8 planes
+                + self.n_planes * per * 4)               # f32 scales
+
+
+@dataclasses.dataclass(frozen=True)
 class PageGeometry:
     """Shape of one page across the stack (engine derives this from cfg).
 
-    The stack is a sequence of pool-owning SEGMENTS: by default the
-    ``n_pat`` scanned pattern positions, each stacking ``n_scan`` layers.
-    Models with unstacked head/tail layers pass ``seg_stacks`` explicitly --
-    one entry per segment giving its stacked-layer count (1 for a head or
-    tail layer, n_scan for a pattern position).
+    The stack is a sequence of pool-owning SEGMENTS.  ``segments`` gives
+    one :class:`SegmentGeometry` per segment (heterogeneous page kinds:
+    attn KV, MLA latent, recurrent state slabs).  When omitted, the
+    legacy homogeneous-attention form applies: ``n_pat`` scanned pattern
+    positions of ``n_scan`` stacked GQA layers each (``seg_stacks``
+    overrides the per-segment layer counts for unstacked head/tail
+    layers).
     """
     n_pat: int          # attention positions per scanned superblock
     n_scan: int         # scanned superblocks
@@ -75,30 +143,56 @@ class PageGeometry:
     page_size: int
     head_dim: int
     seg_stacks: Optional[tuple] = None   # per-segment layer counts
+    segments: Optional[tuple] = None     # explicit SegmentGeometry tuple
 
     @property
     def stacks(self) -> tuple:
+        if self.segments is not None:
+            return tuple(sg.n_stack for sg in self.segments)
         return self.seg_stacks or (self.n_scan,) * self.n_pat
 
     @property
+    def seg_geoms(self) -> tuple:
+        if self.segments is not None:
+            return self.segments
+        return tuple(SegmentGeometry("attn_kv", st, self.n_kv_heads,
+                                     self.page_size, self.head_dim,
+                                     self.head_dim)
+                     for st in self.stacks)
+
+    @property
     def n_segments(self) -> int:
-        return len(self.stacks)
+        return len(self.seg_geoms)
 
     @property
     def layers_total(self) -> int:
         return sum(self.stacks)
 
     @property
+    def has_state(self) -> bool:
+        return any(sg.cls == "state" for sg in self.seg_geoms)
+
+    @property
     def hot_page_bytes(self) -> int:
-        """HBM bytes of one page in the hot tier (k + v, bf16)."""
-        per = self.layers_total * self.n_kv_heads * self.page_size
-        return 2 * per * self.head_dim * 2
+        """HBM bytes of one TOKEN page in the hot tier (all growing
+        segments; 0 for attention-free stacks)."""
+        return sum(sg.hot_bytes for sg in self.seg_geoms if sg.cls == "kv")
 
     @property
     def warm_page_bytes(self) -> int:
-        """HBM bytes of one page in the warm tier (int8 + f32 scales)."""
-        per = self.layers_total * self.n_kv_heads * self.page_size
-        return 2 * per * self.head_dim + 2 * per * 4
+        """HBM bytes of one token page in the warm tier (int8 + scales)."""
+        return sum(sg.warm_bytes for sg in self.seg_geoms if sg.cls == "kv")
+
+    @property
+    def state_hot_bytes(self) -> int:
+        """HBM bytes of one request's hot state slab (all state segments)."""
+        return sum(sg.hot_bytes for sg in self.seg_geoms
+                   if sg.cls == "state")
+
+    @property
+    def state_warm_bytes(self) -> int:
+        return sum(sg.warm_bytes for sg in self.seg_geoms
+                   if sg.cls == "state")
 
     @property
     def tokens_per_page(self) -> int:
@@ -107,11 +201,15 @@ class PageGeometry:
 
 @dataclasses.dataclass
 class ColdPage:
-    """Host-memory record of one page (per pattern position)."""
-    blobs: list          # per position: (k_obj, v_obj) packed int8 planes
-    schemes: list        # per position: (k_scheme, v_scheme)
-    scales: list         # per position: (ks, vs) numpy f32 (stored raw)
+    """Host-memory record of one page.
+
+    ``planes``: per owning segment, a list of per-plane records
+    ``(scheme_name, packed_obj, scales_or_None)``; scales are stored raw
+    (numpy f32).
+    """
+    planes: list
     nbytes: int
+    cls: str = "kv"
 
 
 def delta_seq(x8: np.ndarray, axis: int = -2) -> np.ndarray:
@@ -127,7 +225,6 @@ def delta_seq(x8: np.ndarray, axis: int = -2) -> np.ndarray:
     first = np.take(x16, [0], axis=axis)
     d = np.concatenate([first, np.diff(x16, axis=axis)], axis=axis)
     return d.astype(np.int8)                  # mod-256 wrap
-
 
 def undelta_seq(d8: np.ndarray, axis: int = -2) -> np.ndarray:
     """Inverse of :func:`delta_seq` (exact under mod-256 arithmetic)."""
@@ -168,19 +265,34 @@ def _unpack_cold(name: str, obj, shape) -> np.ndarray:
 
 
 # -- jitted page movement (donated pools; one page per call) -----------------
+#
+# Pool dicts carry one of two key schemas -- kv pages ("kh"/"vh" hot,
+# "k8"/"ks"/"v8"/"vs" warm) or state slabs ("sh" hot, "s8"/"ss" warm).
+# The movement helpers walk the PLANE TRIPLES of whichever schema the
+# donated dict carries (keys are static under jit, so each schema compiles
+# once and the loop unrolls).
+
+def _plane_triples(pools_j) -> tuple:
+    """((hot_name, int8_name, scale_name), ...) for this pool's schema."""
+    if "sh" in pools_j:
+        return (("sh", "s8", "ss"),)
+    return (("kh", "k8", "ks"), ("vh", "v8", "vs"))
+
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_prefill(pools_j, k_seq, v_seq, locs):
     """Write a prefilled request's KV into its hot pages.
 
-    k_seq/v_seq: bf16[n_scan, G, S, dh] with S == len(locs) * page_size;
-    locs: int32[n_pages] hot slots (0 = trash for unallocated tail pages).
+    k_seq/v_seq: [stack, G, S, width] with S == len(locs) * page_size
+    (widths may differ per plane: MLA latent vs rope); locs: int32[n_pages]
+    hot slots (0 = trash for unallocated tail pages).
     """
-    n_scan, G, S, dh = k_seq.shape
     ps = pools_j["kh"].shape[3]
-    npg = S // ps
-    def per_page(x):            # -> [npg, n_scan, G, ps, dh]
-        return x.reshape(n_scan, G, npg, ps, dh).transpose(2, 0, 1, 3, 4)
+
+    def per_page(x):            # -> [npg, stack, G, ps, width]
+        st, G, S, w = x.shape
+        return x.reshape(st, G, S // ps, ps, w).transpose(2, 0, 1, 3, 4)
+
     kh = pools_j["kh"].at[:, locs].set(
         per_page(k_seq).transpose(1, 0, 2, 3, 4).astype(pools_j["kh"].dtype))
     vh = pools_j["vh"].at[:, locs].set(
@@ -189,92 +301,122 @@ def _scatter_prefill(pools_j, k_seq, v_seq, locs):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _write_state_slab(pools_j, slot, slab):
+    """Land one request's flattened state at a hot state slot.
+    slab: [stack, heads, rows, width] (already padded/reshaped)."""
+    return dict(pools_j, sh=pools_j["sh"].at[:, slot].set(
+        slab.astype(pools_j["sh"].dtype)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _demote_hot_to_warm(pools_j, hot_slot, warm_slot):
     """Quantize hot page ``hot_slot`` into warm slot ``warm_slot``."""
-    k = pools_j["kh"][:, hot_slot]          # [n_scan, G, ps, dh]
-    v = pools_j["vh"][:, hot_slot]
-    k8, ks = quantize_token(k)
-    v8, vs = quantize_token(v)
-    return dict(pools_j,
-                k8=pools_j["k8"].at[:, warm_slot].set(k8),
-                ks=pools_j["ks"].at[:, warm_slot].set(ks),
-                v8=pools_j["v8"].at[:, warm_slot].set(v8),
-                vs=pools_j["vs"].at[:, warm_slot].set(vs))
+    out = dict(pools_j)
+    for hname, qname, sname in _plane_triples(pools_j):
+        q, s = quantize_token(pools_j[hname][:, hot_slot])
+        out[qname] = pools_j[qname].at[:, warm_slot].set(q)
+        out[sname] = pools_j[sname].at[:, warm_slot].set(s)
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _promote_warm_to_hot(pools_j, warm_slot, hot_slot):
     """Dequantize warm page into a hot slot (quantization loss already paid)."""
-    k = (pools_j["k8"][:, warm_slot].astype(jnp.float32)
-         * pools_j["ks"][:, warm_slot][..., None])
-    v = (pools_j["v8"][:, warm_slot].astype(jnp.float32)
-         * pools_j["vs"][:, warm_slot][..., None])
-    return dict(pools_j,
-                kh=pools_j["kh"].at[:, hot_slot].set(
-                    k.astype(pools_j["kh"].dtype)),
-                vh=pools_j["vh"].at[:, hot_slot].set(
-                    v.astype(pools_j["vh"].dtype)))
+    out = dict(pools_j)
+    for hname, qname, sname in _plane_triples(pools_j):
+        x = (pools_j[qname][:, warm_slot].astype(jnp.float32)
+             * pools_j[sname][:, warm_slot][..., None])
+        out[hname] = pools_j[hname].at[:, hot_slot].set(
+            x.astype(pools_j[hname].dtype))
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _write_warm(pools_j, warm_slot, k8, ks, v8, vs):
-    return dict(pools_j,
-                k8=pools_j["k8"].at[:, warm_slot].set(k8),
-                ks=pools_j["ks"].at[:, warm_slot].set(ks),
-                v8=pools_j["v8"].at[:, warm_slot].set(v8),
-                vs=pools_j["vs"].at[:, warm_slot].set(vs))
+def _write_warm(pools_j, warm_slot, planes):
+    """planes: {int8/scale plane name -> array} for this pool's schema."""
+    out = dict(pools_j)
+    for name, arr in planes.items():
+        out[name] = pools_j[name].at[:, warm_slot].set(arr)
+    return out
 
 
 class TieredKVStore:
     """Physical placement of pages across hot/warm/cold tiers.
 
-    ``num_pages`` is the logical page-id space (the BlockPool's); the hot and
-    warm pools have their own (smaller) slot spaces.  ``location[pid]`` gives
-    (tier, slot); ``encoded_loc`` collapses it to the int32 the decode gather
-    consumes.
+    ``num_pages`` is the logical page-id space (the BlockPool's); the hot
+    and warm pools have their own (smaller) slot spaces, one pair for
+    TOKEN pages (growing kinds: attn KV / MLA latent) and one pair for
+    STATE slabs.  ``location[pid]`` gives (tier, slot); ``encoded_loc``
+    collapses it to the int32 the decode gather consumes.
     """
 
     def __init__(self, geom: PageGeometry, num_pages: int, *,
                  hot_pages: int, warm_pages: int,
+                 hot_state: int = 0, warm_state: int = 0,
                  host_budget_bytes: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, cold_delta: bool = True):
         if hot_pages < 1:
             raise ValueError("need at least one hot page")
+        if geom.has_state and hot_state < 1:
+            raise ValueError("stack has state segments: need >= 1 hot "
+                             "state slot")
         self.cold_delta = cold_delta
         self.geom = geom
         self.num_pages = num_pages
         self.hot_pages = hot_pages
         self.warm_pages = warm_pages
+        self.hot_state = hot_state
+        self.warm_state = warm_state
         self.host_budget_bytes = host_budget_bytes
-        g = geom
 
-        def mk(stack, n_slots, dtype):
-            return jnp.zeros((stack, n_slots, g.n_kv_heads, g.page_size,
-                              g.head_dim), dtype)
+        def mk_pool(sg: SegmentGeometry):
+            if sg.cls == "state":
+                nh, nw = hot_state, warm_state
+                return {
+                    "sh": jnp.zeros((sg.n_stack, 1 + max(nh, 1), sg.heads,
+                                     sg.rows, sg.k_width), jnp.float32),
+                    "s8": jnp.zeros((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                     sg.rows, sg.k_width), jnp.int8),
+                    "ss": jnp.ones((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                    sg.rows), jnp.float32),
+                }
+            nh, nw = hot_pages, warm_pages
+            return {
+                "kh": jnp.zeros((sg.n_stack, 1 + nh, sg.heads, sg.rows,
+                                 sg.k_width), kv_dtype),
+                "vh": jnp.zeros((sg.n_stack, 1 + nh, sg.heads, sg.rows,
+                                 sg.v_width), kv_dtype),
+                "k8": jnp.zeros((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                 sg.rows, sg.k_width), jnp.int8),
+                "v8": jnp.zeros((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                 sg.rows, sg.v_width), jnp.int8),
+                "ks": jnp.ones((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                sg.rows), jnp.float32),
+                "vs": jnp.ones((sg.n_stack, 1 + max(nw, 1), sg.heads,
+                                sg.rows), jnp.float32),
+            }
 
-        # one pool set per segment (pattern position / head / tail layer);
-        # slot 0 reserved (trash)
-        self.pools = tuple(
-            {"kh": mk(stack, 1 + hot_pages, kv_dtype),
-             "vh": mk(stack, 1 + hot_pages, kv_dtype),
-             "k8": mk(stack, 1 + max(warm_pages, 1), jnp.int8),
-             "v8": mk(stack, 1 + max(warm_pages, 1), jnp.int8),
-             "ks": jnp.ones((stack, 1 + max(warm_pages, 1),
-                             g.n_kv_heads, g.page_size), jnp.float32),
-             "vs": jnp.ones((stack, 1 + max(warm_pages, 1),
-                             g.n_kv_heads, g.page_size), jnp.float32)}
-            for stack in g.stacks)
+        # one pool set per segment, in stack order; slot 0 reserved (trash)
+        self.pools = tuple(mk_pool(sg) for sg in geom.seg_geoms)
+        self._seg_idx = {"kv": tuple(j for j, sg in enumerate(geom.seg_geoms)
+                                     if sg.cls == "kv"),
+                         "state": tuple(j for j, sg
+                                        in enumerate(geom.seg_geoms)
+                                        if sg.cls == "state")}
         self.tier = np.full(num_pages, TIER_FREE, np.int8)
         self.slot = np.zeros(num_pages, np.int32)
-        self._free_hot = list(range(hot_pages, 0, -1))     # slots N..1
-        self._free_warm = list(range(warm_pages, 0, -1))
-        # per-tier page-id sets so victim scans cost O(tier), not O(pages)
-        self._hot_ids: set[int] = set()
-        self._warm_ids: set[int] = set()
+        self.page_cls = np.zeros(num_pages, np.int8)   # 0 = kv, 1 = state
+        self._free_hot = {"kv": list(range(hot_pages, 0, -1)),   # slots N..1
+                          "state": list(range(hot_state, 0, -1))}
+        self._free_warm = {"kv": list(range(warm_pages, 0, -1)),
+                           "state": list(range(warm_state, 0, -1))}
+        # per-(tier, class) page-id sets so victim scans cost O(tier)
+        self._hot_ids = {"kv": set(), "state": set()}
+        self._warm_ids = {"kv": set(), "state": set()}
         self.cold: dict[int, ColdPage] = {}
         self.cold_bytes = 0
         # async prefetch promotions awaiting the tick-start drain barrier:
-        # pid -> (warm_slot, per-segment device arrays in flight)
+        # pid -> (warm_slot, per-segment plane dicts in flight)
         self._pending_warm: dict[int, tuple[int, list]] = {}
         self.stats = {"demote_warm": 0, "demote_cold": 0,
                       "promote_warm": 0, "promote_warm_async": 0,
@@ -282,22 +424,39 @@ class TieredKVStore:
 
     # -- placement queries ---------------------------------------------------
 
+    def _cls(self, pid: int) -> str:
+        return "state" if self.page_cls[pid] else "kv"
+
     @property
     def n_free_hot(self) -> int:
-        return len(self._free_hot)
+        return len(self._free_hot["kv"])
 
     @property
     def n_free_warm(self) -> int:
-        return len(self._free_warm)
+        return len(self._free_warm["kv"])
+
+    @property
+    def n_free_hot_state(self) -> int:
+        return len(self._free_hot["state"])
+
+    @property
+    def n_free_warm_state(self) -> int:
+        return len(self._free_warm["state"])
 
     def tier_of(self, pid: int) -> int:
         return int(self.tier[pid])
 
     def hot_page_ids(self):
-        return self._hot_ids
+        return self._hot_ids["kv"]
 
     def warm_page_ids(self):
-        return self._warm_ids
+        return self._warm_ids["kv"]
+
+    def hot_state_ids(self):
+        return self._hot_ids["state"]
+
+    def warm_state_ids(self):
+        return self._warm_ids["state"]
 
     def encoded_loc(self, pid: int) -> int:
         t = self.tier[pid]
@@ -308,10 +467,11 @@ class TieredKVStore:
         raise ValueError(f"page {pid} not gatherable (tier {t})")
 
     def hbm_bytes_used(self) -> int:
-        n_hot = int((self.tier == TIER_HOT).sum())
-        n_warm = int((self.tier == TIER_WARM).sum())
-        return (n_hot * self.geom.hot_page_bytes
-                + n_warm * self.geom.warm_page_bytes)
+        g = self.geom
+        return (len(self._hot_ids["kv"]) * g.hot_page_bytes
+                + len(self._warm_ids["kv"]) * g.warm_page_bytes
+                + len(self._hot_ids["state"]) * g.state_hot_bytes
+                + len(self._warm_ids["state"]) * g.state_warm_bytes)
 
     def tier_counts(self) -> dict[str, int]:
         return {"hot": int((self.tier == TIER_HOT).sum()),
@@ -320,43 +480,55 @@ class TieredKVStore:
 
     # -- placement lifecycle -------------------------------------------------
 
-    def place_hot(self, pid: int) -> int:
-        """Bind a fresh (or cold-freed) page id to a hot slot."""
+    def _place(self, pid: int, cls: str) -> int:
         assert self.tier[pid] == TIER_FREE, f"page {pid} already placed"
-        if not self._free_hot:
-            raise PoolExhausted("hot tier full")
-        s = self._free_hot.pop()
+        if not self._free_hot[cls]:
+            raise PoolExhausted(f"hot {cls} tier full")
+        s = self._free_hot[cls].pop()
         self.tier[pid], self.slot[pid] = TIER_HOT, s
-        self._hot_ids.add(pid)
+        self.page_cls[pid] = 1 if cls == "state" else 0
+        self._hot_ids[cls].add(pid)
         return s
+
+    def place_hot(self, pid: int) -> int:
+        """Bind a fresh (or cold-freed) token page id to a hot slot."""
+        return self._place(pid, "kv")
+
+    def place_hot_state(self, pid: int) -> int:
+        """Bind a request's state-slab page id to a hot state slot."""
+        return self._place(pid, "state")
 
     def release(self, pid: int):
         """Free a page's physical residence (request retired)."""
         self._pending_warm.pop(pid, None)   # in-flight data no longer needed
+        cls = self._cls(pid)
         t = self.tier[pid]
         if t == TIER_HOT:
-            self._free_hot.append(int(self.slot[pid]))
+            self._free_hot[cls].append(int(self.slot[pid]))
         elif t == TIER_WARM:
-            self._free_warm.append(int(self.slot[pid]))
+            self._free_warm[cls].append(int(self.slot[pid]))
         elif t == TIER_COLD:
             rec = self.cold.pop(pid)
             self.cold_bytes -= rec.nbytes
-        self._hot_ids.discard(pid)
-        self._warm_ids.discard(pid)
+        self._hot_ids[cls].discard(pid)
+        self._warm_ids[cls].discard(pid)
         self.tier[pid], self.slot[pid] = TIER_FREE, 0
+        self.page_cls[pid] = 0
 
-    # -- prefill write -------------------------------------------------------
+    # -- prefill / state writes ----------------------------------------------
 
     def write_prefill(self, pid_slots: list[int], state_kv: list, S: int):
         """Scatter a prefilled request's per-layer KV into its hot pages.
 
         pid_slots: hot slots of the request's pages (already placed);
-        state_kv: per pattern position (k, v) bf16[n_scan, G, max_len, dh].
+        state_kv: per GROWING segment (k_seq, v_seq) bf16[stack, G,
+        max_len, width] -- K/V for attn segments, latent/rope for MLA.
         """
         ps = self.geom.page_size
         npg_needed = -(-S // ps)
         assert len(pid_slots) >= npg_needed
-        for j, (k_seq, v_seq) in enumerate(state_kv):
+        for i, j in enumerate(self._seg_idx["kv"]):
+            k_seq, v_seq = state_kv[i]
             max_len = k_seq.shape[2]
             locs = np.zeros(max_len // ps, np.int32)
             locs[:len(pid_slots)] = pid_slots
@@ -364,22 +536,50 @@ class TieredKVStore:
                 self.pools[j], k_seq, v_seq, jnp.asarray(locs)),) \
                 + self.pools[j + 1:]
 
+    def write_state(self, pid: int, slabs: list):
+        """Land a request's post-prefill recurrence state in its (hot)
+        state slab.  slabs: per STATE segment, f32[stack, W_flat]."""
+        assert self.tier[pid] == TIER_HOT and self._cls(pid) == "state"
+        hs = int(self.slot[pid])
+        for i, j in enumerate(self._seg_idx["state"]):
+            sg = self.geom.seg_geoms[j]
+            flat = slabs[i]
+            pad = sg.heads * sg.rows * sg.k_width - flat.shape[-1]
+            flat = jnp.pad(flat.astype(jnp.float32), ((0, 0), (0, pad)))
+            slab = flat.reshape(sg.n_stack, sg.heads, sg.rows, sg.k_width)
+            self.pools = self.pools[:j] + (_write_state_slab(
+                self.pools[j], hs, slab),) + self.pools[j + 1:]
+
+    def state_hot_slot(self, pid: int) -> int:
+        """Hot slot of a request's state slab (the decode step's
+        ``state_slots`` entry)."""
+        assert self.tier[pid] == TIER_HOT and self._cls(pid) == "state"
+        return int(self.slot[pid])
+
     # -- tier transitions ----------------------------------------------------
 
     def demote_to_warm(self, pid: int):
-        """hot -> warm: per-token absmax int8 (the CABA KV site)."""
+        """hot -> warm: per-token absmax int8 (the CABA KV site; for state
+        slabs, per-row absmax over the flattened state)."""
         assert self.tier[pid] == TIER_HOT
-        if not self._free_warm:
-            raise PoolExhausted("warm tier full")
+        cls = self._cls(pid)
+        for j in self._seg_idx[cls]:
+            # the warm tier IS lossy: a kind declaring lossy_park=False
+            # may only park through a lossless path
+            assert page_kind(self.geom.seg_geoms[j].kind).lossy_park, \
+                f"page kind {self.geom.seg_geoms[j].kind!r} forbids " \
+                f"lossy parking"
+        if not self._free_warm[cls]:
+            raise PoolExhausted(f"warm {cls} tier full")
         hs = int(self.slot[pid])
-        ws = self._free_warm.pop()
-        for j in range(self.geom.n_segments):
+        ws = self._free_warm[cls].pop()
+        for j in self._seg_idx[cls]:
             self.pools = self.pools[:j] + (_demote_hot_to_warm(
                 self.pools[j], hs, ws),) + self.pools[j + 1:]
-        self._free_hot.append(hs)
+        self._free_hot[cls].append(hs)
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
-        self._hot_ids.discard(pid)
-        self._warm_ids.add(pid)
+        self._hot_ids[cls].discard(pid)
+        self._warm_ids[cls].add(pid)
         self.stats["demote_warm"] += 1
 
     def demote_to_cold(self, pid: int):
@@ -387,28 +587,27 @@ class TieredKVStore:
         fallback) into host memory."""
         assert self.tier[pid] == TIER_WARM
         self._commit_one(pid)               # flush any in-flight promotion
+        cls = self._cls(pid)
         ws = int(self.slot[pid])
-        blobs, schemes, scales, nbytes = [], [], [], 0
-        for j in range(self.geom.n_segments):
+        planes, nbytes = [], 0
+        for j in self._seg_idx[cls]:
             pj = self.pools[j]
-            k8 = np.asarray(pj["k8"][:, ws])
-            v8 = np.asarray(pj["v8"][:, ws])
-            kn, ko, kb = _pack_cold(k8, self.cold_delta)
-            vn, vo, vb = _pack_cold(v8, self.cold_delta)
-            ks = np.asarray(pj["ks"][:, ws])
-            vs = np.asarray(pj["vs"][:, ws])
-            blobs.append((ko, vo))
-            schemes.append((kn, vn))
-            scales.append((ks, vs))
-            nbytes += kb + vb + ks.nbytes + vs.nbytes
+            recs = []
+            for _, qname, sname in _plane_triples(pj):
+                x8 = np.asarray(pj[qname][:, ws])
+                name, obj, nb = _pack_cold(x8, self.cold_delta)
+                sc = np.asarray(pj[sname][:, ws])
+                recs.append((name, obj, sc))
+                nbytes += nb + sc.nbytes
+            planes.append(recs)
         if (self.host_budget_bytes is not None
                 and self.cold_bytes + nbytes > self.host_budget_bytes):
             raise PoolExhausted("cold (host) budget full")
-        self.cold[pid] = ColdPage(blobs, schemes, scales, nbytes)
+        self.cold[pid] = ColdPage(planes, nbytes, cls)
         self.cold_bytes += nbytes
-        self._free_warm.append(ws)
+        self._free_warm[cls].append(ws)
         self.tier[pid], self.slot[pid] = TIER_COLD, 0
-        self._warm_ids.discard(pid)
+        self._warm_ids[cls].discard(pid)
         self.stats["demote_cold"] += 1
 
     def promote_to_warm(self, pid: int, *, async_: bool = False):
@@ -421,34 +620,39 @@ class TieredKVStore:
         tick-start drain barrier, so the transfer overlaps the previous
         decode tick instead of blocking this call."""
         assert self.tier[pid] == TIER_COLD
-        if not self._free_warm:
-            raise PoolExhausted("warm tier full")
-        ws = self._free_warm.pop()
-        rec = self.cold.pop(pid)
+        rec = self.cold[pid]
+        cls = rec.cls
+        if not self._free_warm[cls]:
+            raise PoolExhausted(f"warm {cls} tier full")
+        ws = self._free_warm[cls].pop()
+        self.cold.pop(pid)
         self.cold_bytes -= rec.nbytes
         g = self.geom
         in_flight = []
-        for j in range(g.n_segments):
-            shp = (g.stacks[j], g.n_kv_heads, g.page_size, g.head_dim)
-            (kn, vn) = rec.schemes[j]
-            k8 = _unpack_cold(kn, rec.blobs[j][0], shp)
-            v8 = _unpack_cold(vn, rec.blobs[j][1], shp)
-            ks, vs = rec.scales[j]
+        for i, j in enumerate(self._seg_idx[cls]):
+            sg = g.seg_geoms[j]
+            widths = (sg.k_width, sg.v_width) if sg.v_width \
+                else (sg.k_width,)
+            planes = {}
+            for (name, obj, sc), (_, qname, sname), w in zip(
+                    rec.planes[i], _plane_triples(self.pools[j]), widths):
+                shp = (sg.n_stack, sg.heads, sg.rows, w)
+                planes[qname] = np.asarray(_unpack_cold(name, obj, shp),
+                                           np.int8)
+                planes[sname] = np.asarray(sc, np.float32)
             if async_:
-                in_flight.append(tuple(
-                    jax.device_put(a) for a in
-                    (np.asarray(k8, np.int8), np.asarray(ks, np.float32),
-                     np.asarray(v8, np.int8), np.asarray(vs, np.float32))))
+                in_flight.append((j, {n: jax.device_put(a)
+                                      for n, a in planes.items()}))
             else:
                 self.pools = self.pools[:j] + (_write_warm(
-                    self.pools[j], ws, jnp.asarray(k8, jnp.int8),
-                    jnp.asarray(ks), jnp.asarray(v8, jnp.int8),
-                    jnp.asarray(vs)),) + self.pools[j + 1:]
+                    self.pools[j], ws,
+                    {n: jnp.asarray(a) for n, a in planes.items()}),) \
+                    + self.pools[j + 1:]
         if async_:
             self._pending_warm[pid] = (ws, in_flight)
             self.stats["promote_warm_async"] += 1
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
-        self._warm_ids.add(pid)
+        self._warm_ids[cls].add(pid)
         self.stats["promote_warm"] += 1
 
     def commit_page(self, pid: int):
@@ -463,10 +667,10 @@ class TieredKVStore:
         if pending is None:
             return
         ws, in_flight = pending
-        for j, (k8, ks, v8, vs) in enumerate(in_flight):
-            jax.block_until_ready((k8, ks, v8, vs))
+        for j, planes in in_flight:
+            jax.block_until_ready(tuple(planes.values()))
             self.pools = self.pools[:j] + (_write_warm(
-                self.pools[j], ws, k8, ks, v8, vs),) + self.pools[j + 1:]
+                self.pools[j], ws, planes),) + self.pools[j + 1:]
 
     def commit_promotions(self) -> int:
         """The explicit drain barrier: land every in-flight async
@@ -479,18 +683,20 @@ class TieredKVStore:
         return n
 
     def promote_to_hot(self, pid: int):
-        """warm -> hot: dequantize into a hot slot (needed for page writes)."""
+        """warm -> hot: dequantize into a hot slot (needed for page writes
+        and for state slabs, which decode reads/writes every tick)."""
         assert self.tier[pid] == TIER_WARM
         self._commit_one(pid)               # flush any in-flight promotion
-        if not self._free_hot:
-            raise PoolExhausted("hot tier full")
+        cls = self._cls(pid)
+        if not self._free_hot[cls]:
+            raise PoolExhausted(f"hot {cls} tier full")
         ws = int(self.slot[pid])
-        hs = self._free_hot.pop()
-        for j in range(self.geom.n_segments):
+        hs = self._free_hot[cls].pop()
+        for j in self._seg_idx[cls]:
             self.pools = self.pools[:j] + (_promote_warm_to_hot(
                 self.pools[j], ws, hs),) + self.pools[j + 1:]
-        self._free_warm.append(ws)
+        self._free_warm[cls].append(ws)
         self.tier[pid], self.slot[pid] = TIER_HOT, hs
-        self._warm_ids.discard(pid)
-        self._hot_ids.add(pid)
+        self._warm_ids[cls].discard(pid)
+        self._hot_ids[cls].add(pid)
         self.stats["promote_hot"] += 1

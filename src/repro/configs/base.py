@@ -10,6 +10,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+#: The one end-of-sequence token id every layer defaults to.  ServeConfig,
+#: both engines and the data pipeline import THIS constant -- never write
+#: a literal eos default (PR 4 fixed a silent divergence where direct
+#: engine construction defaulted to 1 while ServeConfig defaulted to 0,
+#: so the two construction paths stopped on different tokens).
+DEFAULT_EOS_ID = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class MLAConfig:

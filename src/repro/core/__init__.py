@@ -1,21 +1,17 @@
-"""DEPRECATED: ``repro.core`` moved to ``repro.assist`` (assist-task API).
+"""REMOVED: ``repro.core`` became ``repro.assist`` (the assist-task API).
 
-The registry/controller/schemes stack became the generalized assist-task
-framework in ``repro.assist`` (compress + memoize + prefetch kinds, one
-AssistController, declarative AssistSpec).  This package re-exports the
-old entry points for one deprecation cycle; new code imports
-``repro.assist`` (see DESIGN.md 11 for the migration map).
+The deprecation shims shipped for exactly one PR cycle (PR 3) and were
+deleted on schedule.  Importing this package (or any of its old
+submodules) raises immediately with the migration map below.
 """
-import warnings as _warnings
 
-_warnings.warn(
-    "repro.core is deprecated: the assist framework moved to repro.assist "
-    "(repro.core.schemes -> repro.assist.schemes, controller/registry/"
-    "memoize/policy likewise); this shim lasts one PR cycle",
-    DeprecationWarning, stacklevel=2)
-
-from repro.assist.registry import AssistRegistry, REGISTRY, default_registry
-from repro.assist.controller import AssistController
-from repro.assist.tasks import (RooflineTerms, SiteDescriptor, SiteDecision)
-from repro.assist.plan import (CompressionPlan, RAW_PLAN, CABA_BDI_PLAN,
-                               CABA_FULL_PLAN, sites_for_step)
+raise ImportError(
+    "repro.core was removed: the assist framework lives in repro.assist. "
+    "Migrate imports as follows -- "
+    "repro.core.schemes -> repro.assist.schemes, "
+    "repro.core.controller -> repro.assist.controller, "
+    "repro.core.registry -> repro.assist.registry, "
+    "repro.core.memoize -> repro.assist.memoize, "
+    "repro.core.bytesops -> repro.assist.bytesops, "
+    "repro.core.policy -> repro.assist.plan "
+    "(see DESIGN.md 11 for the full migration map)")

@@ -23,7 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig, DEFAULT_EOS_ID, ShapeConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +33,7 @@ class DataConfig:
     global_batch: int
     seed: int = 0
     mean_doc_len: int = 512
-    eos_id: int = 1
+    eos_id: int = DEFAULT_EOS_ID
 
 
 def _doc(cfg: DataConfig, doc_idx: int) -> np.ndarray:
@@ -105,7 +105,8 @@ def device_batch(cfg: DataConfig, step: int, sharding=None) -> dict:
 
 
 def arch_batch(arch: ArchConfig, shape: ShapeConfig, step: int, *,
-               seed: int = 0, sharding=None, eos_id: int = 1) -> dict:
+               seed: int = 0, sharding=None,
+               eos_id: int = DEFAULT_EOS_ID) -> dict:
     """Batch matching models.model.input_specs for (arch, shape).
 
     ``eos_id`` is the document-separator token; launch drivers thread it

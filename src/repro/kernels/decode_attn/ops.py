@@ -208,3 +208,98 @@ def attn_backend_pallas_int8(q, pools_j, bt, lengths, *, window: int = 0,
         q, pools_j["kh"], pools_j["vh"], pools_j["k8"], pools_j["ks"],
         pools_j["v8"], pools_j["vs"], bt, lengths, out_dtype=q.dtype,
         window=window, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# latent-page backends (absorbed-form MLA decode over paged latents)
+# ---------------------------------------------------------------------------
+#
+# MLA's absorbed decode attends directly against the per-token LATENT
+# (kv_lora_rank floats) plus the shared single-head rope key
+# (rope_head_dim floats) -- pages carry those two planes (kh = latent,
+# vh = rope key, ONE head) instead of per-head K/V.  A latent backend's
+# signature mirrors the GQA one but takes the two query factors the
+# absorbed form produces:
+#
+#   backend(q_lat, q_rope, pools_j, bt, lengths, *, scale, has_warm=True,
+#           interpret=True) -> o_lat f32[B, H, lora]
+#
+# The caller (models/mla.py::mla_paged_decode) folds W_uk into q_lat
+# before and W_uv into o_lat after, so the backend is pure cache math.
+# Only ``gather`` is implemented; the Pallas kernels raise
+# NotImplementedError until the TPU bring-up pass (ROADMAP).
+
+LATENT_ATTN_BACKENDS: dict = {}
+
+
+def register_latent_backend(name: str):
+    def deco(fn):
+        LATENT_ATTN_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_latent_backend(name: str):
+    try:
+        return LATENT_ATTN_BACKENDS[name]
+    except KeyError:
+        if name in ATTN_BACKENDS:
+            raise NotImplementedError(
+                f"attention backend {name!r} has no MLA latent-page path "
+                f"yet (Pallas latent kernel pending the TPU pass; see "
+                f"ROADMAP); use backend='gather' for MLA models") from None
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {attn_backend_names()}") from None
+
+
+def latent_backend_names() -> tuple:
+    return tuple(sorted(LATENT_ATTN_BACKENDS))
+
+
+def masked_latent_decode_attn(q_lat, q_rope, c, r, valid, scale):
+    """Absorbed-MLA decode attention over a dense latent cache.
+
+    q_lat: f32[B,H,lora] (W_uk already folded in); q_rope: f32[B,H,dr];
+    c: [B,S,lora]; r: [B,S,dr]; valid: bool[B,S] -> o_lat f32[B,H,lora].
+
+    This is THE reference latent attention: the dense engine's MLA decode
+    (models/mla.py::mla_decode) delegates here, so the latent gather
+    backend is bit-identical to it by construction -- the equivalence
+    oracle for MLA paged decode.
+    """
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat, c.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope,
+                           r.astype(jnp.float32))) * scale
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", w, c.astype(jnp.float32))
+
+
+@register_latent_backend("gather")
+def latent_backend_gather(q_lat, q_rope, pools_j, bt, lengths, *,
+                          scale: float, has_warm: bool = True,
+                          interpret: bool = True):
+    """jnp baseline: gather both tiers into dense latent/rope caches, then
+    run the reference absorbed attention."""
+    del interpret
+    ch, rh = pools_j["kh"], pools_j["vh"]     # [1+hot, 1, ps, lora/dr]
+    B = q_lat.shape[0]
+    ps = ch.shape[2]
+    maxp = bt.shape[1]
+    is_warm = bt < 0
+    hot_idx = jnp.where(bt > 0, bt, 0)
+    warm_idx = jnp.where(is_warm, -bt, 0)
+    sel = is_warm[:, :, None, None, None]
+
+    def gathered(hot_pool, q8_pool, sc_pool):
+        hot = hot_pool[hot_idx].astype(jnp.float32)   # [B, maxp, 1, ps, w]
+        if has_warm:
+            warm = (q8_pool[warm_idx].astype(jnp.float32)
+                    * sc_pool[warm_idx][..., None])
+            hot = jnp.where(sel, warm, hot)
+        return hot.reshape(B, maxp * ps, hot_pool.shape[-1])
+
+    c = gathered(ch, pools_j["k8"], pools_j["ks"])
+    r = gathered(rh, pools_j["v8"], pools_j["vs"])
+    return masked_latent_decode_attn(q_lat, q_rope, c, r,
+                                     _pool_valid(bt, lengths, ps, 0), scale)

@@ -26,6 +26,7 @@ import time
 import numpy as np
 
 from repro.kernels.decode_attn.ops import attn_backend_names
+from repro.configs.base import DEFAULT_EOS_ID
 from repro.serving.config import ServeConfig
 from repro.serving.engine import Request
 
@@ -49,7 +50,7 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--kv-mode", default="bf16", choices=("bf16", "int8"))
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--eos-id", type=int, default=0,
+    ap.add_argument("--eos-id", type=int, default=DEFAULT_EOS_ID,
                     help="end-of-sequence token id (stops a request)")
     ap.add_argument("--paged", action="store_true",
                     help="use the paged, tiered KV cache (repro.cache)")

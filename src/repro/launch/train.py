@@ -22,6 +22,7 @@ import jax
 
 from repro.assist import AssistSpec
 from repro.configs import get_arch, reduced as reduce_cfg
+from repro.configs.base import DEFAULT_EOS_ID
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import arch_batch
 from repro.models.model import build_model
@@ -50,7 +51,7 @@ def main(argv=None):
     ap.add_argument("--grad-compress-kind", default="int8",
                     choices=("int8", "fp8"),
                     help="grad-collective scheme (with --grad-compress-axis)")
-    ap.add_argument("--eos-id", type=int, default=1,
+    ap.add_argument("--eos-id", type=int, default=DEFAULT_EOS_ID,
                     help="document-separator token in the synthetic stream")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)

@@ -164,27 +164,27 @@ def mla_decode(cfg: ArchConfig, p, x, state, pos):
         cs = upd2(state["cs"], cs_new)
         state = dict(state, c8=c8, cs=cs, r=cache_r)
         Smax = c8.shape[1]
+        valid = jnp.arange(Smax)[None, :] <= pos_rows[:, None]  # incl. new
         # scales factor out of the latent contractions: int8 bytes in HBM
         lat_logits = jnp.einsum("bhr,bsr->bhs", q_lat,
                                 c8.astype(jnp.float32)) * cs[:, None, :]
-    else:
-        cache_c = upd3(state["c"], c_new)
-        state = dict(state, c=cache_c, r=cache_r)
-        Smax = cache_c.shape[1]
-        lat_logits = jnp.einsum("bhr,bsr->bhs", q_lat,
-                                cache_c.astype(jnp.float32))
-    logits = (lat_logits
-              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
-                           cache_r.astype(jnp.float32))) * scale
-    valid = jnp.arange(Smax)[None, :] <= pos_rows[:, None]  # incl. new tok
-    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
-    w = jax.nn.softmax(logits, axis=-1)
-    if compressed:
+        logits = (lat_logits
+                  + jnp.einsum("bhr,bsr->bhs",
+                               q_rope[:, 0].astype(jnp.float32),
+                               cache_r.astype(jnp.float32))) * scale
+        logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
         o_lat = jnp.einsum("bhs,bsr->bhr", w * state["cs"][:, None, :],
                            state["c8"].astype(jnp.float32))
     else:
-        o_lat = jnp.einsum("bhs,bsr->bhr", w,
-                           state["c"].astype(jnp.float32))
+        from repro.kernels.decode_attn.ops import masked_latent_decode_attn
+        cache_c = upd3(state["c"], c_new)
+        state = dict(state, c=cache_c, r=cache_r)
+        Smax = cache_c.shape[1]
+        valid = jnp.arange(Smax)[None, :] <= pos_rows[:, None]  # incl. new
+        o_lat = masked_latent_decode_attn(
+            q_lat, q_rope[:, 0].astype(jnp.float32), cache_c, cache_r,
+            valid, scale)
     # fold W_uv into the output
     o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
     out = jnp.einsum("bf,fd->bd", o.reshape(B, H * m.v_head_dim).astype(x.dtype),
@@ -196,3 +196,44 @@ def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
     m = cfg.mla
     return (jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
             jnp.zeros((batch, max_len, m.rope_head_dim), dtype))
+
+
+def mla_paged_decode(cfg: ArchConfig, p, x, pools_j, bt, lengths, *,
+                     has_warm: bool = True, backend: str = "gather",
+                     interpret: bool = True):
+    """Absorbed-form decode over LATENT PAGES (the "mla_latent" page kind).
+
+    x: [B,1,D]; pools_j: one layer's tiered latent pools (kh = latent
+    c [1+hot, 1, ps, lora], vh = rope key r [1+hot, 1, ps, dr], plus the
+    int8 warm planes); bt: int32[B, max_pages] encoded locations;
+    lengths: int32[B].  The write page (lengths // ps) must be hot.
+    Numerically identical to :func:`mla_decode` over a dense cache when
+    every page is hot (shared reference attention, see
+    kernels/decode_attn/ops.py::masked_latent_decode_attn).
+    """
+    from repro.kernels.decode_attn import ops as attn_ops
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    ch, rh = pools_j["kh"], pools_j["vh"]
+    ps = ch.shape[2]
+    q_nope, q_rope = _queries(cfg, p, x, lengths[:, None])   # [B,1,H,*]
+    c_new, r_new = _latent(cfg, p, x, lengths[:, None])      # [B,1,lora/dr]
+    w_uk, w_uv = _absorb_mats(cfg, p)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    # append the new token's latent into its (hot) page
+    wp, offs = lengths // ps, lengths % ps
+    locs_w = jnp.take_along_axis(bt, wp[:, None], axis=1)[:, 0]
+    ch = ch.at[locs_w, 0, offs].set(c_new[:, 0, :].astype(ch.dtype))
+    rh = rh.at[locs_w, 0, offs].set(r_new[:, 0, :].astype(rh.dtype))
+    pools_j = dict(pools_j, kh=ch, vh=rh)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    o_lat = attn_ops.get_latent_backend(backend)(
+        q_lat, q_rope[:, 0].astype(jnp.float32), pools_j, bt, lengths + 1,
+        scale=scale, has_warm=has_warm, interpret=interpret)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bf,fd->bd",
+                     o.reshape(B, H * m.v_head_dim).astype(x.dtype),
+                     getw(p, "wo"))
+    return out[:, None], pools_j

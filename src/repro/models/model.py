@@ -26,7 +26,8 @@ class ModelFns:
     prefill: Callable         # (params, batch, max_len) -> (logits, state)
     decode_step: Callable     # (params, state, tokens) -> (logits, state)
     init_state: Callable      # (batch, max_len) -> state
-    # (params, pools, tokens, block_table, lengths) -> (logits, pools)
+    # (params, pools, tokens, block_table, lengths, state_slots)
+    #   -> (logits, pools)
     paged_decode_step: Callable = None
 
 
@@ -72,11 +73,11 @@ def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
     def decode_step(params, state, tokens):
         return T.stack_decode_step(cfg, params, state, tokens)
 
-    def paged_decode_step(params, pools, tokens, block_table, lengths, *,
-                          has_warm: bool = True, backend: str = "gather",
-                          interpret: bool = True):
+    def paged_decode_step(params, pools, tokens, block_table, lengths,
+                          state_slots=None, *, has_warm: bool = True,
+                          backend: str = "gather", interpret: bool = True):
         return T.stack_paged_decode_step(cfg, params, pools, tokens,
-                                         block_table, lengths,
+                                         block_table, lengths, state_slots,
                                          has_warm=has_warm, backend=backend,
                                          interpret=interpret)
 

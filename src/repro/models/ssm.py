@@ -430,3 +430,74 @@ def rwkv6_init_state(cfg: ArchConfig, batch: int):
     return {"tm_prev": jnp.zeros((batch, D), jnp.bfloat16),
             "cm_prev": jnp.zeros((batch, D), jnp.bfloat16),
             "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# state slabs (paged engine: the "state_slab" page kind)
+# ---------------------------------------------------------------------------
+#
+# Unlike attention KV, the recurrence state is FIXED-SIZE per request, so
+# the paged engine parks it as one non-growing page: the per-layer state
+# pytree flattens to a single f32 vector ("slab") that the tiered store
+# quantizes/packs like any page.  f32 is the widest dtype any component
+# uses, so flatten -> unflatten round-trips the dense engine's state
+# BIT-EXACTLY (bf16 -> f32 -> bf16 is the identity) -- the hot-only
+# paged path stays token-identical to the dense engine.
+
+STATE_QUANT_ROW = 128     # floats per absmax-int8 row when a slab parks
+
+
+def state_layout(cfg: ArchConfig, kind: str) -> tuple:
+    """Ordered ``(name, shape, dtype)`` of one layer's decode state (no
+    batch/stack axes).  The order IS the slab layout; both flatten and
+    unflatten walk it."""
+    if kind == "mamba2":
+        s = cfg.ssm
+        d_in, nheads, conv_ch = mamba2_dims(cfg)
+        return (("h", (nheads, s.d_state, s.head_dim), jnp.float32),
+                ("conv", (s.d_conv - 1, conv_ch), jnp.bfloat16))
+    if kind == "rwkv6":
+        H, dh = rwkv6_dims(cfg)
+        D = cfg.d_model
+        return (("tm_prev", (D,), jnp.bfloat16),
+                ("cm_prev", (D,), jnp.bfloat16),
+                ("wkv", (H, dh, dh), jnp.float32))
+    raise ValueError(f"no state slab for layer kind {kind!r}")
+
+
+def state_width(cfg: ArchConfig, kind: str) -> int:
+    """Flat f32 width of one layer's state slab."""
+    return sum(int(np.prod(shape)) for _, shape, _ in state_layout(cfg, kind))
+
+
+def state_slab_rows(cfg: ArchConfig, kind: str,
+                    quant_row: int = STATE_QUANT_ROW) -> tuple:
+    """(rows, width) the tiered store shapes the slab as: ``rows``
+    absmax-int8 quantization rows of ``width`` floats (padded with
+    zeros), bounding the parked-state error per row rather than per
+    slab."""
+    W = state_width(cfg, kind)
+    width = min(quant_row, W)
+    return -(-W // width), width
+
+
+def flatten_state(cfg: ArchConfig, kind: str, st) -> jax.Array:
+    """State pytree with arbitrary leading axes ``L`` -> f32[*L, W]."""
+    parts = []
+    for name, shape, _ in state_layout(cfg, kind):
+        a = st[name]
+        lead = a.shape[:a.ndim - len(shape)]
+        parts.append(a.astype(jnp.float32).reshape(lead + (-1,)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unflatten_state(cfg: ArchConfig, kind: str, flat):
+    """Inverse of :func:`flatten_state`: f32[*L, W] -> state pytree with
+    each component back at its own dtype."""
+    lead = flat.shape[:-1]
+    st, off = {}, 0
+    for name, shape, dtype in state_layout(cfg, kind):
+        n = int(np.prod(shape))
+        st[name] = flat[..., off:off + n].reshape(lead + shape).astype(dtype)
+        off += n
+    return st

@@ -544,14 +544,20 @@ def stack_decode_step(cfg: ArchConfig, params, state, tokens):
 # guarantee.
 #
 # Coverage is dispatched PER LAYER, not per model: each layer kind maps to
-# a capability (global-GQA / local-window-GQA) and the stack is walked as
-# SEGMENTS -- unstacked head layers, the scanned pattern, unstacked tail
-# layers -- each segment owning one entry of the tiered pool tuple.  The
+# a PAGE KIND (repro.assist.page_kinds) -- per-head attention KV
+# (global-GQA / local-window-GQA / weight-shared), the absorbed-MLA
+# latent, or a fixed-size SSM/RWKV state slab -- and the stack is walked
+# as SEGMENTS: unstacked head layers, the scanned pattern, unstacked tail
+# layers, each segment owning one entry of the tiered pool tuple.  The
 # attention math itself is a pluggable backend (kernels/decode_attn/ops.py
-# registry: gather / pallas / pallas_int8).
+# registry: gather / pallas / pallas_int8; latent pages have their own
+# backend table, gather-only until the TPU pass).
 
-#: layer kinds the paged path can decode (value: uses cfg.window)
-PAGED_ATTN_KINDS = {"attn": False, "attn_dense": False, "attn_local": True}
+#: attention layer kinds the paged path can decode (value: uses cfg.window)
+PAGED_ATTN_KINDS = {"attn": False, "attn_dense": False, "attn_local": True,
+                    "shared_attn": True}
+#: recurrence layer kinds parked as non-growing state slabs
+PAGED_STATE_KINDS = ("mamba2", "rwkv6")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -559,8 +565,17 @@ class PagedSegment:
     """One pool-owning slice of the stack: a head/tail layer (n_stack=1) or
     one scanned pattern position (n_stack=n_scan)."""
     name: str          # "head_0" | "pat_1" | "tail_0" (state dict keys)
-    kind: str
+    kind: str          # layer kind (attn / attn_local / mamba2 / ...)
     n_stack: int
+    page_kind: str = "attn_kv"     # repro.assist.page_kinds name
+
+
+def _layer_page_kind(cfg: ArchConfig, kind: str) -> str:
+    if kind in PAGED_STATE_KINDS:
+        return "state_slab"
+    if _is_attn(kind) and cfg.mla is not None:
+        return "mla_latent"
+    return "attn_kv"
 
 
 def paged_layer_window(cfg: ArchConfig, kind: str) -> int:
@@ -572,21 +587,23 @@ def paged_unsupported_layers(cfg: ArchConfig) -> list:
     """Layers the paged decode path cannot serve, as "position:kind" tags.
 
     Per-layer capability dispatch: a model is paged-decodable iff this is
-    empty; the engine surfaces the exact offending layers otherwise."""
+    empty; the engine surfaces the exact offending layers otherwise.
+    Since the page-kind generalization (MLA latent pages, SSM/RWKV state
+    parking, weight-shared attention) every decoder layer kind is
+    covered; only encoder-only stacks remain out."""
     if cfg.frontend == "audio":
         return ["*:audio-encoder"]
-    if cfg.mla is not None:
-        return ["*:mla"]
+    supported = set(PAGED_ATTN_KINDS) | set(PAGED_STATE_KINDS)
     plan = stack_plan(cfg)
     bad = []
     for i, kind in enumerate(plan.head):
-        if kind not in PAGED_ATTN_KINDS:
+        if kind not in supported:
             bad.append(f"head[{i}]:{kind}")
     for j, kind in enumerate(plan.pattern):
-        if kind not in PAGED_ATTN_KINDS:
+        if kind not in supported:
             bad.append(f"pattern[{j}]:{kind}")
     for i, kind in enumerate(plan.tail):
-        if kind not in PAGED_ATTN_KINDS:
+        if kind not in supported:
             bad.append(f"tail[{i}]:{kind}")
     return bad
 
@@ -598,14 +615,42 @@ def paged_decode_supported(cfg: ArchConfig) -> bool:
 def paged_segments(cfg: ArchConfig) -> tuple:
     """Pool-tuple layout for a paged-decodable model (head, pattern, tail)."""
     plan = stack_plan(cfg)
-    segs = [PagedSegment(f"head_{i}", kind, 1)
-            for i, kind in enumerate(plan.head)]
+
+    def seg(name, kind, n_stack):
+        return PagedSegment(name, kind, n_stack, _layer_page_kind(cfg, kind))
+
+    segs = [seg(f"head_{i}", kind, 1) for i, kind in enumerate(plan.head)]
     if plan.n_scan:
-        segs += [PagedSegment(f"pat_{j}", kind, plan.n_scan)
+        segs += [seg(f"pat_{j}", kind, plan.n_scan)
                  for j, kind in enumerate(plan.pattern)]
-    segs += [PagedSegment(f"tail_{i}", kind, 1)
-             for i, kind in enumerate(plan.tail)]
+    segs += [seg(f"tail_{i}", kind, 1) for i, kind in enumerate(plan.tail)]
     return tuple(segs)
+
+
+def paged_geometry(cfg: ArchConfig, page_size: int):
+    """Per-segment :class:`repro.cache.tiers.SegmentGeometry` tuple wrapped
+    in a PageGeometry -- the single source of page shapes for the engine
+    and the tiered store."""
+    from repro.cache.tiers import PageGeometry, SegmentGeometry
+    plan = stack_plan(cfg)
+    geoms = []
+    for s in paged_segments(cfg):
+        if s.page_kind == "state_slab":
+            rows, width = SSM.state_slab_rows(cfg, s.kind)
+            geoms.append(SegmentGeometry("state_slab", s.n_stack, 1, rows,
+                                         width))
+        elif s.page_kind == "mla_latent":
+            m = cfg.mla
+            geoms.append(SegmentGeometry("mla_latent", s.n_stack, 1,
+                                         page_size, m.kv_lora_rank,
+                                         m.rope_head_dim))
+        else:
+            geoms.append(SegmentGeometry("attn_kv", s.n_stack,
+                                         cfg.n_kv_heads, page_size,
+                                         cfg.head_dim, cfg.head_dim))
+    return PageGeometry(n_pat=len(plan.pattern), n_scan=plan.n_scan,
+                        n_kv_heads=cfg.n_kv_heads, page_size=page_size,
+                        head_dim=cfg.head_dim, segments=tuple(geoms))
 
 
 def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool,
@@ -639,17 +684,58 @@ def _gqa_paged_decode(cfg, p, x, pools_j, bt, lengths, *, has_warm: bool,
     return jnp.einsum("bsf,fd->bsd", out, Q.getw(p, "wo")), pools_j
 
 
+def _state_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
+                        state_slots, lengths):
+    """One recurrence layer's decode against its parked state slab.
+
+    pools_j: one segment's state pools (sh f32[1+hot_state, 1, rows,
+    width] after the stack peel); state_slots: int32[B] hot slot per lane
+    (0 = trash for idle lanes).  The slab round-trips the dense engine's
+    state pytree bit-exactly (f32 superset dtype), so hot-only paged
+    decode stays token-identical.
+    """
+    B = x.shape[0]
+    sh = pools_j["sh"]
+    W = SSM.state_width(cfg, kind)
+    flat = sh[state_slots].reshape(B, -1)[:, :W]
+    st = SSM.unflatten_state(cfg, kind, flat)
+    x, st_new = block_apply_decode(cfg, kind, p, x, st, lengths)
+    flat_new = SSM.flatten_state(cfg, kind, st_new)
+    pad = sh.shape[-2] * sh.shape[-1] - W
+    flat_new = jnp.pad(flat_new, ((0, 0), (0, pad)))
+    sh = sh.at[state_slots].set(
+        flat_new.reshape(B, *sh.shape[1:]).astype(sh.dtype))
+    return x, dict(pools_j, sh=sh)
+
+
+#: hot planes each page kind writes per tick (scan ys carry ONLY these)
+_HOT_PLANES = ("kh", "vh", "sh")
+
+
 def block_apply_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
-                             bt, lengths, *, has_warm: bool = True,
+                             bt, lengths, *, state_slots=None,
+                             has_warm: bool = True,
                              backend: str = "gather",
                              interpret: bool = True):
+    """One layer's paged decode, dispatched on the layer's page kind:
+    attention layers gather token pages (per-head KV or MLA latent);
+    mamba2/rwkv6 layers read/write their state slab in place."""
+    if kind in PAGED_STATE_KINDS:
+        return _state_paged_decode(cfg, kind, p, x, pools_j, state_slots,
+                                   lengths)
     assert kind in PAGED_ATTN_KINDS, \
         f"paged decode does not support {kind!r}"
     h = L.norm_apply(cfg, p["norm1"], x)
-    out, pools_j = _gqa_paged_decode(cfg, p["attn"], h, pools_j, bt, lengths,
-                                     has_warm=has_warm, backend=backend,
-                                     window=paged_layer_window(cfg, kind),
-                                     interpret=interpret)
+    if cfg.mla is not None:
+        out, pools_j = MLA.mla_paged_decode(cfg, p["attn"], h, pools_j, bt,
+                                            lengths, has_warm=has_warm,
+                                            backend=backend,
+                                            interpret=interpret)
+    else:
+        out, pools_j = _gqa_paged_decode(
+            cfg, p["attn"], h, pools_j, bt, lengths, has_warm=has_warm,
+            backend=backend, window=paged_layer_window(cfg, kind),
+            interpret=interpret)
     x = x + out
     h = L.norm_apply(cfg, p["norm2"], x)
     out, _ = _ffn_apply(cfg, kind, p, h, moe_dropless=True)
@@ -657,32 +743,47 @@ def block_apply_paged_decode(cfg: ArchConfig, kind: str, p, x, pools_j,
 
 
 def stack_paged_decode_step(cfg: ArchConfig, params, pools, tokens, bt,
-                            lengths, *, has_warm: bool = True,
+                            lengths, state_slots=None, *,
+                            has_warm: bool = True,
                             backend: str = "gather",
                             interpret: bool = True):
     """One paged decode step over the full stack (head + scan + tail).
 
     pools: tuple of tier pool dicts, one per :func:`paged_segments` entry
     (leading axis = segment n_stack); tokens: int32[B, 1]; bt:
-    int32[B, max_pages]; lengths: int32[B].  Returns (logits, pools').
+    int32[B, max_pages]; lengths: int32[B]; state_slots: int32[B] hot
+    state-slab slot per lane (required iff the stack has mamba2/rwkv6
+    layers; 0 = trash).  Returns (logits, pools').
     """
     plan = stack_plan(cfg)
     bad = paged_unsupported_layers(cfg)
     if bad:
         raise ValueError(f"{cfg.name}: paged decode unsupported for layers "
                          f"{bad}")
+    has_state = any(k in PAGED_STATE_KINDS
+                    for k in plan.head + plan.pattern + plan.tail)
+    if has_state and state_slots is None:
+        raise ValueError(f"{cfg.name}: stack has recurrence layers; paged "
+                         f"decode needs state_slots")
     x = jnp.take(params["embed"], tokens, axis=0)
     x = shard(x, "batch", None, None)
+    shared_p = params.get("shared")
     new_pools = list(pools)
     idx = 0
 
+    def hot_of(pj):
+        return {k: pj[k] for k in _HOT_PLANES if k in pj}
+
     def run_unstacked(kind, layer_p, x, seg_idx):
+        p = layer_p if kind != "shared_attn" else shared_p
         pj = jax.tree.map(lambda a: a[0], pools[seg_idx])
-        x, pj = block_apply_paged_decode(cfg, kind, layer_p, x, pj, bt,
-                                         lengths, has_warm=has_warm,
+        x, pj = block_apply_paged_decode(cfg, kind, p, x, pj, bt,
+                                         lengths, state_slots=state_slots,
+                                         has_warm=has_warm,
                                          backend=backend, interpret=interpret)
-        new_pools[seg_idx] = dict(pools[seg_idx], kh=pj["kh"][None],
-                                  vh=pj["vh"][None])
+        new_pools[seg_idx] = dict(pools[seg_idx],
+                                  **{k: v[None]
+                                     for k, v in hot_of(pj).items()})
         return x
 
     for i, kind in enumerate(plan.head):
@@ -695,16 +796,18 @@ def stack_paged_decode_step(cfg: ArchConfig, params, pools, tokens, bt,
 
         # only the hot planes are written per tick; returning the warm
         # planes through the scan ys would re-materialize the whole int8
-        # tier every step, so the ys carry kh/vh and the rest passes
+        # tier every step, so the ys carry kh/vh/sh and the rest passes
         # through untouched
         def body(x, inp):
             layer_p, layer_pools = inp
             hot_updates = []
             for j, kind in enumerate(plan.pattern):
+                p = layer_p[j] if kind != "shared_attn" else shared_p
                 x, pj = block_apply_paged_decode(
-                    cfg, kind, layer_p[j], x, layer_pools[j], bt, lengths,
-                    has_warm=has_warm, backend=backend, interpret=interpret)
-                hot_updates.append({"kh": pj["kh"], "vh": pj["vh"]})
+                    cfg, kind, p, x, layer_pools[j], bt, lengths,
+                    state_slots=state_slots, has_warm=has_warm,
+                    backend=backend, interpret=interpret)
+                hot_updates.append(hot_of(pj))
             return x, tuple(hot_updates)
 
         x, hot = jax.lax.scan(body, x, (params["scan"], scan_pools))

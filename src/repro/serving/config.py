@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 
 from repro.assist import AssistSpec
+from repro.configs.base import DEFAULT_EOS_ID
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +39,9 @@ class ServeConfig:
     max_len: int = 128
     max_new: int = 12
     seed: int = 0
-    eos_id: int = 0                 # end-of-sequence token both engines honor
+    # end-of-sequence token both engines honor; same constant the engine
+    # constructors default to, so direct construction and build() agree
+    eos_id: int = DEFAULT_EOS_ID
     # flat assist aliases (deprecated spelling; see AssistSpec)
     kv_mode: str = "bf16"           # dense engine cache mode (bf16 | int8)
     paged: bool = False

@@ -20,6 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import DEFAULT_EOS_ID
 from repro.models.model import ModelFns
 
 
@@ -98,8 +99,8 @@ class Engine(EngineBase):
     """Greedy/temperature sampling over a slot-batched decode state."""
 
     def __init__(self, model: ModelFns, params, *, batch_slots: int,
-                 max_len: int, kv_mode: str = "bf16", eos_id: int = 1,
-                 seed: int = 0):
+                 max_len: int, kv_mode: str = "bf16",
+                 eos_id: int = DEFAULT_EOS_ID, seed: int = 0):
         self.model = model
         self.params = params
         self.B = batch_slots

@@ -2,9 +2,13 @@
 
 Differences from the dense ``engine.Engine``:
 
-* KV lives in fixed-size pages owned by ``repro.cache`` instead of per-slot
-  ``[B, max_len]`` slabs -- short requests hold short block tables, so no
-  HBM is spent on padding.
+* Decode state lives in fixed-size pages owned by ``repro.cache`` instead
+  of per-slot ``[B, max_len]`` slabs -- short requests hold short block
+  tables, so no HBM is spent on padding.  Every decode-state page KIND is
+  covered (repro.assist.page_kinds): per-head attention KV, the
+  absorbed-MLA latent (DeepSeek-V2), and the fixed-size recurrence state
+  of mamba2/rwkv6 layers, which is parked as ONE non-growing slab per
+  request.
 * ``lanes`` bounds how many requests DECODE per tick (the jit batch), but
   *residency* is bounded only by the HBM/host budgets: requests beyond the
   lane count are admitted (prefilled into pages) and parked, their pages
@@ -15,9 +19,9 @@ Differences from the dense ``engine.Engine``:
 
 With every tier but hot disabled and enough budget, outputs are
 token-identical to the dense engine on the same prompts (tests/
-test_paged_engine.py); the tiered configs trade bounded int8 error on
-parked requests for >= 2x resident-token capacity (benchmarks/
-serving_micro.py).
+test_paged_engine.py, test_paged_kinds.py); the tiered configs trade
+bounded int8 error on parked requests for >= 2x resident-token capacity
+(benchmarks/serving_micro.py).
 """
 from __future__ import annotations
 
@@ -31,11 +35,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.assist import AssistController
-from repro.cache import (BlockPool, CachePolicy, PageGeometry, TierConfig,
+from repro.cache import (BlockPool, CachePolicy, TierConfig,
                          TieredKVStore, TIER_COLD, TIER_WARM,
                          decode_roofline_terms)
 from repro.cache.block_pool import PoolExhausted
 from repro.cache.policy import kv_site, warm_ratio
+from repro.configs.base import DEFAULT_EOS_ID
+from repro.models import ssm as SSM
 from repro.models import transformer as T
 from repro.models.model import ModelFns
 from repro.serving.engine import EngineBase, Request
@@ -54,8 +60,9 @@ class PagedEngine(EngineBase):
     """Continuous batching over a paged, tiered KV cache."""
 
     def __init__(self, model: ModelFns, params, *, lanes: int, max_len: int,
-                 tier: Optional[TierConfig] = None, eos_id: int = 1,
-                 seed: int = 0, controller: Optional[AssistController] = None,
+                 tier: Optional[TierConfig] = None,
+                 eos_id: int = DEFAULT_EOS_ID, seed: int = 0,
+                 controller: Optional[AssistController] = None,
                  use_roofline_trigger: bool = True,
                  max_cold_pages: Optional[int] = None,
                  backend: str = "gather", interpret: bool = True):
@@ -72,33 +79,69 @@ class PagedEngine(EngineBase):
         self.max_len, self.eos_id = max_len, eos_id
         self.n_lanes = lanes
         self.maxp = max_len // tier.page_size
-        plan = T.stack_plan(cfg)
         self.segments = T.paged_segments(cfg)
-        geom = PageGeometry(n_pat=len(plan.pattern), n_scan=plan.n_scan,
-                            n_kv_heads=cfg.n_kv_heads,
-                            page_size=tier.page_size, head_dim=cfg.head_dim,
-                            seg_stacks=tuple(s.n_stack
-                                             for s in self.segments))
+        geom = T.paged_geometry(cfg, tier.page_size)
         self.geom = geom
-        hot, warm = tier.split_pages(geom.hot_page_bytes, geom.warm_page_bytes)
-        if max_cold_pages is None:
+        self.has_state = geom.has_state
+        if any(s.page_kind == "mla_latent" for s in self.segments):
+            # latent pages have a reduced backend table (gather-only until
+            # the TPU pass): fail at construction, not inside a jit trace
+            from repro.kernels.decode_attn import ops as attn_ops
+            attn_ops.get_latent_backend(backend)
+
+        # budget split: state slabs are carved out first (each decoding
+        # lane NEEDS its slab hot, plus one for swap-in headroom); token
+        # pages split what is left per the tier fractions
+        budget = tier.hbm_budget_bytes
+        hot_state = warm_state = max_cold_state = 0
+        if self.has_state:
+            hot_state = lanes + 1
+            if tier.enable_warm:
+                warm_state = max(2 * lanes, 2)
             if tier.enable_cold:
-                max_cold_pages = (tier.host_budget_bytes // geom.warm_page_bytes
-                                  if tier.host_budget_bytes
-                                  else 8 * (hot + warm))
-            else:
-                max_cold_pages = 0
-        num_pages = hot + warm + max_cold_pages
+                max_cold_state = 8 * (hot_state + warm_state)
+            budget = max(0, budget - hot_state * geom.state_hot_bytes
+                         - warm_state * geom.state_warm_bytes)
+        if geom.hot_page_bytes:
+            hot, warm = tier.split_pages(geom.hot_page_bytes,
+                                         geom.warm_page_bytes, budget=budget)
+            if max_cold_pages is None:
+                if tier.enable_cold:
+                    max_cold_pages = (
+                        tier.host_budget_bytes // geom.warm_page_bytes
+                        if tier.host_budget_bytes else 8 * (hot + warm))
+                else:
+                    max_cold_pages = 0
+        else:
+            # attention-free stack (pure SSM/RWKV): token pages hold zero
+            # bytes and exist only for block-table bookkeeping -- size the
+            # slot space to the state-bounded residency
+            hot = max(1, hot_state + warm_state + max_cold_state) * self.maxp
+            warm, max_cold_pages = 0, 0
+        num_pages = (hot + warm + max_cold_pages
+                     + hot_state + warm_state + max_cold_state)
         self.pool = BlockPool(num_pages, tier.page_size)
         self.store = TieredKVStore(geom, num_pages, hot_pages=hot,
-                                   warm_pages=warm,
+                                   warm_pages=warm, hot_state=hot_state,
+                                   warm_state=warm_state,
                                    host_budget_bytes=tier.host_budget_bytes,
                                    cold_delta=tier.cold_delta)
         terms = site = None
         if use_roofline_trigger:
-            resident_est = hot * tier.page_size
-            terms = decode_roofline_terms(cfg, lanes, resident_est)
-            site = kv_site(cfg, resident_est)
+            # resident-token estimate for the trigger: tokens the hot tier
+            # can actually hold.  Attention-free stacks' token slots are
+            # zero-byte bookkeeping (hot is inflated on purpose), so there
+            # residency is bounded by the hot STATE slots instead.
+            resident_est = (hot * tier.page_size if geom.hot_page_bytes
+                            else hot_state * max_len)
+            # page-kind-aware per-token bytes: MLA latents / hybrid stacks
+            # hold far less than the dense-GQA formula; the state slab is
+            # amortized over a full-length request
+            per_tok = (geom.hot_page_bytes / tier.page_size
+                       + geom.state_hot_bytes / max_len)
+            terms = decode_roofline_terms(cfg, lanes, resident_est,
+                                          kv_bytes=per_tok)
+            site = kv_site(cfg, resident_est, kv_bytes=per_tok)
         self.policy = CachePolicy(tier, controller=controller
                                   or AssistController(),
                                   terms=terms, site=site,
@@ -130,6 +173,13 @@ class PagedEngine(EngineBase):
 
     # -- request lifecycle ---------------------------------------------------
 
+    @staticmethod
+    def _state_rid(rid: int) -> int:
+        """Block-pool owner id of a request's state-slab page.  Kept
+        disjoint from request rids (>= 0) and the pool's free marker (-1)
+        so the slab never interleaves with the token-page block table."""
+        return -2 - rid
+
     def submit(self, req: Request):
         # fail fast at the API boundary: an oversize request can never be
         # admitted, and surfacing it mid-run would strand in-flight work
@@ -142,25 +192,55 @@ class PagedEngine(EngineBase):
     def resident_tokens(self) -> int:
         return sum(r.length for r in self.resident.values())
 
+    def _touch(self, rid: int):
+        self.pool.touch(rid, self.tick_no)
+        if self.has_state:
+            self.pool.touch(self._state_rid(rid), self.tick_no)
+
     def _segment_kv(self, one_state):
-        """Per-segment (k, v) [stack, G, S, dh] from a B=1 prefill state,
-        in :func:`repro.models.transformer.paged_segments` order."""
+        """Per GROWING segment (k, v) [stack, G, S, width] from a B=1
+        prefill state, in :func:`repro.models.transformer.paged_segments`
+        order.  MLA segments map (latent c, rope r) onto the (k, v)
+        planes with one head."""
         out = []
         for seg in self.segments:
+            if seg.page_kind == "state_slab":
+                continue
             if seg.name.startswith("pat_"):
                 st = one_state["scan"][int(seg.name[4:])]
-                out.append((st["k"][:, 0], st["v"][:, 0]))  # peel B
+                peel = lambda a: a[:, 0]               # drop B=1
             else:                     # head_i / tail_i: B=1 leading == stack
                 st = one_state[seg.name]
-                out.append((st["k"], st["v"]))
+                peel = lambda a: a
+            if seg.page_kind == "mla_latent":
+                out.append((peel(st["c"])[:, None], peel(st["r"])[:, None]))
+            else:
+                out.append((peel(st["k"]), peel(st["v"])))
         return out
 
+    def _segment_state(self, one_state):
+        """Per STATE segment, the flattened recurrence slab f32[stack, W]
+        from a B=1 prefill state."""
+        slabs = []
+        for seg in self.segments:
+            if seg.page_kind != "state_slab":
+                continue
+            if seg.name.startswith("pat_"):
+                st = one_state["scan"][int(seg.name[4:])]
+                st = jax.tree.map(lambda a: a[:, 0], st)   # drop B=1
+            else:
+                st = one_state[seg.name]
+            slabs.append(SSM.flatten_state(self.cfg, seg.kind, st))
+        return slabs
+
     def _protected(self) -> set[int]:
-        """Pages this tick's decode gather will touch (lane requests)."""
+        """Pages this tick's decode will touch (lane requests)."""
         prot: set[int] = set()
         for rid in self.lanes:
             if rid is not None:
                 prot.update(self.pool.table(rid))
+                if self.has_state:
+                    prot.update(self.pool.table(self._state_rid(rid)))
         return prot
 
     # -- admission (preemption-by-demotion, never rejection) -----------------
@@ -168,20 +248,29 @@ class PagedEngine(EngineBase):
     def _admit_one(self, req: Request, protected: set[int]) -> bool:
         plen = len(req.prompt)
         npg = self.pool.pages_for(plen)
-        if npg > self.pool.n_free:
+        if npg + (1 if self.has_state else 0) > self.pool.n_free:
             return False
         if not self.policy.make_hot_room(self.pool, self.store, protected,
                                          n=npg):
             return False
+        if self.has_state and not self.policy.make_hot_room(
+                self.pool, self.store, protected, cls="state"):
+            return False
         pages = self.pool.allocate(req.rid, npg)
         slots = [self.store.place_hot(p) for p in pages]
+        spid = None
+        if self.has_state:
+            spid = self.pool.allocate(self._state_rid(req.rid), 1)[0]
+            self.store.place_hot_state(spid)
         toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
         logits, one_state = self._prefill(self.params, {"tokens": toks})
         self.store.write_prefill(slots, self._segment_kv(one_state), S=plen)
+        if spid is not None:
+            self.store.write_state(spid, self._segment_state(one_state))
         tok = int(self._sample(logits[:, -1], req.temperature)[0])
         req.out.append(tok)
         self.resident[req.rid] = _RState(req, plen, tok, req.max_new - 1)
-        self.pool.touch(req.rid, self.tick_no)
+        self._touch(req.rid)
         self.peak_resident_tokens = max(self.peak_resident_tokens,
                                         self.resident_tokens())
         return True
@@ -195,13 +284,28 @@ class PagedEngine(EngineBase):
     # -- lane maintenance ----------------------------------------------------
 
     def _ensure_decodable(self, rid: int, protected: set[int]) -> bool:
-        """All of rid's pages gatherable and its write page hot; may
-        allocate the next page at a page boundary.  The request's own pages
-        join ``protected`` up front so making room for one of them can
-        never evict another."""
+        """All of rid's pages gatherable, its write page AND its state slab
+        hot; may allocate the next page at a page boundary.  The request's
+        own pages join ``protected`` up front so making room for one of
+        them can never evict another."""
         st = self.resident[rid]
         table = self.pool.table(rid)
         protected.update(table)
+        if self.has_state:
+            spid = self.pool.table(self._state_rid(rid))[0]
+            protected.add(spid)
+            if self.store.tier[spid] == TIER_COLD:
+                if not self.policy.make_warm_room(self.pool, self.store,
+                                                  protected, cls="state"):
+                    return False
+                self.store.promote_to_warm(spid)
+            else:
+                self.store.commit_page(spid)
+            if self.store.tier[spid] == TIER_WARM:
+                if not self.policy.make_hot_room(self.pool, self.store,
+                                                 protected, cls="state"):
+                    return False
+                self.store.promote_to_hot(spid)
         need = self.pool.pages_for(st.length + 1)
         while len(table) < need:
             if self.pool.n_free < 1 or not self.policy.make_hot_room(
@@ -310,16 +414,21 @@ class PagedEngine(EngineBase):
         bt = np.zeros((self.n_lanes, self.maxp), np.int32)
         lengths = np.zeros(self.n_lanes, np.int32)
         tokens = np.zeros((self.n_lanes, 1), np.int32)
+        state_slots = np.zeros(self.n_lanes, np.int32)
         for i in active:
             st = self.resident[self.lanes[i]]
             table = self.pool.table(self.lanes[i])
             bt[i, :len(table)] = [self.store.encoded_loc(p) for p in table]
             lengths[i] = st.length
             tokens[i, 0] = st.last_tok
+            if self.has_state:
+                spid = self.pool.table(self._state_rid(self.lanes[i]))[0]
+                state_slots[i] = self.store.state_hot_slot(spid)
 
         logits, pools = self._decode(self.params, self.store.pools,
                                      jnp.asarray(tokens), jnp.asarray(bt),
-                                     jnp.asarray(lengths))
+                                     jnp.asarray(lengths),
+                                     jnp.asarray(state_slots))
         self.store.pools = pools
         nxt = np.asarray(self._sample_lanes(logits[:, 0]))
 
@@ -333,11 +442,13 @@ class PagedEngine(EngineBase):
             st.last_tok = tok
             st.remaining -= 1
             self.tokens_generated += 1
-            self.pool.touch(rid, self.tick_no)
+            self._touch(rid)
             if st.remaining <= 0 or tok == self.eos_id:
                 st.req.done = True
                 self.finished.append(st.req)
                 freed = self.pool.free_request(rid)
+                if self.has_state:
+                    freed += self.pool.free_request(self._state_rid(rid))
                 for pid in freed:
                     self.store.release(pid)
                 self.policy.forget_pages(freed)
@@ -348,7 +459,8 @@ class PagedEngine(EngineBase):
         self.peak_resident_tokens = max(self.peak_resident_tokens,
                                         self.resident_tokens())
         # WaSP lookahead: start promoting the next parked requests' cold
-        # pages while the closing lanes finish.
+        # TOKEN pages while the closing lanes finish (a cold state slab is
+        # promoted synchronously at swap-in -- it is one small page).
         for rid in list(self.parked)[:max(closing, 0)]:
             cold = [p for p in self.pool.table(rid)
                     if self.store.tier[p] == TIER_COLD]
@@ -381,6 +493,8 @@ class PagedEngine(EngineBase):
                 "hbm_bytes_used": self.store.hbm_bytes_used(),
                 "cold_bytes": self.store.cold_bytes,
                 "tiers": self.store.tier_counts(),
+                "state_slots": {"hot": self.store.hot_state,
+                                "warm": self.store.warm_state},
                 "pool": dataclasses.asdict(self.pool.stats),
                 "store": dict(self.store.stats),
                 "policy": dict(self.policy.stats),

@@ -9,12 +9,12 @@ Covers the PR-3 redesign bars:
     compresses synthetic decode KV (the ROADMAP delta-transform item)
   * async prefetch promotion: deferred pool writes land bit-exactly at
     the commit barrier
-  * repro.core deprecation shims: same objects, DeprecationWarning
+  * repro.core REMOVAL: the shims lasted exactly one PR cycle; importing
+    any old path now fails with the migration map
 """
 import dataclasses
 import importlib
 import sys
-import warnings
 
 import numpy as np
 import jax
@@ -245,8 +245,9 @@ def test_cold_delta_roundtrip_bit_exact_through_store(rng):
     ws = int(store.slot[0])
     k8 = np.asarray(store.pools[0]["k8"][:, ws])
     store.demote_to_cold(0)
-    assert any(n.endswith("+delta")
-               for pair in store.cold[0].schemes for n in pair)
+    assert any(name.endswith("+delta")
+               for recs in store.cold[0].planes
+               for (name, _, _) in recs)
     store.promote_to_warm(0)
     ws2 = int(store.slot[0])
     np.testing.assert_array_equal(
@@ -425,52 +426,56 @@ def test_serveconfig_backfills_flat_aliases_from_spec():
     assert scfg.hbm_budget_mb == 2.0
 
 
-# -- deprecation shims --------------------------------------------------------
+# -- repro.core removal -------------------------------------------------------
+#
+# PR 3 physically moved the framework to repro.assist and left aliasing
+# shims for one deprecation cycle; PR 4 deleted them on schedule.  The
+# contract now is the opposite of the old shim tests: every old import
+# path must FAIL, and fail helpfully (the error carries the migration
+# map), so stale downstream code gets a fix-it message instead of a bare
+# ModuleNotFoundError.
 
-SHIMS = {
-    "repro.core.controller": "repro.assist.controller",
-    "repro.core.registry": "repro.assist.registry",
-    "repro.core.memoize": "repro.assist.memoize",
-    "repro.core.bytesops": "repro.assist.bytesops",
-    "repro.core.policy": "repro.assist.plan",
-    "repro.core.schemes": "repro.assist.schemes",
-}
-
-
-@pytest.mark.parametrize("old,new", sorted(SHIMS.items()))
-def test_core_shims_alias_assist_modules(old, new):
-    for mod in (old,):                   # force a fresh import of the shim
-        sys.modules.pop(mod, None)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        shim = importlib.import_module(old)
-    assert shim is importlib.import_module(new)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w), old
+OLD_CORE_MODULES = (
+    "repro.core",
+    "repro.core.controller",
+    "repro.core.registry",
+    "repro.core.memoize",
+    "repro.core.bytesops",
+    "repro.core.policy",
+    "repro.core.schemes",
+)
 
 
-def test_core_shim_symbols_identical():
-    import repro.core.controller as old_ctl
-    import repro.core.schemes.bdi as old_bdi
-    from repro.assist.controller import AssistController as NewCtl
-    from repro.assist.schemes import bdi as new_bdi
-    assert old_ctl.AssistController is NewCtl
-    assert old_bdi is new_bdi
-    # old positional construction of the decision record still works
-    from repro.core.controller import SiteDecision
-    d = SiteDecision("kv", True, "int8", 1.8, "why")
-    assert d.enabled and d.kind == "compress"
+@pytest.mark.parametrize("old", OLD_CORE_MODULES)
+def test_core_removed_with_migration_message(old):
+    for mod in list(sys.modules):        # force a fresh import attempt
+        if mod == "repro.core" or mod.startswith("repro.core."):
+            sys.modules.pop(mod, None)
+    with pytest.raises(ImportError, match="repro.assist"):
+        importlib.import_module(old)
+
+
+def test_core_removal_message_names_the_replacements():
+    sys.modules.pop("repro.core", None)
+    with pytest.raises(ImportError) as ei:
+        import repro.core  # noqa: F401
+    msg = str(ei.value)
+    for new in ("repro.assist.schemes", "repro.assist.controller",
+                "repro.assist.registry", "repro.assist.memoize",
+                "repro.assist.plan", "repro.assist.bytesops"):
+        assert new in msg, f"migration message must name {new}"
 
 
 def test_no_scheme_imports_outside_assist_and_kernels():
     """The PR-3 layering rule, as a test.
 
-    (a) the acceptance grep: NOTHING outside repro/assist, repro/kernels
-    and the repro/core shims imports the deprecated
-    ``repro.core.schemes`` path; (b) direct ``repro.assist.schemes``
-    imports outside assist/kernels stay pinned to the modules that need a
-    scheme's container class or constant (everything else goes through
-    the registry, e.g. cache/tiers.py's cold packer) -- extend the
-    allowlist consciously, not by accident."""
+    (a) the acceptance grep: NOTHING outside repro/assist and
+    repro/kernels imports the removed ``repro.core.schemes`` path; (b)
+    direct ``repro.assist.schemes`` imports outside assist/kernels stay
+    pinned to the modules that need a scheme's container class or
+    constant (everything else goes through the registry, e.g.
+    cache/tiers.py's cold packer) -- extend the allowlist consciously,
+    not by accident."""
     import pathlib
     root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
     ALLOWED_DIRECT = {

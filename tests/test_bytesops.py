@@ -7,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import bytesops as bo
+from repro.assist import bytesops as bo
 
 
 @pytest.mark.parametrize("dtype", ["int32", "float32", "bfloat16", "uint8",

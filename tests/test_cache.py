@@ -16,7 +16,7 @@ from repro.cache import (BlockPool, CachePolicy, PageGeometry, TierConfig,
                          decode_roofline_terms)
 from repro.cache.block_pool import PoolExhausted
 from repro.cache.policy import kv_site, warm_ratio
-from repro.core.controller import AssistController, RooflineTerms
+from repro.assist.controller import AssistController, RooflineTerms
 
 
 # -- block pool --------------------------------------------------------------

@@ -1,7 +1,7 @@
 """AssistController (AWC) trigger/throttle semantics (paper 4.4)."""
 import pytest
 
-from repro.core.controller import (AssistController, RooflineTerms,
+from repro.assist.controller import (AssistController, RooflineTerms,
                                    SiteDescriptor)
 
 

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import bytesops as bo
-from repro.core.schemes import bdi as bdi_scheme
+from repro.assist import bytesops as bo
+from repro.assist.schemes import bdi as bdi_scheme
 from repro.kernels.bdi import ops as bdi_ops, ref as bdi_ref, bdi as bdi_k
 from repro.kernels.fpc import ops as fpc_ops
 from repro.kernels.cpack import ops as cpack_ops

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.memoize import MemoConfig, hit_rate, init_lut, memoized
+from repro.assist.memoize import MemoConfig, hit_rate, init_lut, memoized
 
 
 def _fn(x):

@@ -9,7 +9,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.schemes import bdi, fpc, cpack, planes, quant, selector
+from repro.assist.schemes import bdi, fpc, cpack, planes, quant, selector
 
 
 def _as_u8(data: bytes):

@@ -79,3 +79,45 @@ def test_engine_continuous_batching(served_model, rng):
                            max_new=3))
     done = eng.run()
     assert sorted(r.rid for r in done) == list(range(6))
+
+
+# -- eos_id default unification (ISSUE 4 bugfix) -----------------------------
+
+def test_eos_default_single_constant():
+    """Every layer's eos default is THE constant -- no more silent
+    0-vs-1 divergence between construction paths."""
+    import inspect
+    from repro.configs.base import DEFAULT_EOS_ID
+    from repro.data.pipeline import DataConfig
+    from repro.serving.config import ServeConfig
+    from repro.serving.paged_engine import PagedEngine
+    assert ServeConfig.__dataclass_fields__["eos_id"].default \
+        == DEFAULT_EOS_ID
+    assert DataConfig.__dataclass_fields__["eos_id"].default \
+        == DEFAULT_EOS_ID
+    assert inspect.signature(Engine.__init__).parameters["eos_id"].default \
+        == DEFAULT_EOS_ID
+    assert inspect.signature(
+        PagedEngine.__init__).parameters["eos_id"].default == DEFAULT_EOS_ID
+
+
+def test_direct_and_config_construction_decode_identically(served_model, rng):
+    """Regression: Engine(...) with default eos_id vs ServeConfig.build()
+    (which threads ServeConfig.eos_id) must stop on the same token and
+    produce identical greedy outputs."""
+    from repro.serving.config import ServeConfig
+    cfg, model, params = served_model
+    prompts = [list(rng.integers(2, 400, 7 + i)) for i in range(3)]
+
+    direct = Engine(model, params, batch_slots=2, max_len=48)  # default eos
+    for i, p in enumerate(prompts):
+        direct.submit(Request(rid=i, prompt=p, max_new=5))
+    want = {r.rid: r.out for r in direct.run()}
+
+    scfg = ServeConfig(arch="qwen2-7b", reduced=True, slots=2, max_len=48)
+    built, _, _ = scfg.build(model, params)
+    assert built.eos_id == direct.eos_id
+    for i, p in enumerate(prompts):
+        built.submit(Request(rid=i, prompt=p, max_new=5))
+    got = {r.rid: r.out for r in built.run()}
+    assert got == want
