@@ -6,20 +6,45 @@
     # backend matrix) as ONE command:
     PYTHONPATH=src python -m benchmarks.run --smoke --with-tier1
 
+    # persist the serving perf trajectory (tokens/s, tick percentiles,
+    # capacity ratios, prefill compile counts) for cross-PR comparison:
+    PYTHONPATH=src python -m benchmarks.run --only serving_micro --json
+
 Each module prints its table and asserts its paper-validation bounds; a
 failed validation fails the run (EXPERIMENTS.md SS Paper-validation is
 generated from this output).  ``--smoke`` forwards a reduced workload to
 the modules that support it (CI mode); serving_micro's smoke run includes
-the per-backend (gather/pallas/pallas_int8) decode matrix.
+the per-backend (gather/pallas/pallas_int8) decode matrix.  ``--json``
+writes ``BENCH_serving.json`` at the repo root from serving_micro's
+returned record (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
+import pathlib
 import subprocess
 import sys
 import time
 import traceback
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_serving.json"
+
+
+def _jsonable(x):
+    """Coerce benchmark records (numpy scalars, tuples-as-keys already
+    stringified upstream) into plain JSON types; drop what will not fit."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, bool) or x is None or isinstance(x, (int, float, str)):
+        return x
+    if hasattr(x, "item"):                       # numpy scalar
+        return x.item()
+    return str(x)
 
 MODULES = [
     ("fig2", "benchmarks.fig2_bottleneck"),
@@ -42,13 +67,14 @@ def main() -> None:
                     help="reduced workloads (fast CI check)")
     ap.add_argument("--with-tier1", action="store_true",
                     help="run the tier-1 pytest suite before the benchmarks")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serving.json (serving perf record)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     failures = []
     if args.with_tier1:
         print(f"{'=' * 72}\nRUNNING tier-1 (pytest)\n{'=' * 72}")
-        import pathlib
         repo_root = pathlib.Path(__file__).resolve().parents[1]
         rc = subprocess.run([sys.executable, "-m", "pytest"],
                             cwd=repo_root).returncode
@@ -65,8 +91,13 @@ def main() -> None:
             if args.smoke and \
                     "smoke" in inspect.signature(mod.main).parameters:
                 kwargs["smoke"] = True
-            mod.main(**kwargs)
+            result = mod.main(**kwargs)
             print(f"[{name}] done in {time.time() - t0:.1f}s")
+            if args.json and name == "serving_micro" and result:
+                record = {"smoke": bool(args.smoke), **_jsonable(result)}
+                BENCH_JSON.write_text(json.dumps(record, indent=2,
+                                                 sort_keys=True) + "\n")
+                print(f"[{name}] wrote {BENCH_JSON}")
         except Exception as e:
             traceback.print_exc()
             failures.append((name, str(e)))

@@ -40,13 +40,14 @@ import numpy as np
 import jax
 
 from repro.assist import AssistSpec
-from repro.cache import PageGeometry
+from repro.cache import PageGeometry, TierConfig
 from repro.configs import ARCHS, reduced
 from repro.kernels.decode_attn.ops import attn_backend_names
 from repro.models.model import build_model
 from repro.models.transformer import stack_plan
 from repro.serving.config import ServeConfig
 from repro.serving.engine import Request
+from repro.serving.paged_engine import PagedEngine
 from benchmarks.common import print_table
 
 PAGE = 16
@@ -73,17 +74,34 @@ def _build(model, params, spec: AssistSpec, lanes: int, max_len: int):
 
 
 def _tick_window(eng, ticks: int):
-    """(tokens/s, per-tick latencies[s]) over a fixed tick window."""
+    """(tokens/s, per-tick latencies[s]) over a fixed tick window.
+
+    The engine loop is ASYNC (dispatch returns before the tick executes),
+    so the window is bracketed by ``eng.sync()``: the open sync drains
+    pending work out of the window, the close sync charges every
+    dispatched tick's EXECUTION to the window.  Per-tick latencies time
+    dispatch for all but the last tick, which absorbs the drain -- the
+    window total (and so tokens/s) is always true wall time.
+    """
+    def _produced():
+        # harvested tokens + the lagged in-flight tokens that will really
+        # be appended (junk post-EOS rows excluded): true production
+        return eng.tokens_generated + eng.pending_decode_tokens()
+
+    eng.sync()
     t0 = time.time()
-    tok0 = eng.tokens_generated
+    tok0 = _produced()
     lats = []
-    for _ in range(ticks):
+    for i in range(ticks):
         t1 = time.time()
         if not eng.step():
             break
+        if i == ticks - 1:
+            eng.sync()                 # final tick: time execution too
         lats.append(time.time() - t1)
+    eng.sync()
     dt = time.time() - t0
-    tps = (eng.tokens_generated - tok0) / max(dt, 1e-9)
+    tps = (_produced() - tok0) / max(dt, 1e-9)
     return tps, lats
 
 
@@ -211,6 +229,87 @@ def run_backends(smoke: bool = False):
     return results, outputs
 
 
+def run_host_overhead(smoke: bool = False):
+    """The host-overhead A/B (ISSUE 5 tentpole): mixed-length prompts --
+    the retrace killer -- served once by the pre-PR loop (``host_sync``:
+    exact-length prefill retracing per distinct prompt length, blocking
+    per-tick readback, full block-table rebuild, single-page movers) and
+    once by the host-sync-free loop (bucketed prefill, fused on-device
+    sampling, lagged harvest, dirty-row updates, batched movers).
+
+    Reports end-to-end tokens/s, decode-tick p50/p95/p99 and the prefill
+    compile count per mode.  Acceptance bar: >= 1.5x end-to-end tokens/s
+    (recompile elimination dominates) and the bucketed path compiles at
+    most ``n_prompt_buckets`` prefill variants.
+    """
+    from repro.models.model import n_prompt_buckets
+    from repro.models.transformer import paged_geometry
+    cfg = reduced(ARCHS[ARCH])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, lanes = 128, 2
+    n_req = 14 if smoke else 20
+    max_new = 4 if smoke else 6
+    # >= 12 distinct prompt lengths spanning several buckets
+    lens = [9 + 7 * (i % 14) for i in range(n_req)]
+    assert len(set(lens)) >= min(12, n_req)
+    # budget sized to the stream (run_backends note: an over-large budget
+    # allocates an over-large hot pool, and pool size dominates CPU gather
+    # time); later requests admit as earlier ones retire
+    geom = paged_geometry(cfg, PAGE)
+    tier = TierConfig(page_size=PAGE,
+                      hbm_budget_bytes=40 * geom.hot_page_bytes,
+                      enable_warm=False, enable_cold=False)
+
+    results = {}
+    rows = []
+    for mode, host_sync in (("host-sync", True), ("async", False)):
+        rng = np.random.default_rng(0)
+        eng = PagedEngine(model, params, lanes=lanes, max_len=max_len,
+                          tier=tier, eos_id=0, use_roofline_trigger=False,
+                          host_sync=host_sync)
+        for rid, plen in enumerate(lens):
+            eng.submit(Request(rid=rid,
+                               prompt=list(rng.integers(2, cfg.vocab_size,
+                                                        plen)),
+                               max_new=max_new))
+        eng.sync()
+        t0 = time.time()
+        lats = []
+        while (eng.queue or eng.resident or eng._inflight is not None
+               or eng._pending_first):
+            t1 = time.time()
+            if not eng.step():
+                break
+            lats.append(time.time() - t1)
+        eng.sync()
+        dt = time.time() - t0
+        pct = _pcts(lats)
+        compiles = eng.prefill_compiles()
+        tps = eng.tokens_generated / max(dt, 1e-9)
+        results[mode] = {"tokens_per_s": tps, "wall_s": dt,
+                         "prefill_compiles": compiles,
+                         "finished": len(eng.finished), **pct}
+        rows.append([mode, round(tps, 1), round(dt, 2), compiles,
+                     round(pct["p50_ms"], 1), round(pct["p95_ms"], 1),
+                     round(pct["p99_ms"], 1), len(eng.finished)])
+        eng.pool.check()
+    print_table(
+        f"serving_micro host overhead: {n_req} requests, "
+        f"{len(set(lens))} distinct prompt lengths, max_len={max_len}",
+        ["decode loop", "tok/s", "wall_s", "prefill_jits", "p50_ms",
+         "p95_ms", "p99_ms", "done"], rows)
+    speedup = (results["async"]["tokens_per_s"]
+               / max(results["host-sync"]["tokens_per_s"], 1e-9))
+    results["speedup"] = speedup
+    results["n_buckets"] = n_prompt_buckets(max_len, PAGE)
+    assert results["async"]["finished"] == results["host-sync"]["finished"]
+    # retrace guard: the async path compiles at most one prefill per bucket
+    assert results["async"]["prefill_compiles"] <= results["n_buckets"], \
+        results
+    return results
+
+
 def run_local_window(smoke: bool = False):
     """A local-attention-window model end-to-end through the paged path
     (per-layer capability dispatch: attn + attn_local segments)."""
@@ -336,6 +435,18 @@ def main(smoke: bool = False):
           f"{cold} (cold) resident tokens under one HBM budget "
           f"({cold / hot:.2f}x >= 2x)")
 
+    overhead = run_host_overhead(smoke=smoke)
+    # acceptance bar (ISSUE 5): the host-sync-free loop beats the pre-PR
+    # loop >= 1.5x end-to-end on the mixed-length stream (recompile
+    # elimination dominates) with the bucketed compile count bounded
+    assert overhead["speedup"] >= 1.5, overhead
+    print(f"[serving_micro] host overhead PASS: "
+          f"{overhead['speedup']:.2f}x >= 1.5x tokens/s over the pre-PR "
+          f"loop; prefill compiles "
+          f"{overhead['host-sync']['prefill_compiles']} -> "
+          f"{overhead['async']['prefill_compiles']} "
+          f"(<= {overhead['n_buckets']} buckets)")
+
     bres, bouts = run_backends(smoke=smoke)
     backends = attn_backend_names()
     # equivalence bar on live traffic: hot-only greedy outputs identical
@@ -361,7 +472,12 @@ def main(smoke: bool = False):
           f"{mla['ratio']:.2f}x >= 2x the dense-slab resident tokens; "
           f"hybrid state parking ratio "
           f"{kinds['hybrid-state']['ratio']:.2f}x")
-    return res
+    # one JSON-able record per section: benchmarks/run.py --json persists
+    # this as BENCH_serving.json (the cross-PR perf trajectory)
+    return {"tiers": res,
+            "host_overhead": overhead,
+            "backends": {f"{t}/{b}": v for (t, b), v in bres.items()},
+            "page_kinds": kinds}
 
 
 if __name__ == "__main__":

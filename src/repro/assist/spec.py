@@ -33,8 +33,12 @@ class AssistSpec:
       enable_warm      int8 warm tier (the CABA KV site)
       enable_cold      packed host cold tier
       host_budget_bytes  cold-tier budget (None = unbounded)
+      max_cold_pages   hard cap on cold page ids (None = derive from the
+                       host budget / HBM pools)
       cold_delta       delta-along-sequence transform before cold packing
       use_roofline_trigger  let the AWC trigger gate demotion
+      interpret        run Pallas attention kernels in interpret mode
+                       (True for CPU tests; set False on real TPUs)
 
     Prefetch task (paper 8.2):
       prefetch_lookahead       ticks-to-finish that arms the WaSP lookahead
@@ -61,8 +65,10 @@ class AssistSpec:
     enable_warm: bool = True
     enable_cold: bool = True
     host_budget_bytes: Optional[int] = None
+    max_cold_pages: Optional[int] = None
     cold_delta: bool = True
     use_roofline_trigger: bool = True
+    interpret: bool = True
     # prefetch task
     prefetch_lookahead: int = 2
     pages_per_prefetch_tick: int = 2

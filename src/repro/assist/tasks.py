@@ -207,7 +207,9 @@ class PrefetchTask:
               is_cold, budget: Optional[int] = None):
         """Drain up to ``budget`` queued pages through the store.
 
-        ``make_warm_room(protected)`` frees a warm slot (policy-owned);
+        ``make_warm_room(protected, cls)`` frees a warm slot of the page's
+        class (policy-owned) -- the queue can carry token pages and parked
+        state slabs, which promote into disjoint warm slot spaces;
         ``is_cold(pid)`` reports residency so stale entries are dropped.
         """
         if budget is None:
@@ -217,7 +219,9 @@ class PrefetchTask:
             if not is_cold(pid):                  # already resident / freed
                 self._queue.pop(0)
                 continue
-            if store.n_free_warm == 0 and not make_warm_room(protected):
+            cls = store.cls_of(pid)
+            if store.n_free_warm_cls(cls) == 0 \
+                    and not make_warm_room(protected, cls):
                 return
             self._queue.pop(0)
             store.promote_to_warm(pid, async_=self.async_promote)

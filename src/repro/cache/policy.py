@@ -162,23 +162,29 @@ class CachePolicy:
     def make_hot_room(self, pool: BlockPool, store: TieredKVStore,
                       protected: set[int], n: int = 1,
                       cls: str = "kv") -> bool:
-        """Demote LRU pages until >= n hot slots are free.  Returns success."""
+        """Demote LRU pages until >= n hot slots are free.  Returns success.
+
+        The whole eviction episode runs under ``store.deferred()``: an
+        N-page demotion storm accumulates into batched movers and lands in
+        O(N / MOVER_BATCH) device dispatches instead of N."""
         free_hot = (lambda: store.n_free_hot) if cls == "kv" \
             else (lambda: store.n_free_hot_state)
         free_warm = (lambda: store.n_free_warm) if cls == "kv" \
             else (lambda: store.n_free_warm_state)
         guard = 0
-        while free_hot() < n and guard < 4 * pool.num_pages:
-            guard += 1
-            if not self.compression_enabled:
-                return False
-            victim = self.hot_victim(pool, store, protected, cls)
-            if victim is None:
-                return False
-            if free_warm() == 0:
-                if not self.make_warm_room(pool, store, protected, cls=cls):
+        with store.deferred():
+            while free_hot() < n and guard < 4 * pool.num_pages:
+                guard += 1
+                if not self.compression_enabled:
                     return False
-            store.demote_to_warm(victim)
+                victim = self.hot_victim(pool, store, protected, cls)
+                if victim is None:
+                    return False
+                if free_warm() == 0:
+                    if not self.make_warm_room(pool, store, protected,
+                                               cls=cls):
+                        return False
+                store.demote_to_warm(victim)
         return free_hot() >= n
 
     def make_warm_room(self, pool: BlockPool, store: TieredKVStore,
@@ -210,7 +216,10 @@ class CachePolicy:
 
     def drain_prefetch(self, pool: BlockPool, store: TieredKVStore,
                        protected: set[int]):
-        """Promote queued cold pages up to the controller's page budget."""
+        """Promote queued cold pages up to the controller's page budget.
+
+        Class-aware: the queue can carry token pages AND parked state
+        slabs (each promotes into its own warm slot space)."""
         budget = None
         if self.terms is not None:
             site = SiteDescriptor("kv_cold", store.geom.warm_page_bytes,
@@ -221,7 +230,8 @@ class CachePolicy:
             budget = min(d.budget, self.cfg.pages_per_prefetch_tick)
         self.prefetch.apply(
             store, protected,
-            lambda prot: self.make_warm_room(pool, store, prot),
+            lambda prot, cls="kv": self.make_warm_room(pool, store, prot,
+                                                       cls=cls),
             is_cold=lambda pid: store.tier[pid] == TIER_COLD,
             budget=budget)
 

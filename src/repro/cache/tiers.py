@@ -264,13 +264,26 @@ def _unpack_cold(name: str, obj, shape) -> np.ndarray:
     return undelta_seq(out) if delta else out
 
 
-# -- jitted page movement (donated pools; one page per call) -----------------
+# -- jitted page movement (donated pools; up to MOVER_BATCH pages per call) --
 #
 # Pool dicts carry one of two key schemas -- kv pages ("kh"/"vh" hot,
 # "k8"/"ks"/"v8"/"vs" warm) or state slabs ("sh" hot, "s8"/"ss" warm).
 # The movement helpers walk the PLANE TRIPLES of whichever schema the
 # donated dict carries (keys are static under jit, so each schema compiles
 # once and the loop unrolls).
+#
+# The movers are BATCHED: they take fixed-width slot VECTORS (padded with
+# slot 0, the trash page, so every batch size shares one compiled shape)
+# and move up to MOVER_BATCH pages in one dispatch.  The store accumulates
+# same-kind transitions while a policy episode (make_hot_room /
+# make_warm_room eviction storm) runs and flushes them as one dispatch --
+# O(1) dispatches per storm instead of O(pages).  Bookkeeping (tier/slot
+# arrays, free lists) always updates eagerly; only the device copies are
+# deferred, and every pool read/write entry point flushes first, so the
+# deferral is never observable.
+
+#: pages one batched mover dispatch moves (padded fixed width)
+MOVER_BATCH = 8
 
 def _plane_triples(pools_j) -> tuple:
     """((hot_name, int8_name, scale_name), ...) for this pool's schema."""
@@ -309,24 +322,29 @@ def _write_state_slab(pools_j, slot, slab):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _demote_hot_to_warm(pools_j, hot_slot, warm_slot):
-    """Quantize hot page ``hot_slot`` into warm slot ``warm_slot``."""
+def _demote_hot_to_warm(pools_j, hot_slots, warm_slots):
+    """Quantize hot pages ``hot_slots`` into warm slots ``warm_slots``.
+
+    Slot vectors are int32[MOVER_BATCH], padded with 0 (the trash slot):
+    padding quantizes trash into trash, which no gather can observe.
+    """
     out = dict(pools_j)
     for hname, qname, sname in _plane_triples(pools_j):
-        q, s = quantize_token(pools_j[hname][:, hot_slot])
-        out[qname] = pools_j[qname].at[:, warm_slot].set(q)
-        out[sname] = pools_j[sname].at[:, warm_slot].set(s)
+        q, s = quantize_token(pools_j[hname][:, hot_slots])
+        out[qname] = pools_j[qname].at[:, warm_slots].set(q)
+        out[sname] = pools_j[sname].at[:, warm_slots].set(s)
     return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _promote_warm_to_hot(pools_j, warm_slot, hot_slot):
-    """Dequantize warm page into a hot slot (quantization loss already paid)."""
+def _promote_warm_to_hot(pools_j, warm_slots, hot_slots):
+    """Dequantize warm pages into hot slots (quantization loss already
+    paid).  Same padded-vector convention as :func:`_demote_hot_to_warm`."""
     out = dict(pools_j)
     for hname, qname, sname in _plane_triples(pools_j):
-        x = (pools_j[qname][:, warm_slot].astype(jnp.float32)
-             * pools_j[sname][:, warm_slot][..., None])
-        out[hname] = pools_j[hname].at[:, hot_slot].set(
+        x = (pools_j[qname][:, warm_slots].astype(jnp.float32)
+             * pools_j[sname][:, warm_slots][..., None])
+        out[hname] = pools_j[hname].at[:, hot_slots].set(
             x.astype(pools_j[hname].dtype))
     return out
 
@@ -337,6 +355,16 @@ def _write_warm(pools_j, warm_slot, planes):
     out = dict(pools_j)
     for name, arr in planes.items():
         out[name] = pools_j[name].at[:, warm_slot].set(arr)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_warm_rows(pools_j, warm_slots, planes):
+    """Batched :func:`_write_warm`: planes carry a leading batch axis at
+    position 1 ([stack, K, ...]) landing at ``warm_slots`` (int32[K])."""
+    out = dict(pools_j)
+    for name, arr in planes.items():
+        out[name] = pools_j[name].at[:, warm_slots].set(arr)
     return out
 
 
@@ -418,14 +446,102 @@ class TieredKVStore:
         # async prefetch promotions awaiting the tick-start drain barrier:
         # pid -> (warm_slot, per-segment plane dicts in flight)
         self._pending_warm: dict[int, tuple[int, list]] = {}
+        # batched-mover accumulation: a run of same-(op, cls) transitions
+        # whose device copies flush as ONE dispatch (policy episodes)
+        self.mover_batch = MOVER_BATCH
+        self._defer_depth = 0
+        self._move_run: Optional[tuple] = None     # (op, cls) of the run
+        self._move_src: list[int] = []
+        self._move_dst: list[int] = []
+        # pages whose encoded location changed since the engine last asked
+        # (drives incremental block-table row updates)
+        self.dirty_pids: set[int] = set()
         self.stats = {"demote_warm": 0, "demote_cold": 0,
                       "promote_warm": 0, "promote_warm_async": 0,
-                      "promote_hot": 0}
+                      "promote_hot": 0, "mover_dispatches": 0}
+
+    # -- batched movers ------------------------------------------------------
+
+    def deferred(self):
+        """Context manager: accumulate tier-transition device copies and
+        flush them as batched dispatches (policy eviction/promotion
+        episodes).  Nests; the device copies land at the latest by the
+        outermost exit.  Bookkeeping is always eager, so policy logic
+        (free counts, victim scans) never sees stale state."""
+        store = self
+
+        class _Defer:
+            def __enter__(self):
+                store._defer_depth += 1
+
+            def __exit__(self, *exc):
+                store._defer_depth -= 1
+                if store._defer_depth == 0:
+                    store.flush_movers()
+
+        return _Defer()
+
+    def _enqueue_move(self, op: str, cls: str, src: int, dst: int):
+        if self._defer_depth == 0:
+            self._dispatch_moves(op, cls, [src], [dst])
+            return
+        if self._move_run != (op, cls):
+            self.flush_movers()                 # kind change: keep order
+            self._move_run = (op, cls)
+        self._move_src.append(src)
+        self._move_dst.append(dst)
+        if len(self._move_src) >= self.mover_batch:
+            self.flush_movers()
+
+    def flush_movers(self):
+        """Land every accumulated tier-transition device copy now."""
+        if not self._move_src:
+            self._move_run = None
+            return
+        op, cls = self._move_run
+        srcs, dsts = self._move_src, self._move_dst
+        self._move_run, self._move_src, self._move_dst = None, [], []
+        self._dispatch_moves(op, cls, srcs, dsts)
+
+    def _dispatch_moves(self, op: str, cls: str, srcs, dsts):
+        """One batched mover dispatch per affected segment: pad the slot
+        vectors to ``mover_batch`` with 0 (trash moves to trash).
+
+        ``stats["mover_dispatches"]`` counts FLUSH EPISODES (one per
+        batch), not raw jit calls -- a multi-segment stack issues
+        n_segments jit calls per episode, before and after this change
+        alike, so episodes are the unit the batching actually shrinks."""
+        K = max(self.mover_batch, len(srcs))
+        src = np.zeros(K, np.int32)
+        dst = np.zeros(K, np.int32)
+        src[:len(srcs)] = srcs
+        dst[:len(dsts)] = dsts
+        fn = _demote_hot_to_warm if op == "demote" else _promote_warm_to_hot
+        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+        for j in self._seg_idx[cls]:
+            self.pools = self.pools[:j] + (fn(self.pools[j], src_j,
+                                              dst_j),) + self.pools[j + 1:]
+        self.stats["mover_dispatches"] += 1
 
     # -- placement queries ---------------------------------------------------
 
     def _cls(self, pid: int) -> str:
         return "state" if self.page_cls[pid] else "kv"
+
+    def cls_of(self, pid: int) -> str:
+        """Page class of a placed page ("kv" | "state"); for cold pages
+        the host record is authoritative (page_cls resets on release)."""
+        rec = self.cold.get(pid)
+        return rec.cls if rec is not None else self._cls(pid)
+
+    def n_free_warm_cls(self, cls: str) -> int:
+        return len(self._free_warm[cls])
+
+    def drain_dirty(self) -> set[int]:
+        """Pages whose encoded location changed since the last drain (the
+        engine turns these into dirty block-table rows)."""
+        d, self.dirty_pids = self.dirty_pids, set()
+        return d
 
     @property
     def n_free_hot(self) -> int:
@@ -488,6 +604,7 @@ class TieredKVStore:
         self.tier[pid], self.slot[pid] = TIER_HOT, s
         self.page_cls[pid] = 1 if cls == "state" else 0
         self._hot_ids[cls].add(pid)
+        self.dirty_pids.add(pid)
         return s
 
     def place_hot(self, pid: int) -> int:
@@ -501,6 +618,7 @@ class TieredKVStore:
     def release(self, pid: int):
         """Free a page's physical residence (request retired)."""
         self._pending_warm.pop(pid, None)   # in-flight data no longer needed
+        self.dirty_pids.add(pid)
         cls = self._cls(pid)
         t = self.tier[pid]
         if t == TIER_HOT:
@@ -524,6 +642,7 @@ class TieredKVStore:
         state_kv: per GROWING segment (k_seq, v_seq) bf16[stack, G,
         max_len, width] -- K/V for attn segments, latent/rope for MLA.
         """
+        self.flush_movers()       # a pending demote may read these slots
         ps = self.geom.page_size
         npg_needed = -(-S // ps)
         assert len(pid_slots) >= npg_needed
@@ -540,6 +659,7 @@ class TieredKVStore:
         """Land a request's post-prefill recurrence state in its (hot)
         state slab.  slabs: per STATE segment, f32[stack, W_flat]."""
         assert self.tier[pid] == TIER_HOT and self._cls(pid) == "state"
+        self.flush_movers()       # a pending demote may read this slot
         hs = int(self.slot[pid])
         for i, j in enumerate(self._seg_idx["state"]):
             sg = self.geom.seg_geoms[j]
@@ -573,13 +693,12 @@ class TieredKVStore:
             raise PoolExhausted(f"warm {cls} tier full")
         hs = int(self.slot[pid])
         ws = self._free_warm[cls].pop()
-        for j in self._seg_idx[cls]:
-            self.pools = self.pools[:j] + (_demote_hot_to_warm(
-                self.pools[j], hs, ws),) + self.pools[j + 1:]
+        self._enqueue_move("demote", cls, hs, ws)
         self._free_hot[cls].append(hs)
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
         self._hot_ids[cls].discard(pid)
         self._warm_ids[cls].add(pid)
+        self.dirty_pids.add(pid)
         self.stats["demote_warm"] += 1
 
     def demote_to_cold(self, pid: int):
@@ -587,6 +706,7 @@ class TieredKVStore:
         fallback) into host memory."""
         assert self.tier[pid] == TIER_WARM
         self._commit_one(pid)               # flush any in-flight promotion
+        self.flush_movers()                 # packing reads the warm planes
         cls = self._cls(pid)
         ws = int(self.slot[pid])
         planes, nbytes = [], 0
@@ -608,6 +728,7 @@ class TieredKVStore:
         self._free_warm[cls].append(ws)
         self.tier[pid], self.slot[pid] = TIER_COLD, 0
         self._warm_ids[cls].discard(pid)
+        self.dirty_pids.add(pid)
         self.stats["demote_cold"] += 1
 
     def promote_to_warm(self, pid: int, *, async_: bool = False):
@@ -624,6 +745,7 @@ class TieredKVStore:
         cls = rec.cls
         if not self._free_warm[cls]:
             raise PoolExhausted(f"warm {cls} tier full")
+        self.flush_movers()       # a pending promote may read the slot
         ws = self._free_warm[cls].pop()
         self.cold.pop(pid)
         self.cold_bytes -= rec.nbytes
@@ -653,6 +775,8 @@ class TieredKVStore:
             self.stats["promote_warm_async"] += 1
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
         self._warm_ids[cls].add(pid)
+        self.page_cls[pid] = 1 if cls == "state" else 0
+        self.dirty_pids.add(pid)
         self.stats["promote_warm"] += 1
 
     def commit_page(self, pid: int):
@@ -662,13 +786,14 @@ class TieredKVStore:
         self._commit_one(pid)
 
     def _commit_one(self, pid: int):
-        """Land one in-flight async promotion into the warm pool."""
+        """Land one in-flight async promotion into the warm pool.  The
+        device_put transfer is a data dependency of the pool write, so no
+        host block is needed -- commit is ordering, not blocking."""
         pending = self._pending_warm.pop(pid, None)
         if pending is None:
             return
         ws, in_flight = pending
         for j, planes in in_flight:
-            jax.block_until_ready(tuple(planes.values()))
             self.pools = self.pools[:j] + (_write_warm(
                 self.pools[j], ws, planes),) + self.pools[j + 1:]
 
@@ -676,10 +801,41 @@ class TieredKVStore:
         """The explicit drain barrier: land every in-flight async
         promotion.  The engine calls this at tick start, BEFORE any decode
         gather or tier transition can read the warm pool, so deferred
-        writes are never observable."""
+        writes are never observable.
+
+        All in-flight pages of one class land as ONE batched pool write
+        per segment (padded to a power-of-two count so batch sizes share a
+        handful of compiled shapes) -- a prefetch storm costs O(1)
+        dispatches.  The writes stay asynchronous: the device_put transfer
+        is a data dependency of the scatter, so nothing here blocks the
+        host."""
         n = len(self._pending_warm)
-        for pid in list(self._pending_warm):
-            self._commit_one(pid)
+        if not n:
+            return 0
+        by_cls: dict[str, list] = {}
+        for pid, pending in self._pending_warm.items():
+            cls = self.cls_of(pid)
+            by_cls.setdefault(cls, []).append(pending)
+        self._pending_warm = {}
+        for cls, entries in by_cls.items():
+            k = len(entries)
+            kp = 1
+            while kp < k:
+                kp *= 2
+            ws = np.zeros(kp, np.int32)
+            ws[:k] = [w for w, _ in entries]
+            for seg_pos, j in enumerate(self._seg_idx[cls]):
+                planes: dict[str, list] = {}
+                for wslot, in_flight in entries:
+                    for name, arr in in_flight[seg_pos][1].items():
+                        planes.setdefault(name, []).append(arr)
+                stacked = {name: jnp.stack(arrs + arrs[:1] * (kp - k),
+                                           axis=1)
+                           for name, arrs in planes.items()}
+                self.pools = self.pools[:j] + (_write_warm_rows(
+                    self.pools[j], jnp.asarray(ws), stacked),) \
+                    + self.pools[j + 1:]
+            self.stats["mover_dispatches"] += 1
         return n
 
     def promote_to_hot(self, pid: int):
@@ -692,11 +848,10 @@ class TieredKVStore:
             raise PoolExhausted(f"hot {cls} tier full")
         ws = int(self.slot[pid])
         hs = self._free_hot[cls].pop()
-        for j in self._seg_idx[cls]:
-            self.pools = self.pools[:j] + (_promote_warm_to_hot(
-                self.pools[j], ws, hs),) + self.pools[j + 1:]
+        self._enqueue_move("promote", cls, ws, hs)
         self._free_warm[cls].append(ws)
         self.tier[pid], self.slot[pid] = TIER_HOT, hs
         self._warm_ids[cls].discard(pid)
         self._hot_ids[cls].add(pid)
+        self.dirty_pids.add(pid)
         self.stats["promote_hot"] += 1

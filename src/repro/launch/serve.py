@@ -59,6 +59,13 @@ def main(argv=None):
     ap.add_argument("--attn-backend", default="gather",
                     choices=attn_backend_names(),
                     help="paged decode attention backend")
+    ap.add_argument("--no-interpret", dest="interpret",
+                    action="store_false",
+                    help="run Pallas backends as real kernels (TPU); "
+                         "default is interpret mode (CPU-safe)")
+    ap.add_argument("--max-cold-pages", type=int, default=None,
+                    help="cap on cold (host-offloaded) page ids; default "
+                         "derives from the host budget / HBM pools")
     args = ap.parse_args(argv)
     scfg = ServeConfig(**vars(args))     # argparse dests match field names
 

@@ -62,6 +62,10 @@ def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
 
     def prefill(params, batch, max_len: int, *, moe_dropless: bool = False,
                 kv_mode: str = "bf16", paged_layout: bool = False):
+        # ``batch`` may carry "true_len" (int32[B]): tokens beyond it are
+        # right-padding from prompt-length bucketing (see prompt_bucket);
+        # logits/state at real positions match the unpadded run and the
+        # recurrence state ends exactly at true_len
         logits, _, state = T.stack_apply_seq(cfg, params, batch,
                                              want_state=True, remat=False,
                                              max_len=max_len,
@@ -88,6 +92,32 @@ def build_model(cfg: ArchConfig, *, remat: bool = True) -> ModelFns:
 
     return ModelFns(cfg, init, fwd_train, loss, prefill, decode_step,
                     init_state, paged_decode_step)
+
+
+# ---------------------------------------------------------------------------
+# prompt-length bucketing (retrace control for serving prefill)
+# ---------------------------------------------------------------------------
+
+def prompt_bucket(plen: int, max_len: int, quantum: int = 16) -> int:
+    """Padded prefill length for a ``plen``-token prompt.
+
+    Buckets are ``quantum * 2**k`` capped at ``max_len``, so every possible
+    prompt length maps onto at most ``log2(max_len / quantum) + 1`` distinct
+    jit shapes -- the engines pad prompts up to the bucket (and mask via
+    batch["true_len"]) instead of retracing prefill per prompt length.
+    """
+    if plen > max_len:
+        raise ValueError(f"prompt length {plen} exceeds max_len {max_len}")
+    b = quantum
+    while b < plen:
+        b *= 2
+    return min(b, max_len)
+
+
+def n_prompt_buckets(max_len: int, quantum: int = 16) -> int:
+    """How many distinct bucket shapes ``prompt_bucket`` can emit."""
+    return len({prompt_bucket(p, max_len, quantum)
+                for p in range(1, max_len + 1)})
 
 
 # ---------------------------------------------------------------------------

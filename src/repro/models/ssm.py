@@ -196,10 +196,13 @@ def mamba2_init(rng, cfg: ArchConfig):
     }
 
 
-def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None, true_len=None):
     """Depthwise causal conv over S.  xBC: [B,S,C]; conv_w: [dc,C].
 
     conv_state: [B, dc-1, C] trailing context (decode) or None (zeros).
+    ``true_len`` (int32[B], optional) marks positions >= true_len as
+    padding: the returned conv state is then the context trailing the LAST
+    REAL token, not the last padded one (bucketed prefill).
     Returns (y [B,S,C], new_state [B, dc-1, C]).
     """
     B, S, C = xBC.shape
@@ -211,7 +214,15 @@ def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
     for i in range(dc):
         y = y + conv_w[i] * padded[:, i:i + S].astype(jnp.float32)
     y = y + conv_b
-    new_state = padded[:, S:]                              # last dc-1 tokens
+    if true_len is None:
+        new_state = padded[:, S:]                          # last dc-1 tokens
+    else:
+        # token t sits at padded index t + dc-1; the context after token
+        # true_len-1 is tokens [true_len-dc+1, true_len) = padded indices
+        # true_len + [0, dc-1) -- reaching into conv_state when the real
+        # sequence is shorter than the kernel
+        idx = true_len[:, None] + jnp.arange(dc - 1)[None, :]
+        new_state = jnp.take_along_axis(padded, idx[..., None], axis=1)
     return jax.nn.silu(y).astype(xBC.dtype), new_state
 
 
@@ -226,19 +237,29 @@ def _mamba2_inner(cfg, p, x):
     return z, xBC, dt
 
 
-def mamba2_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 256):
+def mamba2_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 256,
+                 true_len=None):
     """Full-sequence forward.  state: optional dict(h, conv) to continue.
-    Returns (out [B,S,D], new_state)."""
+    ``true_len`` (int32[B], optional): positions >= true_len are padding
+    -- their state transition becomes the identity (dt = 0), so the
+    returned state equals the unpadded run's bit for bit (bucketed
+    prefill).  Returns (out [B,S,D], new_state)."""
     s = cfg.ssm
     B, S, D = x.shape
     d_in, nheads, conv_ch = mamba2_dims(cfg)
     z, xBC, dt = _mamba2_inner(cfg, p, x)
     conv_state = None if state is None else state["conv"]
-    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state,
+                                   true_len=true_len)
     xc = xBC[..., :d_in]
     Bc = xBC[..., d_in:d_in + s.d_state]
     Cc = xBC[..., d_in + s.d_state:]
     dt = jax.nn.softplus(dt + p["dt_bias"])                # [B,S,H]
+    if true_len is not None:
+        # dt -> 0 at pads: decay exp(dt*A) = 1 and input v = x*dt = 0, so
+        # the recurrence carries the state through padding untouched
+        seq_mask = jnp.arange(S)[None, :] < true_len[:, None]
+        dt = dt * seq_mask[..., None]
     A = -jnp.exp(p["A_log"])                               # [H] < 0
     log_w = dt * A                                         # [B,S,H] <= 0
     xh = xc.reshape(B, S, nheads, s.head_dim)
@@ -346,12 +367,18 @@ def _layernorm(p, x):
             + p["bias"]).astype(x.dtype)
 
 
-def _token_shift(x, prev):
+def _token_shift(x, prev, true_len=None):
     """x: [B,S,D]; prev: [B,D] (last token of previous segment).
+    ``true_len`` selects the last REAL token as the new prev when the
+    sequence carries right-padding (bucketed prefill).
     Returns (x_{t-1} sequence, new_prev)."""
     shifted = jnp.concatenate([prev[:, None, :].astype(x.dtype),
                                x[:, :-1]], axis=1)
-    return shifted, x[:, -1]
+    if true_len is None:
+        return shifted, x[:, -1]
+    new_prev = jnp.take_along_axis(
+        x, (true_len - 1)[:, None, None], axis=1)[:, 0]
+    return shifted, new_prev
 
 
 def _groupnorm_heads(y, scale, H, dh):
@@ -363,12 +390,13 @@ def _groupnorm_heads(y, scale, H, dh):
     return yn.reshape(B, S, H * dh) * scale
 
 
-def rwkv6_time_mix(cfg, p, x, prev, wkv_state, *, chunk: int = 64):
+def rwkv6_time_mix(cfg, p, x, prev, wkv_state, *, chunk: int = 64,
+                   true_len=None):
     """x: [B,S,D]; prev: [B,D]; wkv_state: [B,H,dh,dh] fp32."""
     H, dh = rwkv6_dims(cfg)
     B, S, D = x.shape
     xn = _layernorm(p["ln"], x)
-    xprev, new_prev = _token_shift(xn, prev)
+    xprev, new_prev = _token_shift(xn, prev, true_len)
     mix = lambda m: (xn.astype(jnp.float32) * (1 - m)
                      + xprev.astype(jnp.float32) * m).astype(x.dtype)
     xr, xk, xv, xg, xw = (mix(p[f"mu_{c}"]) for c in "rkvgw")
@@ -383,6 +411,13 @@ def rwkv6_time_mix(cfg, p, x, prev, wkv_state, *, chunk: int = 64):
                       getw(p, "lora_B").astype(jnp.float32))
     log_w = -jnp.exp(p["w0"] + lora)                       # [B,S,D] < 0
     log_w = log_w.reshape(B, S, H, dh)
+    if true_len is not None:
+        # pads must not touch the wkv state: zero the key (no k v^T
+        # contribution) and the log-decay (exp(0) = 1, identity carry)
+        seq_mask = (jnp.arange(S)[None, :]
+                    < true_len[:, None])[..., None, None]
+        k = k * seq_mask
+        log_w = log_w * seq_mask
     if S == 1:
         y, wkv_state = linear_attn_decode_channel(
             r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], p["u"], wkv_state)
@@ -395,9 +430,9 @@ def rwkv6_time_mix(cfg, p, x, prev, wkv_state, *, chunk: int = 64):
     return out, new_prev, wkv_state
 
 
-def rwkv6_channel_mix(cfg, p, x, prev):
+def rwkv6_channel_mix(cfg, p, x, prev, true_len=None):
     xn = _layernorm(p["ln"], x)
-    xprev, new_prev = _token_shift(xn, prev)
+    xprev, new_prev = _token_shift(xn, prev, true_len)
     mix = lambda m: (xn.astype(jnp.float32) * (1 - m)
                      + xprev.astype(jnp.float32) * m).astype(x.dtype)
     xk, xr = mix(p["mu_k"]), mix(p["mu_r"])
@@ -409,17 +444,22 @@ def rwkv6_channel_mix(cfg, p, x, prev):
     return (rgate * kv).astype(x.dtype), new_prev
 
 
-def rwkv6_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 64):
+def rwkv6_apply(cfg: ArchConfig, p, x, state=None, *, chunk: int = 64,
+                true_len=None):
     """Full rwkv6 block (time mix + channel mix), residual inside.
-    state: dict(tm_prev [B,D], cm_prev [B,D], wkv [B,H,dh,dh])."""
+    state: dict(tm_prev [B,D], cm_prev [B,D], wkv [B,H,dh,dh]).
+    ``true_len`` (int32[B], optional) marks right-padding whose tokens
+    must leave the returned state untouched (bucketed prefill)."""
     B, S, D = x.shape
     H, dh = rwkv6_dims(cfg)
     if state is None:
         state = rwkv6_init_state(cfg, B)
     att, tm_prev, wkv = rwkv6_time_mix(cfg, p["tm"], x, state["tm_prev"],
-                                       state["wkv"], chunk=chunk)
+                                       state["wkv"], chunk=chunk,
+                                       true_len=true_len)
     x = x + att
-    ffn, cm_prev = rwkv6_channel_mix(cfg, p["cm"], x, state["cm_prev"])
+    ffn, cm_prev = rwkv6_channel_mix(cfg, p["cm"], x, state["cm_prev"],
+                                     true_len)
     x = x + ffn
     return x, {"tm_prev": tm_prev, "cm_prev": cm_prev, "wkv": wkv}
 

@@ -95,19 +95,25 @@ def _ffn_apply(cfg, kind, p, x, *, moe_dropless: bool = False):
 
 
 def block_apply_seq(cfg: ArchConfig, kind: str, p, x, *, positions=None,
-                    state=None, want_state: bool, moe_dropless: bool = False):
+                    state=None, want_state: bool, moe_dropless: bool = False,
+                    true_len=None):
     """Full-sequence forward for one block.
 
     Returns (x_out, aux_loss, new_state_or_None).  ``state=None`` starts
     fresh (train); a state pytree continues it (chunked prefill).
+    ``true_len`` (int32[B], optional) marks right-padding (bucketed
+    prefill): attention layers need nothing (causal masking already keeps
+    pads out of real positions) but recurrence layers must carry their
+    state through pads untouched.
     """
     B, S, D = x.shape
     if kind == "mamba2":
         h = L.norm_apply(cfg, p["norm"], x)
-        out, st = SSM.mamba2_apply(cfg, p["mix"], h, state)
+        out, st = SSM.mamba2_apply(cfg, p["mix"], h, state,
+                                   true_len=true_len)
         return x + out, jnp.float32(0.0), (st if want_state else None)
     if kind == "rwkv6":
-        out, st = SSM.rwkv6_apply(cfg, p, x, state)
+        out, st = SSM.rwkv6_apply(cfg, p, x, state, true_len=true_len)
         return out, jnp.float32(0.0), (st if want_state else None)
     assert _is_attn(kind)
     local = kind == "attn_local" or (kind == "shared_attn" and cfg.window > 0)
@@ -354,6 +360,10 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.arange(S)[None, :]
+    # bucketed prefill: tokens beyond true_len are right-padding.  Causal
+    # attention keeps them out of real positions for free; recurrence
+    # layers get the mask so their state ends exactly at true_len.
+    true_len = batch.get("true_len")
     max_len = max_len or S
     shared_p = params.get("shared")
     from repro.launch.sharding import match_vma
@@ -364,7 +374,7 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
         p = p if kind != "shared_attn" else shared_p
         return block_apply_seq(cfg, kind, p, x, positions=positions,
                                state=st_in, want_state=want_state,
-                               moe_dropless=moe_dropless)
+                               moe_dropless=moe_dropless, true_len=true_len)
 
     # head layers
     for i, kind in enumerate(plan.head):
@@ -373,7 +383,7 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
         if want_state:
             states[f"head_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len,
                                                  kv_dtype, kv_mode,
-                                                 paged_layout)
+                                                 paged_layout, true_len)
 
     # scanned segment
     if plan.n_scan:
@@ -384,7 +394,8 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
                 x, a, st = run_block(kind, layer_p[j], x, None)
                 aux += a
                 sts.append(_pad_seq_state(cfg, kind, st, S, max_len,
-                                          kv_dtype, kv_mode, paged_layout)
+                                          kv_dtype, kv_mode, paged_layout,
+                                          true_len)
                            if want_state else 0)
             x = shard(x, "batch", None, None)
             return (x, aux), tuple(sts)
@@ -403,23 +414,28 @@ def stack_apply_seq(cfg: ArchConfig, params, batch, *, want_state: bool,
         if want_state:
             states[f"tail_{i}"] = _pad_seq_state(cfg, kind, st, S, max_len,
                                                  kv_dtype, kv_mode,
-                                                 paged_layout)
+                                                 paged_layout, true_len)
 
     logits = _logits(cfg, params, x)
     if want_state:
-        states["len"] = jnp.full((B,), S, jnp.int32)
+        states["len"] = (jnp.broadcast_to(true_len, (B,)).astype(jnp.int32)
+                         if true_len is not None
+                         else jnp.full((B,), S, jnp.int32))
         return logits, aux_total, states
     return logits, aux_total, None
 
 
 def _pad_seq_state(cfg, kind, st, S: int, max_len: int,
                    kv_dtype=jnp.bfloat16, kv_mode: str = "bf16",
-                   paged_layout: bool = False):
+                   paged_layout: bool = False, true_len=None):
     """Turn a full-seq block state into a decode cache of size max_len.
 
     ``paged_layout`` keeps local-attention layers at FULL positional layout
     (no rolling-window compaction): the paged engine scatters prefill KV
     into absolute-position pages and masks the window at attention time.
+    ``true_len`` (int32[B], optional) marks bucketed-prefill padding: the
+    rolling-window compaction then keeps the window trailing the last REAL
+    token (pad KV beyond it is garbage that decode validity masks away).
     """
     if st is None:
         return None
@@ -440,15 +456,31 @@ def _pad_seq_state(cfg, kind, st, S: int, max_len: int,
     if local and cfg.window and cfg.window < max_len and not paged_layout:
         W = cfg.window
         B, G = k.shape[0], k.shape[1]
-        # keep the last `window` keys, placed at their rolling slots
         last = k.shape[2]
-        take = min(W, last)
-        ks_, vs_ = k[:, :, -take:], v[:, :, -take:]
-        pos = jnp.arange(last - take, last)
-        slots = pos % W
-        kw = jnp.zeros((B, G, W, k.shape[-1]), k.dtype).at[:, :, slots].set(ks_)
-        vw = jnp.zeros((B, G, W, v.shape[-1]), v.dtype).at[:, :, slots].set(vs_)
-        pos_arr = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(pos)
+        if true_len is None:
+            # keep the last `window` keys, placed at their rolling slots
+            take = min(W, last)
+            ks_, vs_ = k[:, :, -take:], v[:, :, -take:]
+            pos = jnp.arange(last - take, last)
+            slots = pos % W
+            kw = jnp.zeros((B, G, W, k.shape[-1]),
+                           k.dtype).at[:, :, slots].set(ks_)
+            vw = jnp.zeros((B, G, W, v.shape[-1]),
+                           v.dtype).at[:, :, slots].set(vs_)
+            pos_arr = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(pos)
+        else:
+            # window [true_len - W, true_len): for each rolling slot s the
+            # unique in-window position with pos % W == s, gathered per
+            # row (positions < 0 are marked invalid)
+            tl = jnp.broadcast_to(true_len, (B,)).astype(jnp.int32)
+            base = tl[:, None] - W                          # [B, 1]
+            slots = jnp.arange(W)[None, :]
+            pos = base + (slots - base) % W                 # [B, W]
+            valid = pos >= 0
+            cpos = jnp.clip(pos, 0, last - 1)
+            kw = jnp.take_along_axis(k, cpos[:, None, :, None], axis=2)
+            vw = jnp.take_along_axis(v, cpos[:, None, :, None], axis=2)
+            pos_arr = jnp.where(valid, pos, -1).astype(jnp.int32)
         k, v, extra = kw, vw, {"pos_arr": pos_arr}
     else:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))

@@ -48,6 +48,13 @@ class ServeConfig:
     page_size: int = 16
     hbm_budget_mb: float = 64.0
     attn_backend: str = "gather"
+    # paged-engine execution knobs: interpret=False runs the Pallas
+    # backends as real kernels (TPU); max_cold_pages caps the cold page-id
+    # space (None = derive from the host budget / HBM pools).  Threaded
+    # through AssistSpec into EngineBase.from_config -- without these a
+    # build() engine was stuck in interpret mode with derived cold caps.
+    interpret: bool = True
+    max_cold_pages: Optional[int] = None
     assist: Optional[AssistSpec] = None
 
     def __post_init__(self):
@@ -55,7 +62,9 @@ class ServeConfig:
             object.__setattr__(self, "assist", AssistSpec(
                 kv=self.kv_mode, paged=self.paged,
                 attn_backend=self.attn_backend, page_size=self.page_size,
-                hbm_budget_mb=self.hbm_budget_mb))
+                hbm_budget_mb=self.hbm_budget_mb,
+                interpret=self.interpret,
+                max_cold_pages=self.max_cold_pages))
         else:
             # an explicit spec is authoritative: back-fill the flat
             # aliases so both spellings always agree (code reading
@@ -66,7 +75,9 @@ class ServeConfig:
                                  ("page_size", spec.page_size),
                                  ("hbm_budget_mb",
                                   spec.budget_bytes / 2 ** 20),
-                                 ("attn_backend", spec.attn_backend)):
+                                 ("attn_backend", spec.attn_backend),
+                                 ("interpret", spec.interpret),
+                                 ("max_cold_pages", spec.max_cold_pages)):
                 object.__setattr__(self, field, value)
 
     # -- derived configs ------------------------------------------------------

@@ -1,11 +1,27 @@
 """Batched serving engine with continuous batching.
 
 A fixed pool of B slots over one decode-state pytree.  New requests are
-prefillled individually (padded to the slot's max_len) and spliced into
-free slots along the batch axis; one jitted ``decode_step`` advances every
-active slot per tick; finished slots are recycled without stalling the
-rest of the batch -- continuous batching a la Orca/vLLM, reduced to the
-single-controller JAX setting.
+prefillled individually (padded to a bucketed length, masked via
+``true_len``) and spliced into free slots along the batch axis; one jitted
+``decode_step`` advances every active slot per tick; finished slots are
+recycled without stalling the rest of the batch -- continuous batching a
+la Orca/vLLM, reduced to the single-controller JAX setting.
+
+The decode loop is HOST-SYNC-FREE (DESIGN.md 12):
+
+* sampling is fused into the jitted step (per-slot temperature vector and
+  a threaded PRNG key are jit inputs; greedy/categorical select happens on
+  device), so the host never materializes logits;
+* the sampled tokens stay device-resident -- they are the NEXT tick's
+  input without a round trip;
+* retirement reads the *previous* tick's tokens (``jax.device_get`` of a
+  one-tick-lagged handle) while the current tick executes, so the host
+  never blocks on the token it just dispatched.  EOS discovery therefore
+  lags one tick: the slot decodes one junk token that is discarded at the
+  next harvest; output streams are unchanged.
+* prompt lengths are BUCKETED (models/model.py::prompt_bucket): prefill
+  compiles once per power-of-two bucket instead of once per distinct
+  prompt length.
 
 The engine takes ``kv_mode`` straight through to the cache (CABA KV site):
 int8 doubles the resident slot count for the same HBM.
@@ -21,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DEFAULT_EOS_ID
-from repro.models.model import ModelFns
+from repro.models.model import ModelFns, prompt_bucket
 
 
 @dataclasses.dataclass
@@ -50,6 +66,10 @@ class EngineBase:
     divergent constructor signatures directly.
     """
 
+    #: prompt-length bucket quantum of the dense engine (the paged engine
+    #: buckets on its page size instead)
+    PREFILL_QUANTUM = 16
+
     @classmethod
     def from_config(cls, scfg, model, params) -> "EngineBase":
         """Build the engine a ServeConfig describes (dense or paged)."""
@@ -60,7 +80,9 @@ class EngineBase:
                 model, params, lanes=scfg.slots, max_len=scfg.max_len,
                 tier=scfg.tier_config(), eos_id=scfg.eos_id,
                 seed=scfg.seed, backend=spec.attn_backend,
-                use_roofline_trigger=spec.use_roofline_trigger)
+                use_roofline_trigger=spec.use_roofline_trigger,
+                max_cold_pages=spec.max_cold_pages,
+                interpret=spec.interpret)
         return Engine(model, params, batch_slots=scfg.slots,
                       max_len=scfg.max_len, kv_mode=spec.kv,
                       eos_id=scfg.eos_id, seed=scfg.seed)
@@ -76,50 +98,89 @@ class EngineBase:
         self._next_rid = max(self._next_rid, req.rid + 1)
         self.queue.append(req)
 
-    def _sample(self, logits, temperature):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.rng, k = jax.random.split(self.rng)
-        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+    #: fold_in tags separating the two in-jit sampling streams -- decode
+    #: keys fold (rng, DECODE_STREAM, tick) and prefill (rng,
+    #: PREFILL_STREAM, rid), so a tick number colliding with a request id
+    #: can never key two categorical draws identically
+    DECODE_STREAM = 0
+    PREFILL_STREAM = 1
 
-    def _sample_rows(self, logits, temps):
-        """Per-row sampling honoring a vector of temperatures (0 = greedy)."""
-        temps = np.asarray(temps, np.float32)
+    @staticmethod
+    def _select_token(logits, temps, key):
+        """On-device greedy/categorical select (the fused sampling site).
+
+        logits: f32[B, V]; temps: f32[B] (<= 0 means greedy -- those rows
+        never read the key, so greedy streams are key-independent).
+        """
         greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        if not (temps > 0.0).any():
-            return greedy
-        self.rng, k = jax.random.split(self.rng)
-        t = jnp.asarray(np.where(temps > 0.0, temps, 1.0))
+        t = jnp.where(temps > 0.0, temps, 1.0)
         sampled = jax.random.categorical(
-            k, logits / t[:, None], axis=-1).astype(jnp.int32)
-        return jnp.where(jnp.asarray(temps > 0.0), sampled, greedy)
+            key, logits / t[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
+    def _pad_prompt(self, prompt, quantum: int) -> dict:
+        """Bucket-padded prefill batch: tokens padded up to the bucket,
+        true_len carrying the real length for the in-jit mask."""
+        plen = len(prompt)
+        bucket = prompt_bucket(plen, self.max_len, quantum) \
+            if self.bucket_prefill else plen
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+        return {"tokens": jnp.asarray(toks),
+                "true_len": jnp.asarray([plen], jnp.int32)}
 
 class Engine(EngineBase):
     """Greedy/temperature sampling over a slot-batched decode state."""
 
     def __init__(self, model: ModelFns, params, *, batch_slots: int,
                  max_len: int, kv_mode: str = "bf16",
-                 eos_id: int = DEFAULT_EOS_ID, seed: int = 0):
+                 eos_id: int = DEFAULT_EOS_ID, seed: int = 0,
+                 bucket_prefill: bool = True):
         self.model = model
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.kv_mode = kv_mode
         self.eos_id = eos_id
+        self.bucket_prefill = bucket_prefill
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.state = model.init_state(batch_slots, max_len, kv_mode=kv_mode)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.rng = jax.random.PRNGKey(seed)
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self._temps = np.zeros(batch_slots, np.float32)
+        self._tick = 0
+        # one-tick-lagged readback state: the just-dispatched tokens and
+        # the (slot, req, remaining-after) snapshot they belong to
+        self._inflight: Optional[tuple] = None
+        self._pending_first: list = []      # [(req, first-token handle)]
         self._init_intake()
 
-        cfg = model.cfg
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len, moe_dropless=True,
-                                       kv_mode=kv_mode))
+        def step_fn(params, state, tokens, temps, rng, tick):
+            logits, state = model.decode_step(params, state, tokens)
+            key = jax.random.fold_in(
+                jax.random.fold_in(rng, self.DECODE_STREAM), tick)
+            nxt = self._select_token(logits[:, 0], temps, key)
+            return nxt, state
+
+        self._decode = jax.jit(step_fn)
+
+        def prefill_fn(params, batch, temp, rng, salt):
+            logits, one_state = model.prefill(params, batch, max_len,
+                                              moe_dropless=True,
+                                              kv_mode=kv_mode)
+            tl = batch["true_len"]
+            last = jnp.take_along_axis(logits, (tl - 1)[:, None, None],
+                                       axis=1)[:, 0]
+            temps = jnp.broadcast_to(jnp.asarray(temp, jnp.float32),
+                                     (last.shape[0],))
+            key = jax.random.fold_in(
+                jax.random.fold_in(rng, self.PREFILL_STREAM), salt)
+            tok = self._select_token(last, temps, key)
+            return tok, one_state
+
+        self._prefill = jax.jit(prefill_fn)
 
         # plain caches are [B, ...]; scan-stacked caches are [n_scan, B, ...]
         def splice_tree(state, one_state, slot):
@@ -150,45 +211,82 @@ class Engine(EngineBase):
             if slot is None:
                 return
             req = self.queue.popleft()
-            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-            logits, one_state = self._prefill(self.params, {"tokens": toks})
+            batch = self._pad_prompt(req.prompt, self.PREFILL_QUANTUM)
+            tok, one_state = self._prefill(self.params, batch,
+                                           float(req.temperature), self.rng,
+                                           req.rid)
             self.state = self._splice(self.state, one_state, slot)
-            nxt = self._sample(logits[:, -1], req.temperature)
-            self.tokens = self.tokens.at[slot, 0].set(nxt[0])
-            req.out.append(int(nxt[0]))
+            self.tokens = self.tokens.at[slot, 0].set(tok[0])
+            self._temps[slot] = req.temperature
+            # the first token is appended at the next harvest (no sync here)
+            self._pending_first.append((req, tok))
             self.slots[slot] = _Slot(req, req.max_new - 1)
-
-    def _sample_slots(self, logits):
-        """Per-slot sampling honoring each request's temperature."""
-        return self._sample_rows(
-            logits, [s.req.temperature if s.req is not None else 0.0
-                     for s in self.slots])
 
     # -- main loop -----------------------------------------------------------
 
     def step(self):
-        """One engine tick: admit, decode all active slots, retire."""
+        """One engine tick: admit, decode all active slots (sampling
+        fused), then harvest the PREVIOUS tick's tokens while this tick
+        executes."""
         self._admit()
-        if not any(s.req is not None for s in self.slots):
-            return False
-        logits, self.state = self._decode(self.params, self.state, self.tokens)
-        nxt = self._sample_slots(logits[:, 0])
+        active = [(i, s) for i, s in enumerate(self.slots)
+                  if s.req is not None]
+        if not active:
+            prev, self._inflight = self._inflight, None
+            return self._harvest(prev)
+        self._tick += 1
+        nxt, self.state = self._decode(self.params, self.state, self.tokens,
+                                       jnp.asarray(self._temps), self.rng,
+                                       self._tick)
         self.tokens = nxt[:, None]
-        for i, s in enumerate(self.slots):
-            if s.req is None:
-                continue
-            tok = int(nxt[i])
-            s.req.out.append(tok)
-            s.remaining -= 1
-            if s.remaining <= 0 or tok == self.eos_id:
-                s.req.done = True
-                self.finished.append(s.req)
+        snapshot = []
+        for i, s in active:
+            s.remaining -= 1                     # host-known: speculative
+            snapshot.append((i, s.req, s.remaining))
+            if s.remaining <= 0:
+                # out of budget: free the slot now (its final token is in
+                # flight and lands at the next harvest, keyed by req)
                 self.slots[i] = _Slot()
+        prev, self._inflight = self._inflight, (nxt, snapshot)
+        self._harvest(prev)
         return True
+
+    def _harvest(self, prev) -> bool:
+        """Land the lagged tokens: append, retire EOS/out-of-budget
+        requests.  The device_get here overlaps the tick dispatched just
+        before it."""
+        firsts, self._pending_first = self._pending_first, []
+        if prev is None and not firsts:
+            return False
+        handles = [t for _, t in firsts] + ([prev[0]] if prev else [])
+        vals = jax.device_get(handles)
+        for (req, _), v in zip(firsts, vals):
+            req.out.append(int(np.asarray(v).ravel()[0]))
+        if prev is not None:
+            nxt = np.asarray(vals[-1])
+            for i, req, rem in prev[1]:
+                if req.done:                    # junk token past EOS
+                    continue
+                tok = int(nxt[i])
+                req.out.append(tok)
+                if rem <= 0 or tok == self.eos_id:
+                    req.done = True
+                    self.finished.append(req)
+                    if self.slots[i].req is req:
+                        self.slots[i] = _Slot()
+        return True
+
+    def sync(self):
+        """Block until every dispatched tick/prefill has executed
+        (benchmark window boundaries)."""
+        if self._inflight is not None:
+            jax.block_until_ready(self._inflight[0])
+        jax.block_until_ready(self.tokens)
 
     def run(self, max_ticks: int = 10_000):
         ticks = 0
-        while (self.queue or any(s.req for s in self.slots)) \
+        while (self.queue or any(s.req for s in self.slots)
+               or self._inflight is not None or self._pending_first) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1

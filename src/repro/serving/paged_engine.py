@@ -17,6 +17,31 @@ Differences from the dense ``engine.Engine``:
 * The roofline trigger (cache/policy.py) decides whether demotion
   (compression) is allowed at all, per the paper's AWC discipline.
 
+The decode tick is HOST-SYNC-FREE (DESIGN.md 12) -- the CABA discipline
+(assist work must hide in the main computation's shadow, paper 4.2/6)
+applied to the host itself:
+
+* sampling runs ON DEVICE inside the jitted step (per-lane temperature
+  vector + threaded PRNG key as jit inputs); the sampled tokens feed the
+  next tick without ever visiting the host;
+* the block table and last-token vector are DEVICE-RESIDENT between
+  ticks, updated by dirty-row scatters only when a lane's assignment or
+  page placement actually changed (store.drain_dirty);
+* lane retirement reads the PREVIOUS tick's tokens (one-tick-lagged
+  ``jax.device_get``) while the current tick executes.  EOS discovery
+  lags one tick -- the lane decodes one junk token that the next harvest
+  discards (requests that exhaust ``max_new`` free their lane at dispatch
+  with no lag, since the budget is host-known);
+* prompt lengths BUCKET to page-size multiples rounded up to powers of
+  two, so prefill compiles O(log(max_len / page_size)) variants instead
+  of one per distinct prompt length;
+* tier movement accumulates into batched movers (cache/tiers.py): an
+  eviction storm lands in O(1) dispatches.
+
+``host_sync=True`` reconstructs the pre-PR loop (exact-length prefill,
+blocking per-tick readback, full block-table rebuild, single-page movers)
+for A/B measurement in benchmarks/serving_micro.py::run_host_overhead.
+
 With every tier but hot disabled and enough budget, outputs are
 token-identical to the dense engine on the same prompts (tests/
 test_paged_engine.py, test_paged_kinds.py); the tiered configs trade
@@ -28,7 +53,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 import jax
@@ -49,11 +74,27 @@ from repro.serving.engine import EngineBase, Request
 
 @dataclasses.dataclass
 class _RState:
-    """A resident request: its tokens so far and decode progress."""
+    """A resident request: its tokens so far and decode progress.
+
+    ``last_tok`` is the request's latest sampled token: a host int once
+    harvested, or a device scalar while the sample is still in flight
+    (fresh admission) -- either feeds the token-injection scatter when the
+    request enters a lane.
+    """
     req: Request
-    length: int          # tokens whose KV is in the cache
-    last_tok: int
+    length: int          # tokens whose KV is in the cache (incl. in-flight)
+    last_tok: Union[int, jax.Array]
     remaining: int
+
+
+@jax.jit
+def _scatter_rows(dst, idx, rows):
+    """Dirty-row update of a device-resident per-lane array.  ``idx`` is
+    padded with an out-of-range lane index; ``mode="drop"`` discards the
+    padding instead of clipping it onto a real row.  NOT donated: ``dst``
+    may also be the in-flight harvest handle (the previous tick's sampled
+    tokens), which must stay readable until its lagged device_get."""
+    return dst.at[idx].set(rows, mode="drop")
 
 
 class PagedEngine(EngineBase):
@@ -65,7 +106,8 @@ class PagedEngine(EngineBase):
                  controller: Optional[AssistController] = None,
                  use_roofline_trigger: bool = True,
                  max_cold_pages: Optional[int] = None,
-                 backend: str = "gather", interpret: bool = True):
+                 backend: str = "gather", interpret: bool = True,
+                 host_sync: bool = False):
         cfg = model.cfg
         bad = T.paged_unsupported_layers(cfg)
         if bad:
@@ -73,12 +115,15 @@ class PagedEngine(EngineBase):
                              f"layers {bad}")
         self.model, self.params, self.cfg = model, params, cfg
         self.backend = backend
+        self.interpret = interpret
         tier = tier or TierConfig()
         if max_len % tier.page_size:
             raise ValueError("max_len must be a multiple of page_size")
         self.max_len, self.eos_id = max_len, eos_id
         self.n_lanes = lanes
         self.maxp = max_len // tier.page_size
+        self.host_sync = host_sync
+        self.bucket_prefill = not host_sync
         self.segments = T.paged_segments(cfg)
         geom = T.paged_geometry(cfg, tier.page_size)
         self.geom = geom
@@ -126,6 +171,8 @@ class PagedEngine(EngineBase):
                                    warm_state=warm_state,
                                    host_budget_bytes=tier.host_budget_bytes,
                                    cold_delta=tier.cold_delta)
+        if host_sync:
+            self.store.mover_batch = 1      # pre-PR per-page dispatches
         terms = site = None
         if use_roofline_trigger:
             # resident-token estimate for the trigger: tokens the hot tier
@@ -159,17 +206,57 @@ class PagedEngine(EngineBase):
         self.tokens_generated = 0
         self.admission_blocked = False
 
+        # device-resident per-lane tick state + host mirrors.  The device
+        # copies update by dirty-row scatter; the host mirrors exist so a
+        # dirty row can be rebuilt without touching the clean ones.
+        self._bt_host = np.zeros((lanes, self.maxp), np.int32)
+        self._bt_dev = jnp.zeros((lanes, self.maxp), jnp.int32)
+        self._tokens_dev = jnp.zeros((lanes,), jnp.int32)
+        self._lengths = np.zeros(lanes, np.int32)
+        self._temps = np.zeros(lanes, np.float32)
+        self._state_slots = np.zeros(lanes, np.int32)
+        self._dirty_bt: set[int] = set()
+        self._dirty_tok: set[int] = set()
+        self._inflight: Optional[tuple] = None   # (tokens, snapshot)
+        self._pending_first: list = []           # [(req, token handle)]
+
         # the warm gather/dequant is compiled out entirely when the warm
-        # tier is disabled (block tables then never hold negative entries)
-        self._decode = jax.jit(
-            functools.partial(model.paged_decode_step, has_warm=warm > 0,
-                              backend=backend, interpret=interpret),
-            donate_argnums=(1,))
+        # tier is disabled (block tables then never hold negative entries);
+        # sampling is fused so the tick never returns logits to the host
+        def step_fn(params, pools, tokens, bt, lengths, state_slots, temps,
+                    rng, tick):
+            logits, pools = model.paged_decode_step(
+                params, pools, tokens[:, None], bt, lengths, state_slots,
+                has_warm=warm > 0, backend=backend, interpret=interpret)
+            key = jax.random.fold_in(
+                jax.random.fold_in(rng, self.DECODE_STREAM), tick)
+            nxt = self._select_token(logits[:, 0], temps, key)
+            return nxt, pools
+
+        self._decode = jax.jit(step_fn, donate_argnums=(1,))
+
         # paged_layout keeps local-attention prefill KV at absolute
-        # positions (no rolling compaction) so it scatters into pages
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len, moe_dropless=True,
-                                       kv_mode="bf16", paged_layout=True))
+        # positions (no rolling compaction) so it scatters into pages.
+        # The cache is sized to the BUCKET (padded prompt length), not to
+        # max_len: write_prefill scatters exactly the bucket's pages.
+        ps = tier.page_size
+
+        def prefill_fn(params, batch, temp, rng, salt):
+            pad_to = -(-batch["tokens"].shape[1] // ps) * ps
+            logits, state = model.prefill(params, batch, pad_to,
+                                          moe_dropless=True, kv_mode="bf16",
+                                          paged_layout=True)
+            tl = batch["true_len"]
+            last = jnp.take_along_axis(logits, (tl - 1)[:, None, None],
+                                       axis=1)[:, 0]
+            temps = jnp.broadcast_to(jnp.asarray(temp, jnp.float32),
+                                     (last.shape[0],))
+            key = jax.random.fold_in(
+                jax.random.fold_in(rng, self.PREFILL_STREAM), salt)
+            tok = self._select_token(last, temps, key)
+            return tok, state
+
+        self._prefill = jax.jit(prefill_fn)
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -191,6 +278,19 @@ class PagedEngine(EngineBase):
 
     def resident_tokens(self) -> int:
         return sum(r.length for r in self.resident.values())
+
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes compiled so far (the retrace gauge)."""
+        return self._prefill._cache_size()
+
+    def pending_decode_tokens(self) -> int:
+        """In-flight decode tokens that WILL be appended at the next
+        harvest (junk rows of already-retired requests excluded) -- the
+        lag correction benchmark windows add to ``tokens_generated``."""
+        if self._inflight is None:
+            return 0
+        return sum(1 for _, rid, _ in self._inflight[1]
+                   if rid in self.resident)
 
     def _touch(self, rid: int):
         self.pool.touch(rid, self.tick_no)
@@ -243,6 +343,87 @@ class PagedEngine(EngineBase):
                     prot.update(self.pool.table(self._state_rid(rid)))
         return prot
 
+    # -- lane bookkeeping (device-resident tick state) -----------------------
+
+    def _assign(self, i: int, rid: int):
+        """Put ``rid`` into lane ``i``: the row rebuild and token
+        injection are deferred to the pre-dispatch dirty-row scatter."""
+        self.lanes[i] = rid
+        self._dirty_bt.add(i)
+        self._dirty_tok.add(i)
+
+    def _vacate(self, i: int):
+        """Empty lane ``i``: its block-table row gathers from trash and
+        its write lands on the trash page until reassigned."""
+        self.lanes[i] = None
+        self._bt_host[i, :] = 0
+        self._lengths[i] = 0
+        self._temps[i] = 0.0
+        self._state_slots[i] = 0
+        self._dirty_bt.add(i)
+        self._dirty_tok.discard(i)
+
+    def _push_lane_updates(self):
+        """Incremental device update of the block table / token vector.
+
+        Host-side row rebuilds (the per-page encoded_loc walk) happen
+        ONLY for rows whose lane assignment or page placement changed,
+        and a steady tick dispatches nothing at all.  When any row IS
+        dirty, the scatter ships a fixed-shape [lanes, maxp] operand
+        (padded, ``mode="drop"``) so every dirty count shares one
+        compiled program -- dirtiness saves dispatches and host work,
+        not transfer bytes on the (rare) dirty ticks."""
+        moved = self.store.drain_dirty()
+        if moved:
+            lane_of = {rid: i for i, rid in enumerate(self.lanes)
+                       if rid is not None}
+            for pid in moved:
+                owner = int(self.pool.owner[pid])
+                if owner == -1:
+                    continue
+                rid = owner if owner >= 0 else -2 - owner
+                i = lane_of.get(rid)
+                if i is not None:
+                    self._dirty_bt.add(i)
+        if self.host_sync:                   # pre-PR loop: rebuild all
+            self._dirty_bt.update(i for i, rid in enumerate(self.lanes)
+                                  if rid is not None)
+        if not self._dirty_bt:
+            return
+        idx = np.full(self.n_lanes, self.n_lanes, np.int32)
+        rows = np.zeros((self.n_lanes, self.maxp), np.int32)
+        for j, i in enumerate(sorted(self._dirty_bt)):
+            rid = self.lanes[i]
+            if rid is not None:
+                st = self.resident[rid]
+                table = self.pool.table(rid)
+                self._bt_host[i, :] = 0
+                self._bt_host[i, :len(table)] = \
+                    [self.store.encoded_loc(p) for p in table]
+                self._lengths[i] = st.length
+                self._temps[i] = st.req.temperature
+                if self.has_state:
+                    spid = self.pool.table(self._state_rid(rid))[0]
+                    self._state_slots[i] = self.store.state_hot_slot(spid)
+            idx[j] = i
+            rows[j] = self._bt_host[i]
+        self._bt_dev = _scatter_rows(self._bt_dev, jnp.asarray(idx),
+                                     jnp.asarray(rows))
+        self._dirty_bt.clear()
+        if self._dirty_tok:
+            tidx = np.full(self.n_lanes, self.n_lanes, np.int32)
+            vals: list = []
+            for j, i in enumerate(sorted(self._dirty_tok)):
+                tidx[j] = i
+                tok = self.resident[self.lanes[i]].last_tok
+                vals.append(tok if isinstance(tok, jax.Array)
+                            else jnp.asarray(tok, jnp.int32))
+            vals += [jnp.asarray(0, jnp.int32)] * (self.n_lanes - len(vals))
+            self._tokens_dev = _scatter_rows(
+                self._tokens_dev, jnp.asarray(tidx),
+                jnp.stack(vals).astype(jnp.int32))
+            self._dirty_tok.clear()
+
     # -- admission (preemption-by-demotion, never rejection) -----------------
 
     def _admit_one(self, req: Request, protected: set[int]) -> bool:
@@ -262,24 +443,21 @@ class PagedEngine(EngineBase):
         if self.has_state:
             spid = self.pool.allocate(self._state_rid(req.rid), 1)[0]
             self.store.place_hot_state(spid)
-        toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None, :])
-        logits, one_state = self._prefill(self.params, {"tokens": toks})
+        batch = self._pad_prompt(req.prompt, self.pool.page_size)
+        tok, one_state = self._prefill(self.params, batch,
+                                       float(req.temperature), self.rng,
+                                       req.rid)
         self.store.write_prefill(slots, self._segment_kv(one_state), S=plen)
         if spid is not None:
             self.store.write_state(spid, self._segment_state(one_state))
-        tok = int(self._sample(logits[:, -1], req.temperature)[0])
-        req.out.append(tok)
-        self.resident[req.rid] = _RState(req, plen, tok, req.max_new - 1)
+        # the sampled first token stays on device; it is appended to
+        # req.out (and becomes a host int) at the next harvest
+        self.resident[req.rid] = _RState(req, plen, tok[0], req.max_new - 1)
+        self._pending_first.append((req, tok))
         self._touch(req.rid)
         self.peak_resident_tokens = max(self.peak_resident_tokens,
                                         self.resident_tokens())
         return True
-
-    def _sample_lanes(self, logits):
-        return self._sample_rows(
-            logits,
-            [self.resident[rid].req.temperature if rid is not None else 0.0
-             for rid in self.lanes])
 
     # -- lane maintenance ----------------------------------------------------
 
@@ -345,13 +523,16 @@ class PagedEngine(EngineBase):
                 cand = self.parked.popleft()
                 if cand not in self.resident:
                     continue
-                cold_before = [p for p in self.pool.table(cand)
+                all_pages = list(self.pool.table(cand))
+                if self.has_state:
+                    all_pages.append(self.pool.table(
+                        self._state_rid(cand))[0])
+                cold_before = [p for p in all_pages
                                if self.store.tier[p] == TIER_COLD]
                 if self._ensure_decodable(cand, protected):
                     # account once, on the attempt that actually swaps in
-                    self.policy.account_swap_in(self.pool.table(cand),
-                                                cold_before)
-                    self.lanes[i] = cand
+                    self.policy.account_swap_in(all_pages, cold_before)
+                    self._assign(i, cand)
                     break
                 skipped.append(cand)               # no room this tick
             self.parked.extendleft(reversed(skipped))
@@ -365,7 +546,7 @@ class PagedEngine(EngineBase):
                     ok = False
                 if ok and self._ensure_decodable(req.rid, protected):
                     self.queue.popleft()
-                    self.lanes[i] = req.rid
+                    self._assign(i, req.rid)
                 elif ok:
                     self.queue.popleft()
                     self.parked.append(req.rid)
@@ -390,8 +571,9 @@ class PagedEngine(EngineBase):
     # -- main loop -----------------------------------------------------------
 
     def step(self) -> bool:
-        """One tick: drain barrier, prefetch, schedule, admit, decode,
-        retire."""
+        """One tick: drain barrier, prefetch, schedule, admit, decode
+        (sampling fused on device), then harvest the PREVIOUS tick's
+        tokens while this tick executes."""
         self.tick_no += 1
         self.admission_blocked = False
         # drain barrier: land last tick's async prefetch promotions BEFORE
@@ -401,72 +583,120 @@ class PagedEngine(EngineBase):
         self.policy.drain_prefetch(self.pool, self.store, protected)
         self._fill_lanes(protected)
         # lane maintenance: boundary page allocation / re-promotion for
-        # requests that stayed in their lane across ticks
+        # requests that stayed in their lane across ticks.  A lane whose
+        # EOS is still in flight runs this too: if its junk token lands on
+        # a page boundary this allocates (and may evict for) a page the
+        # next harvest frees -- bounded at one page per EOS-at-boundary,
+        # accepted in exchange for never blocking on the token value
         for i, rid in enumerate(self.lanes):
             if rid is not None and not self._ensure_decodable(rid, protected):
-                self.lanes[i] = None               # preempt by demotion
+                self._vacate(i)                    # preempt by demotion
                 self.parked.appendleft(rid)
         self._admit_extra(protected)
         active = [i for i, rid in enumerate(self.lanes) if rid is not None]
         if not active:
-            return False
+            prev, self._inflight = self._inflight, None
+            return self._harvest(prev)
 
-        bt = np.zeros((self.n_lanes, self.maxp), np.int32)
-        lengths = np.zeros(self.n_lanes, np.int32)
-        tokens = np.zeros((self.n_lanes, 1), np.int32)
-        state_slots = np.zeros(self.n_lanes, np.int32)
-        for i in active:
-            st = self.resident[self.lanes[i]]
-            table = self.pool.table(self.lanes[i])
-            bt[i, :len(table)] = [self.store.encoded_loc(p) for p in table]
-            lengths[i] = st.length
-            tokens[i, 0] = st.last_tok
-            if self.has_state:
-                spid = self.pool.table(self._state_rid(self.lanes[i]))[0]
-                state_slots[i] = self.store.state_hot_slot(spid)
-
-        logits, pools = self._decode(self.params, self.store.pools,
-                                     jnp.asarray(tokens), jnp.asarray(bt),
-                                     jnp.asarray(lengths),
-                                     jnp.asarray(state_slots))
+        self._push_lane_updates()
+        self.store.flush_movers()     # pending tier copies precede the read
+        nxt, pools = self._decode(self.params, self.store.pools,
+                                  self._tokens_dev, self._bt_dev,
+                                  jnp.asarray(self._lengths),
+                                  jnp.asarray(self._state_slots),
+                                  jnp.asarray(self._temps),
+                                  self.rng, self.tick_no)
         self.store.pools = pools
-        nxt = np.asarray(self._sample_lanes(logits[:, 0]))
+        self._tokens_dev = nxt
 
+        snapshot = []
         closing = 0
         for i in active:
             rid = self.lanes[i]
             st = self.resident[rid]
-            tok = int(nxt[i])
-            st.req.out.append(tok)
-            st.length += 1
-            st.last_tok = tok
-            st.remaining -= 1
-            self.tokens_generated += 1
-            self._touch(rid)
-            if st.remaining <= 0 or tok == self.eos_id:
-                st.req.done = True
-                self.finished.append(st.req)
-                freed = self.pool.free_request(rid)
-                if self.has_state:
-                    freed += self.pool.free_request(self._state_rid(rid))
-                for pid in freed:
-                    self.store.release(pid)
-                self.policy.forget_pages(freed)
-                del self.resident[rid]
-                self.lanes[i] = None
-            elif st.remaining <= self.policy.cfg.prefetch_lookahead:
+            st.length += 1                  # host-known: the write position
+            st.remaining -= 1               # and budget advance at dispatch
+            self._lengths[i] += 1
+            snapshot.append((i, rid, st.remaining))
+            if st.remaining <= 0:
+                # budget exhausted (no readback needed): free the lane now;
+                # the final token is in flight and retires at harvest
+                self._vacate(i)
+            if st.remaining <= self.policy.cfg.prefetch_lookahead:
                 closing += 1
         self.peak_resident_tokens = max(self.peak_resident_tokens,
                                         self.resident_tokens())
+        if self.host_sync:
+            prev, self._inflight = (nxt, snapshot), None
+        else:
+            prev, self._inflight = self._inflight, (nxt, snapshot)
+        self._harvest(prev)
         # WaSP lookahead: start promoting the next parked requests' cold
-        # TOKEN pages while the closing lanes finish (a cold state slab is
-        # promoted synchronously at swap-in -- it is one small page).
+        # TOKEN pages -- and their cold state slabs -- while the closing
+        # lanes finish, so swap-in promotion hides behind decode ticks
         for rid in list(self.parked)[:max(closing, 0)]:
             cold = [p for p in self.pool.table(rid)
                     if self.store.tier[p] == TIER_COLD]
+            if self.has_state:
+                spid = self.pool.table(self._state_rid(rid))[0]
+                if self.store.tier[spid] == TIER_COLD:
+                    cold.append(spid)
             if cold:
                 self.policy.schedule_prefetch(cold)
         return True
+
+    def _harvest(self, prev) -> bool:
+        """Land the lagged tokens (one device_get, overlapping the tick
+        dispatched just before it): append to output streams, update
+        last_tok, retire EOS/out-of-budget requests."""
+        firsts, self._pending_first = self._pending_first, []
+        if prev is None and not firsts:
+            return False
+        handles = [t for _, t in firsts] + ([prev[0]] if prev else [])
+        vals = jax.device_get(handles)
+        for (req, _), v in zip(firsts, vals):
+            tok = int(np.asarray(v).ravel()[0])
+            req.out.append(tok)
+            st = self.resident.get(req.rid)
+            if st is not None and isinstance(st.last_tok, jax.Array):
+                st.last_tok = tok
+        if prev is not None:
+            nxt = np.asarray(vals[-1])
+            for i, rid, rem in prev[1]:
+                st = self.resident.get(rid)
+                if st is None:
+                    continue              # retired earlier: junk past EOS
+                tok = int(nxt[i])
+                st.req.out.append(tok)
+                st.last_tok = tok
+                self.tokens_generated += 1
+                self._touch(rid)
+                if rem <= 0 or tok == self.eos_id:
+                    self._retire(rid)
+        return True
+
+    def _retire(self, rid: int):
+        st = self.resident.pop(rid)
+        st.req.done = True
+        self.finished.append(st.req)
+        freed = self.pool.free_request(rid)
+        if self.has_state:
+            freed += self.pool.free_request(self._state_rid(rid))
+        for pid in freed:
+            self.store.release(pid)
+        self.policy.forget_pages(freed)
+        for i, r in enumerate(self.lanes):
+            if r == rid:
+                self._vacate(i)
+
+    def sync(self):
+        """Block until every dispatched tick/prefill/mover has executed
+        (benchmark window boundaries)."""
+        self.store.flush_movers()
+        if self._inflight is not None:
+            jax.block_until_ready(self._inflight[0])
+        jax.block_until_ready(self._tokens_dev)
+        jax.block_until_ready(self.store.pools)
 
     def run(self, max_ticks: int = 10_000):
         """Drive ticks until done.  If the loop ends with ``self.queue``
@@ -474,7 +704,8 @@ class PagedEngine(EngineBase):
         configured budgets (prompt needs more hot pages than the tier can
         ever free) -- they are left queued for the caller to inspect."""
         ticks = 0
-        while (self.queue or self.resident) and ticks < max_ticks:
+        while (self.queue or self.resident or self._inflight is not None
+               or self._pending_first) and ticks < max_ticks:
             if not self.step():
                 break
             ticks += 1
@@ -490,6 +721,7 @@ class PagedEngine(EngineBase):
                 "resident_tokens": self.resident_tokens(),
                 "peak_resident_tokens": self.peak_resident_tokens,
                 "tokens_generated": self.tokens_generated,
+                "prefill_compiles": self.prefill_compiles(),
                 "hbm_bytes_used": self.store.hbm_bytes_used(),
                 "cold_bytes": self.store.cold_bytes,
                 "tiers": self.store.tier_counts(),

@@ -201,6 +201,45 @@ def test_policy_lru_demotion_and_protection():
     assert not pol_off.make_hot_room(full_pool, full_store, set())
 
 
+def test_eviction_storm_batched_mover_dispatches(rng):
+    """A MOVER_BATCH-page eviction storm lands in <= 2 batched-mover
+    dispatches (the pre-PR path paid one jit dispatch per page), and the
+    batched demote writes the same warm bytes the per-page path did."""
+    from repro.cache.tiers import MOVER_BATCH
+    K = MOVER_BATCH
+    geom = PageGeometry(n_pat=1, n_scan=1, n_kv_heads=1, page_size=8,
+                        head_dim=16)
+    pool = BlockPool(num_pages=2 * K, page_size=8)
+    store = TieredKVStore(geom, num_pages=2 * K, hot_pages=K, warm_pages=K)
+    k = jnp.asarray(rng.standard_normal((1, 1, K * 8, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 1, K * 8, 16)), jnp.bfloat16)
+    pages = pool.allocate(0, K)
+    slots = [store.place_hot(p) for p in pages]
+    store.write_prefill(slots, [(k, v)], S=K * 8)
+    pol = CachePolicy(TierConfig(enable_warm=True, enable_cold=True))
+    before = store.stats["mover_dispatches"]
+    assert pol.make_hot_room(pool, store, protected=set(), n=K)
+    dispatches = store.stats["mover_dispatches"] - before
+    assert store.stats["demote_warm"] == K
+    assert dispatches <= 2, dispatches
+    # every demoted page round-trips within the int8 bound
+    store.flush_movers()
+    ws = int(store.slot[pages[0]])
+    k8 = np.asarray(store.pools[0]["k8"][:, ws])
+    ks = np.asarray(store.pools[0]["ks"][:, ws])
+    orig = np.asarray(k[:, :, :8], np.float32)
+    back = k8.astype(np.float32) * ks[..., None]
+    bound = np.abs(orig).max() / 127 + 1e-6
+    assert np.abs(back - orig).max() <= bound * 1.01
+    # and a batched promote storm brings them all back in <= 2 dispatches
+    before = store.stats["mover_dispatches"]
+    with store.deferred():
+        for p in pages:
+            store.promote_to_hot(p)
+    assert store.stats["mover_dispatches"] - before <= 2
+    assert all(store.tier_of(p) == TIER_HOT for p in pages)
+
+
 def test_prefetch_queue_promotes_ahead(store_and_data):
     store, *_ = store_and_data
     pool = BlockPool(num_pages=8, page_size=8)
@@ -219,3 +258,37 @@ def test_prefetch_queue_promotes_ahead(store_and_data):
     # a page still cold at swap-in is a miss, counted once
     pol.account_swap_in([0, 1], cold_page_ids=[1])
     assert pol.stats["prefetch_misses"] == 1
+
+
+def test_prefetch_queue_promotes_state_slabs(rng):
+    """Cold STATE SLABS ride the WaSP queue like token pages (ISSUE 5):
+    the drain promotes them into the WARM STATE slot space (class-aware
+    make_warm_room), so a parked hybrid's swap-in finds its slab warm
+    instead of paying a synchronous cold promotion."""
+    from repro.configs import ARCHS, reduced
+    from repro.models import ssm as SSM
+    from repro.models import transformer as T
+    cfg = reduced(ARCHS["rwkv6-7b"])
+    geom = T.paged_geometry(cfg, 16)
+    store = TieredKVStore(geom, num_pages=4, hot_pages=1, warm_pages=1,
+                          hot_state=2, warm_state=1)
+    pool = BlockPool(num_pages=4, page_size=16)
+    pool.allocate(-2, 1)                       # slab page id 0, owner -2-0
+    segs = [sg for sg in geom.seg_geoms if sg.cls == "state"]
+    W = SSM.state_width(cfg, "rwkv6")
+    slabs = [jnp.asarray(rng.standard_normal((sg.n_stack, W)), jnp.float32)
+             for sg in segs]
+    store.place_hot_state(0)
+    store.write_state(0, slabs)
+    store.demote_to_warm(0)
+    store.demote_to_cold(0)
+    assert store.cls_of(0) == "state" and store.tier_of(0) == TIER_COLD
+    pol = CachePolicy(TierConfig(enable_warm=True, enable_cold=True,
+                                 pages_per_prefetch_tick=2))
+    pol.schedule_prefetch([0])
+    pol.drain_prefetch(pool, store, protected=set())
+    store.commit_promotions()                  # the tick-start barrier
+    assert store.tier_of(0) == TIER_WARM
+    assert store.n_free_warm_state == 0        # landed in the STATE space
+    pol.account_swap_in([0], cold_page_ids=[])
+    assert pol.stats["prefetch_hits"] == 1

@@ -101,6 +101,31 @@ def test_eos_default_single_constant():
         PagedEngine.__init__).parameters["eos_id"].default == DEFAULT_EOS_ID
 
 
+def test_interpret_and_cold_cap_reach_paged_engine(served_model):
+    """ISSUE 5 satellite: ``interpret`` and ``max_cold_pages`` thread
+    through ServeConfig/AssistSpec into EngineBase.from_config -- before
+    this, a TPU run built via ServeConfig.build() was stuck in interpret
+    mode and the cold cap was only reachable by direct construction."""
+    from repro.assist import AssistSpec
+    from repro.serving.config import ServeConfig
+    cfg, model, params = served_model
+    spec = AssistSpec(paged=True, enable_warm=True, enable_cold=True,
+                      max_cold_pages=5, interpret=False,
+                      use_roofline_trigger=False)
+    scfg = ServeConfig(arch="qwen2-7b", reduced=True, slots=2, max_len=48,
+                       assist=spec)
+    eng, _, _ = scfg.build(model, params)
+    assert eng.interpret is False
+    # the cap reached the pool sizing: page-id space = hot + warm + cap
+    assert eng.pool.num_pages == (eng.store.hot_pages
+                                  + eng.store.warm_pages + 5)
+    # flat-alias spelling folds into the spec identically
+    flat = ServeConfig(arch="qwen2-7b", reduced=True, paged=True,
+                       interpret=False, max_cold_pages=5)
+    assert flat.assist.interpret is False
+    assert flat.assist.max_cold_pages == 5
+
+
 def test_direct_and_config_construction_decode_identically(served_model, rng):
     """Regression: Engine(...) with default eos_id vs ServeConfig.build()
     (which threads ServeConfig.eos_id) must stop on the same token and
