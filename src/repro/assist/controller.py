@@ -33,7 +33,8 @@ from typing import Optional, Union
 from repro.assist.tasks import (AssistDecision, CompressTask, RooflineTerms,
                                 SiteDescriptor, SiteDecision,
                                 HBM_BW, HOST_BW, ICI_BW, MIN_RATIO,
-                                PEAK_FLOPS, VPU_OPS)
+                                PEAK_FLOPS, VPU_OPS, KINDS)
+from repro.obs.metrics import NULL_REGISTRY
 
 MIN_HIT_RATE = 0.25       # memoize: disable below this observed hit rate
 
@@ -42,13 +43,24 @@ class AssistController:
     """Compile-time AWC: one trigger/throttle/priority for all task kinds."""
 
     def __init__(self, registry=None, min_ratio: float = MIN_RATIO,
-                 min_hit_rate: float = MIN_HIT_RATE):
+                 min_hit_rate: float = MIN_HIT_RATE, metrics=None):
         if registry is None:
             from repro.assist.registry import REGISTRY
             registry = REGISTRY
         self.registry = registry
         self.min_ratio = min_ratio
         self.min_hit_rate = min_hit_rate
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self._c_decisions = {
+            (k, v): m.counter("assist_decisions_total",
+                              "controller verdicts per assist kind",
+                              kind=k, verdict=v)
+            for k in KINDS for v in ("accept", "reject")}
+
+    def _record(self, d: AssistDecision) -> AssistDecision:
+        self._c_decisions[(d.kind,
+                           "accept" if d.enabled else "reject")].inc()
+        return d
 
     def _task(self, scheme: Union[str, CompressTask]) -> CompressTask:
         if isinstance(scheme, str):
@@ -61,6 +73,10 @@ class AssistController:
                scheme: Union[str, CompressTask]) -> AssistDecision:
         """Should this site compress?  (paper 4.4 Dynamic Feedback, static
         form: roofline terms come from the compiled dry-run.)"""
+        return self._record(self._decide(terms, site, measured_ratio,
+                                         scheme))
+
+    def _decide(self, terms, site, measured_ratio, scheme):
         task = self._task(scheme)
         relieved = getattr(terms, site.term)
         if relieved < terms.step_time * 0.999:
@@ -105,6 +121,9 @@ class AssistController:
         hit rate must clear the profitability floor -- the old
         core/memoize.py "caller should disable on low hit rate" note,
         moved behind the controller where the paper puts it."""
+        return self._record(self._decide_memoize(terms, site, hit_rate))
+
+    def _decide_memoize(self, terms, site, hit_rate):
         if terms.compute < terms.step_time * 0.999:
             return AssistDecision(site.name, False, "none", 1.0,
                                   "compute term is not the bottleneck: "
@@ -142,6 +161,10 @@ class AssistController:
         payload; the budget is how many such transfers fit in one modeled
         step time (floor 1 -- a queued page always makes progress, the
         paper's guarantee that low-priority warps are not starved)."""
+        return self._record(self._decide_prefetch(terms, site, queued,
+                                                  max_pages))
+
+    def _decide_prefetch(self, terms, site, queued, max_pages):
         if queued == 0:
             return AssistDecision(site.name, False, "none", 1.0,
                                   "prefetch queue empty", kind="prefetch")

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.assist.tasks import (AssistDecision, RooflineTerms,
                                 SiteDescriptor)
+from repro.obs.metrics import NULL_REGISTRY
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,7 +130,7 @@ class Memoizer:
     def __init__(self, fn, d_out: int, cfg: MemoConfig = MemoConfig(), *,
                  name: str = "lut", dtype=jnp.float32,
                  warmup_calls: int = 1024, replan_every: int = 1024,
-                 controller=None):
+                 controller=None, metrics=NULL_REGISTRY):
         self.fn = fn
         self.cfg = cfg
         self.name = name
@@ -143,6 +144,17 @@ class Memoizer:
         self._win_hits = 0              # device counters at last replan
         self._win_calls = 0
         self.enabled = True
+        # registry mirrors; hit/call counts publish at REPLAN points (the
+        # only place the device counters are read without adding a sync)
+        self._c_hits = metrics.counter(
+            "memoize_hits_total", "LUT block hits (published per replan "
+            "window)", task=name)
+        self._c_calls = metrics.counter(
+            "memoize_calls_total", "LUT block lookups (published per "
+            "replan window)", task=name)
+        self._c_disable = metrics.counter(
+            "memoize_self_disable_total", "dynamic-feedback self-disables "
+            "(window hit rate under the controller floor)", task=name)
 
     def _ctl(self):
         if self._controller is None:
@@ -184,9 +196,12 @@ class Memoizer:
             hits, calls = int(self.lut["hits"]), int(self.lut["calls"])
             win_rate = ((hits - self._win_hits)
                         / max(calls - self._win_calls, 1))
+            self._c_hits.inc(hits - self._win_hits)
+            self._c_calls.inc(calls - self._win_calls)
             self._win_hits, self._win_calls = hits, calls
             if win_rate < self._ctl().min_hit_rate:
                 self.enabled = False
+                self._c_disable.inc()
         return y
 
     __call__ = apply

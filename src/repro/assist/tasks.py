@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
+from repro.obs.metrics import MetricsRegistry
+
 # TPU v5e hardware constants (roofline/analysis.py shares these)
 PEAK_FLOPS = 197e12       # bf16 MXU
 HBM_BW = 819e9            # bytes/s
@@ -163,26 +165,71 @@ class PrefetchTask:
 
     ``schedule`` enqueues the cold pages of a soon-to-run request;
     ``apply`` drains up to the throttled page budget, promoting through
-    the provided store; ``account_swap_in`` scores hits (page promoted
-    ahead of the swap-in) vs misses (still cold: blocking promotion).
+    the provided store; ``account_swap_in`` scores the outcome.
+
+    Accounting (the WaSP accuracy/timeliness taxonomy, DESIGN.md 13):
+    every ISSUED page (entered the queue) resolves to exactly one of
+
+      hit     promoted ahead of the swap-in that needed it
+      late    needed while still cold (blocking promotion) or resident
+              via some other path -- prefetch didn't deliver in time
+      wasted  promoted (or queued) but freed / demoted back to cold
+              before any swap-in used it
+
+    via the ``_outstanding`` set, so ``issued == hit + late + wasted``
+    holds exactly once the set drains (tests/test_obs.py).  The legacy
+    ``counters`` dict is now a VIEW over the registry; its
+    ``prefetch_misses`` keeps the old, broader meaning -- every cold page
+    at swap-in, issued or not.
     """
 
     kind = "prefetch"
 
     def __init__(self, name: str = "coldpage", *, pages_per_tick: int = 2,
-                 async_promote: bool = True):
+                 async_promote: bool = True, metrics=None,
+                 controller=None):
         self.name = name
         self.pages_per_tick = pages_per_tick
         self.async_promote = async_promote
+        # the consumer's controller (CachePolicy threads its own in) so
+        # accept/reject decisions land in ITS registry; None falls back
+        # to a fresh default controller per plan() call
+        self.controller = controller
         self._queue: list[int] = []         # page ids queued cold->warm
         self._prefetched: set[int] = set()  # promoted ahead of swap-in
-        self.counters = {"prefetch_issued": 0, "prefetch_hits": 0,
-                         "prefetch_misses": 0}
+        self._outstanding: set[int] = set() # issued, outcome not yet known
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {o: self.metrics.counter(
+            "prefetch_pages_total",
+            "prefetch pages by outcome (issued == hit + late + wasted "
+            "once outstanding drains)", outcome=o)
+            for o in ("issued", "hit", "late", "wasted")}
+        self._c_cold_miss = self.metrics.counter(
+            "prefetch_cold_misses_total",
+            "cold pages at swap-in (legacy miss: issued or not)")
+        self._g_queue = self.metrics.gauge(
+            "prefetch_queue_depth", "pages queued for cold->warm promotion")
+
+    @property
+    def counters(self) -> dict:
+        """Legacy counter view (pre-registry key names and semantics)."""
+        gv = self.metrics.get_value
+        return {
+            "prefetch_issued": gv("prefetch_pages_total",
+                                  outcome="issued") or 0,
+            "prefetch_hits": gv("prefetch_pages_total", outcome="hit") or 0,
+            "prefetch_misses": gv("prefetch_cold_misses_total") or 0,
+            "prefetch_late": gv("prefetch_pages_total", outcome="late") or 0,
+            "prefetch_wasted": gv("prefetch_pages_total",
+                                  outcome="wasted") or 0,
+            "prefetch_outstanding": len(self._outstanding),
+        }
 
     def build(self, **overrides) -> "PrefetchTask":
         """Fresh queue instance (the registry holds a prototype)."""
         kw = dict(pages_per_tick=self.pages_per_tick,
-                  async_promote=self.async_promote)
+                  async_promote=self.async_promote,
+                  controller=self.controller)
         kw.update(overrides)
         return PrefetchTask(self.name, **kw)
 
@@ -190,7 +237,9 @@ class PrefetchTask:
 
     def plan(self, site: SiteDescriptor,
              roofline: Optional[RooflineTerms]) -> AssistDecision:
-        return _controller().decide_prefetch(
+        ctl = self.controller if self.controller is not None \
+            else _controller()
+        return ctl.decide_prefetch(
             roofline, site, queued=len(self._queue),
             max_pages=self.pages_per_tick)
 
@@ -199,9 +248,11 @@ class PrefetchTask:
     def schedule(self, page_ids):
         """Queue cold pages of a soon-to-run request for async promotion."""
         for p in page_ids:
-            if p not in self._queue:
+            if p not in self._queue and p not in self._outstanding:
                 self._queue.append(p)
-                self.counters["prefetch_issued"] += 1
+                self._c["issued"].inc()
+                self._outstanding.add(p)
+        self._g_queue.set(len(self._queue))
 
     def apply(self, store, protected, make_warm_room, *,
               is_cold, budget: Optional[int] = None):
@@ -214,43 +265,66 @@ class PrefetchTask:
         """
         if budget is None:
             budget = self.pages_per_tick
-        while budget > 0 and self._queue:
-            pid = self._queue[0]
-            if not is_cold(pid):                  # already resident / freed
+        try:
+            while budget > 0 and self._queue:
+                pid = self._queue[0]
+                if not is_cold(pid):              # already resident / freed
+                    self._queue.pop(0)
+                    continue
+                cls = store.cls_of(pid)
+                if store.n_free_warm_cls(cls) == 0 \
+                        and not make_warm_room(protected, cls):
+                    return
                 self._queue.pop(0)
-                continue
-            cls = store.cls_of(pid)
-            if store.n_free_warm_cls(cls) == 0 \
-                    and not make_warm_room(protected, cls):
-                return
-            self._queue.pop(0)
-            store.promote_to_warm(pid, async_=self.async_promote)
-            self._prefetched.add(pid)
-            budget -= 1
+                store.promote_to_warm(pid, async_=self.async_promote)
+                self._prefetched.add(pid)
+                budget -= 1
+        finally:
+            self._g_queue.set(len(self._queue))
 
     def account_swap_in(self, page_ids, cold_page_ids):
         """Called ONCE per successful swap-in of a parked request:
         ``cold_page_ids`` (still cold when scheduling started) needed a
-        blocking promotion (miss); pages the queue promoted ahead of time
-        are hits (the WaSP payoff)."""
+        blocking promotion (legacy miss); pages the queue promoted ahead
+        of time are hits (the WaSP payoff).  Issued pages the prefetch
+        did not deliver resolve as LATE."""
         cold = set(cold_page_ids)
-        self.counters["prefetch_misses"] += len(cold)
+        self._c_cold_miss.inc(len(cold))
         for p in page_ids:
             if p not in cold and p in self._prefetched:
-                self.counters["prefetch_hits"] += 1
+                self._c["hit"].inc()
                 self._prefetched.discard(p)
+                self._outstanding.discard(p)
+            elif p in self._outstanding:
+                # still cold (blocking promotion) or resident via another
+                # path: either way the prefetch was too late
+                self._c["late"].inc()
+                self._outstanding.discard(p)
+                if p in self._queue:
+                    self._queue.remove(p)
+        self._g_queue.set(len(self._queue))
 
     def forget_pages(self, page_ids):
         """Drop freed pages so recycled page ids can never be miscounted
-        as hits for a different request."""
+        as hits for a different request.  Issued pages freed unused
+        resolve as WASTED."""
         for p in page_ids:
             self._prefetched.discard(p)
             if p in self._queue:
                 self._queue.remove(p)
+            if p in self._outstanding:
+                self._c["wasted"].inc()
+                self._outstanding.discard(p)
+        self._g_queue.set(len(self._queue))
 
     def discard_prefetched(self, pid):
-        """A page demoted back to cold is no longer a usable prefetch."""
-        self._prefetched.discard(pid)
+        """A page demoted back to cold is no longer a usable prefetch:
+        the promotion work resolves as WASTED (still-queued pages stay
+        outstanding -- they may yet promote and hit)."""
+        if pid in self._prefetched:
+            self._prefetched.discard(pid)
+            self._outstanding.discard(pid)
+            self._c["wasted"].inc()
 
     def stats(self) -> dict:
         return {"kind": self.kind, "name": self.name,

@@ -19,6 +19,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.metrics import NULL_REGISTRY
+
 
 class PoolExhausted(Exception):
     """No free page available (caller should evict or reject)."""
@@ -34,7 +36,8 @@ class PoolStats:
 class BlockPool:
     """Free-list page allocator + per-request block tables."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 metrics=NULL_REGISTRY):
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("num_pages and page_size must be positive")
         self.num_pages = num_pages
@@ -44,6 +47,15 @@ class BlockPool:
         self.owner = np.full(num_pages, -1, np.int64)      # rid or -1
         self.last_access = np.zeros(num_pages, np.int64)   # LRU tick stamps
         self.stats = PoolStats()
+        # registry mirrors (handles bound once; no-ops when obs is off)
+        self._c_alloc = metrics.counter(
+            "pool_pages_allocated_total", "logical pages allocated")
+        self._c_freed = metrics.counter(
+            "pool_pages_freed_total", "logical pages freed")
+        self._g_in_use = metrics.gauge(
+            "pool_pages_in_use", "logical pages currently owned")
+        self._g_peak = metrics.gauge(
+            "pool_pages_peak_in_use", "high-water mark of owned pages")
 
     # -- allocation ----------------------------------------------------------
 
@@ -67,6 +79,9 @@ class BlockPool:
         self.stats.allocated += n
         in_use = self.num_pages - len(self.free)
         self.stats.peak_in_use = max(self.stats.peak_in_use, in_use)
+        self._c_alloc.inc(n)
+        self._g_in_use.set(in_use)
+        self._g_peak.set_max(in_use)
         return got
 
     def free_request(self, rid: int) -> list[int]:
@@ -76,6 +91,8 @@ class BlockPool:
             self.owner[p] = -1
             self.free.append(p)
         self.stats.freed += len(pages)
+        self._c_freed.inc(len(pages))
+        self._g_in_use.set(self.num_pages - len(self.free))
         return pages
 
     # -- lookups -------------------------------------------------------------

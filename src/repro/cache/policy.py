@@ -118,9 +118,10 @@ class CachePolicy:
                  terms: Optional[RooflineTerms] = None,
                  site: Optional[SiteDescriptor] = None,
                  measured_ratio: float = 1.78,
-                 registry=REGISTRY):
+                 registry=REGISTRY, metrics=None):
         self.cfg = cfg
-        self.controller = controller or AssistController(registry)
+        self.controller = controller or AssistController(registry,
+                                                         metrics=metrics)
         self.terms = terms
         self.decision = None
         enabled = cfg.enable_warm
@@ -132,11 +133,18 @@ class CachePolicy:
             enabled = enabled and self.decision.enabled
         self.compression_enabled = enabled
         self.cold_enabled = cfg.enable_cold and enabled
-        # cold-page promotion is the prefetch assist task
+        # cold-page promotion is the prefetch assist task; ``metrics``
+        # (the engine's registry) threads through so prefetch counters,
+        # tier counters and engine gauges share one export namespace
         self.prefetch = registry.get("coldpage", kind="prefetch").build(
             pages_per_tick=cfg.pages_per_prefetch_tick,
-            async_promote=cfg.async_prefetch)
-        self.stats = self.prefetch.counters
+            async_promote=cfg.async_prefetch, metrics=metrics,
+            controller=self.controller)
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter view (live; pre-registry key names)."""
+        return self.prefetch.counters
 
     # -- victim selection ----------------------------------------------------
 

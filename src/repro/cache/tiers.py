@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from repro.cache.block_pool import PoolExhausted
 from repro.assist.page_kinds import page_kind
 from repro.assist.registry import REGISTRY
+from repro.obs.metrics import MetricsRegistry, log_buckets
 from repro.serving.kv_cache import quantize_token
 
 TIER_FREE, TIER_HOT, TIER_WARM, TIER_COLD = -1, 0, 1, 2
@@ -382,7 +383,8 @@ class TieredKVStore:
                  hot_pages: int, warm_pages: int,
                  hot_state: int = 0, warm_state: int = 0,
                  host_budget_bytes: Optional[int] = None,
-                 kv_dtype=jnp.bfloat16, cold_delta: bool = True):
+                 kv_dtype=jnp.bfloat16, cold_delta: bool = True,
+                 metrics=None):
         if hot_pages < 1:
             raise ValueError("need at least one hot page")
         if geom.has_state and hot_state < 1:
@@ -456,9 +458,66 @@ class TieredKVStore:
         # pages whose encoded location changed since the engine last asked
         # (drives incremental block-table row updates)
         self.dirty_pids: set[int] = set()
-        self.stats = {"demote_warm": 0, "demote_cold": 0,
-                      "promote_warm": 0, "promote_warm_async": 0,
-                      "promote_hot": 0, "mover_dispatches": 0}
+        # registry-backed counters (DESIGN.md 13); the legacy ``stats``
+        # dict is now a property VIEW over these.  Default is a private
+        # registry so standalone stores keep correct stats; the engine
+        # threads its own registry through (NULL when obs is off, which
+        # also zeroes the stats view -- the documented cost of disabling).
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        clss = ("kv", "state")
+        self._c_demote = {
+            (to, c): m.counter("cache_pages_demoted_total",
+                               "pages demoted one tier down", to=to, cls=c)
+            for to in ("warm", "cold") for c in clss}
+        self._c_promote = {
+            (to, c): m.counter("cache_pages_promoted_total",
+                               "pages promoted one tier up", to=to, cls=c)
+            for to in ("warm", "hot") for c in clss}
+        self._c_promote_async = {
+            c: m.counter("cache_pages_promoted_async_total",
+                         "async (prefetch-path) cold->warm promotions",
+                         cls=c)
+            for c in clss}
+        self._c_released = {
+            (t, c): m.counter("cache_pages_released_total",
+                              "pages released at retirement, by tier held",
+                              tier=t, cls=c)
+            for t in ("hot", "warm", "cold") for c in clss}
+        self._c_disp = {
+            k: m.counter("cache_mover_dispatches_total",
+                         "batched tier-mover device dispatches", kind=k)
+            for k in ("mover", "commit")}
+        self._c_moved = {
+            k: m.counter("cache_mover_pages_total",
+                         "pages carried by batched mover dispatches",
+                         kind=k)
+            for k in ("mover", "commit")}
+        self._h_batch = m.histogram(
+            "cache_mover_batch_pages", "pages per mover dispatch "
+            "(batch occupancy)", buckets=log_buckets(1.0, 2 * MOVER_BATCH))
+
+    @property
+    def stats(self) -> dict:
+        """Legacy counter view (kept for tests/benchmarks): totals over
+        page classes, with ``mover_dispatches`` = mover + commit episodes
+        exactly as the pre-registry dict counted them."""
+        gv = self.metrics.get_value
+
+        def tot(name, **labels):
+            return sum(gv(name, cls=c, **labels) or 0
+                       for c in ("kv", "state"))
+
+        return {
+            "demote_warm": tot("cache_pages_demoted_total", to="warm"),
+            "demote_cold": tot("cache_pages_demoted_total", to="cold"),
+            "promote_warm": tot("cache_pages_promoted_total", to="warm"),
+            "promote_warm_async": tot("cache_pages_promoted_async_total"),
+            "promote_hot": tot("cache_pages_promoted_total", to="hot"),
+            "mover_dispatches": sum(
+                gv("cache_mover_dispatches_total", kind=k) or 0
+                for k in ("mover", "commit")),
+        }
 
     # -- batched movers ------------------------------------------------------
 
@@ -521,7 +580,9 @@ class TieredKVStore:
         for j in self._seg_idx[cls]:
             self.pools = self.pools[:j] + (fn(self.pools[j], src_j,
                                               dst_j),) + self.pools[j + 1:]
-        self.stats["mover_dispatches"] += 1
+        self._c_disp["mover"].inc()
+        self._c_moved["mover"].inc(len(srcs))
+        self._h_batch.observe(len(srcs))
 
     # -- placement queries ---------------------------------------------------
 
@@ -623,11 +684,14 @@ class TieredKVStore:
         t = self.tier[pid]
         if t == TIER_HOT:
             self._free_hot[cls].append(int(self.slot[pid]))
+            self._c_released[("hot", cls)].inc()
         elif t == TIER_WARM:
             self._free_warm[cls].append(int(self.slot[pid]))
+            self._c_released[("warm", cls)].inc()
         elif t == TIER_COLD:
             rec = self.cold.pop(pid)
             self.cold_bytes -= rec.nbytes
+            self._c_released[("cold", rec.cls)].inc()
         self._hot_ids[cls].discard(pid)
         self._warm_ids[cls].discard(pid)
         self.tier[pid], self.slot[pid] = TIER_FREE, 0
@@ -699,7 +763,7 @@ class TieredKVStore:
         self._hot_ids[cls].discard(pid)
         self._warm_ids[cls].add(pid)
         self.dirty_pids.add(pid)
-        self.stats["demote_warm"] += 1
+        self._c_demote[("warm", cls)].inc()
 
     def demote_to_cold(self, pid: int):
         """warm -> cold: pack the int8 planes (delta + BDI/FPC, RAW
@@ -729,7 +793,7 @@ class TieredKVStore:
         self.tier[pid], self.slot[pid] = TIER_COLD, 0
         self._warm_ids[cls].discard(pid)
         self.dirty_pids.add(pid)
-        self.stats["demote_cold"] += 1
+        self._c_demote[("cold", cls)].inc()
 
     def promote_to_warm(self, pid: int, *, async_: bool = False):
         """cold -> warm: unpack the int8 planes back into the warm pool
@@ -772,12 +836,12 @@ class TieredKVStore:
                     + self.pools[j + 1:]
         if async_:
             self._pending_warm[pid] = (ws, in_flight)
-            self.stats["promote_warm_async"] += 1
+            self._c_promote_async[cls].inc()
         self.tier[pid], self.slot[pid] = TIER_WARM, ws
         self._warm_ids[cls].add(pid)
         self.page_cls[pid] = 1 if cls == "state" else 0
         self.dirty_pids.add(pid)
-        self.stats["promote_warm"] += 1
+        self._c_promote[("warm", cls)].inc()
 
     def commit_page(self, pid: int):
         """Land one page's in-flight promotion now (no-op if none).  Used
@@ -835,7 +899,8 @@ class TieredKVStore:
                 self.pools = self.pools[:j] + (_write_warm_rows(
                     self.pools[j], jnp.asarray(ws), stacked),) \
                     + self.pools[j + 1:]
-            self.stats["mover_dispatches"] += 1
+            self._c_disp["commit"].inc()
+            self._c_moved["commit"].inc(k)
         return n
 
     def promote_to_hot(self, pid: int):
@@ -854,4 +919,4 @@ class TieredKVStore:
         self._warm_ids[cls].discard(pid)
         self._hot_ids[cls].add(pid)
         self.dirty_pids.add(pid)
-        self.stats["promote_hot"] += 1
+        self._c_promote[("hot", cls)].inc()

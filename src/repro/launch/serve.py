@@ -25,8 +25,13 @@ import time
 
 import numpy as np
 
+import dataclasses
+
 from repro.kernels.decode_attn.ops import attn_backend_names
 from repro.configs.base import DEFAULT_EOS_ID
+from repro.obs import Observability, ObsSpec
+from repro.obs.export import SnapshotWriter, serve_metrics
+from repro.obs.metrics import REGISTRY
 from repro.serving.config import ServeConfig
 from repro.serving.engine import Request
 
@@ -66,10 +71,40 @@ def main(argv=None):
     ap.add_argument("--max-cold-pages", type=int, default=None,
                     help="cap on cold (host-offloaded) page ids; default "
                          "derives from the host budget / HBM pools")
+    # observability (repro.obs, DESIGN.md 13)
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable all telemetry (counters, probe, trace): "
+                         "the overhead-free hot path")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text on this port at /metrics "
+                         "(0 = ephemeral; omit to not serve)")
+    ap.add_argument("--snapshot-json", default=None,
+                    help="write a periodic JSON metrics snapshot here")
+    ap.add_argument("--snapshot-every", type=float, default=10.0,
+                    help="snapshot period in seconds")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto) of "
+                         "the run here")
     args = ap.parse_args(argv)
-    scfg = ServeConfig(**vars(args))     # argparse dests match field names
+    fields = {f.name for f in dataclasses.fields(ServeConfig)}
+    spec = ObsSpec.off() if args.no_obs else ObsSpec(
+        trace=args.trace is not None)
+    scfg = ServeConfig(obs=spec, **{k: v for k, v in vars(args).items()
+                                    if k in fields and k != "obs"})
 
-    eng, model, _ = scfg.build()
+    # the serving entrypoint exports through the PROCESS-GLOBAL registry
+    # (library consumers get private ones); /metrics and the snapshot
+    # writer read it concurrently with the engine loop
+    obs = Observability(spec, registry=None if args.no_obs else REGISTRY)
+    srv = writer = None
+    if args.metrics_port is not None and not args.no_obs:
+        srv = serve_metrics(args.metrics_port)
+        print(f"/metrics on http://127.0.0.1:{srv.server_address[1]}/metrics")
+    if args.snapshot_json and not args.no_obs:
+        writer = SnapshotWriter(args.snapshot_json,
+                                every_s=args.snapshot_every).start()
+
+    eng, model, _ = scfg.build(obs=obs)
     cfg = model.cfg
     rng = np.random.default_rng(scfg.seed)
     t0 = time.time()
@@ -85,13 +120,32 @@ def main(argv=None):
     for r in sorted(done, key=lambda r: r.rid)[:8]:
         print(f"req {r.rid:3d}: prompt={len(r.prompt):3d} tok "
               f"-> {r.out[:8]}{'...' if len(r.out) > 8 else ''}")
-    spec = scfg.assist
-    mode = (f"paged/{spec.attn_backend}" if spec.paged
-            else f"kv={spec.kv}")
+    aspec = scfg.assist
+    mode = (f"paged/{aspec.attn_backend}" if aspec.paged
+            else f"kv={aspec.kv}")
     print(f"\n{len(done)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s, {mode})")
-    if spec.paged:
-        print(f"cache stats: {eng.stats()}")
+    stats = eng.stats()
+    if "dispatch_p50_ms" in stats:
+        print(f"tick dispatch p50/p95/p99 ms: "
+              f"{stats['dispatch_p50_ms']:.3f}/"
+              f"{stats['dispatch_p95_ms']:.3f}/"
+              f"{stats['dispatch_p99_ms']:.3f}  "
+              f"exec p50/p95/p99 ms: "
+              f"{stats.get('exec_p50_ms', 0.0):.3f}/"
+              f"{stats.get('exec_p95_ms', 0.0):.3f}/"
+              f"{stats.get('exec_p99_ms', 0.0):.3f} "
+              f"({stats.get('exec_samples', 0)} fenced samples)")
+    if aspec.paged:
+        print(f"cache stats: {stats}")
+    if args.trace and eng.obs.tracer is not None:
+        eng.obs.tracer.write(args.trace)
+        print(f"chrome trace -> {args.trace}")
+    if writer is not None:
+        writer.stop()
+        print(f"metrics snapshot -> {args.snapshot_json}")
+    if srv is not None:
+        srv.shutdown()
     return done
 
 

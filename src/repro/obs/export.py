@@ -1,0 +1,140 @@
+"""Export surfaces for the metrics registry.
+
+Three consumers, one registry (DESIGN.md 13):
+
+  prometheus_text   Prometheus exposition format -- what ``/metrics``
+                    serves (``launch/serve.py``)
+  snapshot          nested JSON dict -- the periodic snapshot writer and
+                    ad-hoc debugging
+  serve_metrics     a stdlib ThreadingHTTPServer on a daemon thread;
+                    port 0 binds an ephemeral port (tests)
+
+Everything here is read-side only: the engine loop never imports this
+module, so export cost is paid by the scraper, not the hot path.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.obs.metrics import MetricsRegistry, REGISTRY
+
+
+def _fmt_labels(items) -> str:
+    if not items:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in items) + "}"
+
+
+def _fmt_num(v) -> str:
+    if isinstance(v, float):
+        if math.isinf(v):
+            return "+Inf" if v > 0 else "-Inf"
+        return repr(v)
+    return str(v)
+
+
+def prometheus_text(registry: MetricsRegistry = REGISTRY) -> str:
+    """Render the whole registry in Prometheus exposition format."""
+    lines = []
+    for name, typ, help, children in registry.families():
+        if help:
+            lines.append(f"# HELP {name} {help}")
+        lines.append(f"# TYPE {name} {typ}")
+        for items, m in children:
+            lbl = _fmt_labels(items)
+            if typ == "histogram":
+                for bound, cum in m.cumulative():
+                    bitems = tuple(items) + (("le", _fmt_num(bound)),)
+                    lines.append(
+                        f"{name}_bucket{_fmt_labels(bitems)} {cum}")
+                lines.append(f"{name}_sum{lbl} {_fmt_num(m.sum)}")
+                lines.append(f"{name}_count{lbl} {m.count}")
+            else:
+                lines.append(f"{name}{lbl} {_fmt_num(m.value)}")
+    return "\n".join(lines) + "\n" if lines else ""
+
+
+def snapshot(registry: MetricsRegistry = REGISTRY) -> dict:
+    """Nested JSON view: name -> {label_string_or_"": value}.
+
+    Histograms expand to {"sum", "count", "buckets": {le: cum}} so the
+    snapshot round-trips everything the text format carries."""
+    out: dict = {}
+    for name, typ, help, children in registry.families():
+        fam: dict = {}
+        for items, m in children:
+            key = ",".join(f"{k}={v}" for k, v in items)
+            if typ == "histogram":
+                fam[key] = {"sum": m.sum, "count": m.count,
+                            "buckets": {_fmt_num(b): c
+                                        for b, c in m.cumulative()}}
+            else:
+                fam[key] = m.value
+        out[name] = fam
+    return out
+
+
+class SnapshotWriter:
+    """Daemon thread writing ``snapshot()`` JSON to a path every
+    ``every_s`` seconds (the serve.py ``--snapshot-json`` flag).  Writes
+    atomically (tmp + rename) so a scraper never reads a torn file."""
+
+    def __init__(self, path, every_s: float = 10.0,
+                 registry: MetricsRegistry = REGISTRY):
+        self.path = str(path)
+        self.every_s = every_s
+        self.registry = registry
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def write_once(self):
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"ts": time.time(),
+                       "metrics": snapshot(self.registry)}, f, indent=1)
+        import os
+        os.replace(tmp, self.path)
+
+    def _run(self):
+        while not self._stop.wait(self.every_s):
+            self.write_once()
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self.write_once()
+
+
+def serve_metrics(port: int = 9109, registry: MetricsRegistry = REGISTRY):
+    """Start the ``/metrics`` endpoint on a daemon thread.
+
+    Returns the ``ThreadingHTTPServer`` (``.server_address[1]`` is the
+    bound port -- pass ``port=0`` for an ephemeral one; call
+    ``.shutdown()`` to stop)."""
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.split("?")[0] not in ("/metrics", "/"):
+                self.send_error(404)
+                return
+            body = prometheus_text(registry).encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):                  # keep scrapes quiet
+            pass
+
+    srv = ThreadingHTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv

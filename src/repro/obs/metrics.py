@@ -1,0 +1,251 @@
+"""MetricsRegistry -- the unified counter/gauge/histogram substrate.
+
+One process-wide vocabulary for every subsystem's counters (DESIGN.md 13),
+replacing the ad-hoc ``stats`` dicts that ``BlockPool``, ``TieredKVStore``,
+``CachePolicy`` and the engines used to carry.  Design constraints, in
+order:
+
+1. HOT-PATH COST.  The decode tick increments counters thousands of times
+   per second, so a metric handle is a plain slotted object whose ``inc``
+   is one attribute add -- components resolve handles ONCE at construction
+   and never touch the registry dict again.  With observability disabled,
+   components receive ``NULL_REGISTRY`` and every handle is a shared
+   do-nothing singleton: no dict, no allocation, no branch beyond the
+   method call (tests/test_obs.py pins this).
+2. ONE NAMESPACE.  Metric names follow the Prometheus grammar
+   (``[a-zA-Z_:][a-zA-Z0-9_:]*``, ``_total`` suffix on counters); labels
+   are keyword arguments.  ``export.prometheus_text`` renders the whole
+   registry in exposition format; ``export.snapshot`` as nested JSON.
+3. SCOPING.  ``REGISTRY`` is the process-global default the serving
+   entrypoint exports from ``/metrics``.  Components take a ``metrics=``
+   parameter and default to a PRIVATE registry, so unit tests building
+   several engines in one process never see each other's counts; the
+   engine threads ONE registry through pool/store/policy/controller, and
+   ``launch/serve.py`` passes the global one.
+"""
+from __future__ import annotations
+
+import bisect
+import re
+import threading
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def log_buckets(lo: float, hi: float, factor: float = 2.0) -> tuple:
+    """Fixed log-spaced histogram bucket bounds: lo, lo*f, ... >= hi.
+
+    The fixed ladder keeps ``observe`` O(log n_buckets) with zero
+    allocation, and makes bucket meanings stable across runs (the trend
+    gate and dashboards can diff them)."""
+    if lo <= 0 or hi <= lo or factor <= 1.0:
+        raise ValueError("need 0 < lo < hi and factor > 1")
+    out = [lo]
+    while out[-1] < hi:
+        out.append(out[-1] * factor)
+    return tuple(out)
+
+
+#: default ladders (DESIGN.md 13): tick timings span 10us..10s; token
+#: counts (prefill buckets, page batches) span 1..16384 in powers of two
+SECONDS_BUCKETS = log_buckets(1e-5, 10.0)
+TOKENS_BUCKETS = log_buckets(1.0, 16384.0)
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` is the only mutator."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1):
+        self.value += n
+
+    def set_max(self, v):                      # type parity with Gauge
+        raise TypeError("counters only increment")
+
+
+class Gauge:
+    """Point-in-time value (occupancy, queue depth, peaks)."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, v):
+        self.value = v
+
+    def inc(self, n=1):
+        self.value += n
+
+    def dec(self, n=1):
+        self.value -= n
+
+    def set_max(self, v):
+        if v > self.value:
+            self.value = v
+
+
+class Histogram:
+    """Fixed-bucket histogram (cumulative counts at export time).
+
+    ``bounds`` are the upper bucket edges; values above the last edge land
+    in the implicit +Inf bucket.  ``observe`` is a bisect + two adds."""
+    __slots__ = ("bounds", "counts", "sum", "count")
+
+    def __init__(self, bounds=SECONDS_BUCKETS):
+        self.bounds = tuple(bounds)
+        self.counts = [0] * (len(self.bounds) + 1)     # +Inf tail
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v):
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.sum += v
+        self.count += 1
+
+    @property
+    def value(self):           # uniform read surface across metric types
+        return self.count
+
+    def cumulative(self) -> list:
+        """[(upper_bound, cumulative_count), ...] ending at (inf, count)."""
+        out, acc = [], 0
+        for b, c in zip(self.bounds, self.counts):
+            acc += c
+            out.append((b, acc))
+        out.append((float("inf"), self.count))
+        return out
+
+
+class _NullMetric:
+    """Shared no-op handle for disabled observability: every mutator is a
+    pass, so a disabled hot path pays one bound-method call and nothing
+    else -- no dict, no allocation, no branch."""
+    __slots__ = ()
+    value = 0
+    sum = 0.0
+    count = 0
+    bounds = ()
+
+    def inc(self, n=1):
+        pass
+
+    def dec(self, n=1):
+        pass
+
+    def set(self, v):
+        pass
+
+    def set_max(self, v):
+        pass
+
+    def observe(self, v):
+        pass
+
+    def cumulative(self):
+        return []
+
+
+NULL_METRIC = _NullMetric()
+
+_TYPES = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Named, labeled metric families; the export surface.
+
+    ``counter/gauge/histogram`` return the live handle, creating it on
+    first use -- same (name, labels) always yields the same object, so
+    two components sharing one registry share the series.  Thread-safe on
+    creation (the serve.py exporter thread reads while the engine loop
+    writes; int adds are atomic enough under the GIL for telemetry use).
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        # name -> (type, help, {label_items_tuple: metric})
+        self._families: dict[str, tuple] = {}
+
+    def _get(self, typ: str, name: str, help: str, labels: dict,
+             **metric_kw):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name {name!r}")
+        for k in labels:
+            if not _LABEL_RE.match(k):
+                raise ValueError(f"bad label name {k!r}")
+        key = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = (typ, help, {})
+                self._families[name] = fam
+            elif fam[0] != typ:
+                raise ValueError(f"metric {name!r} already registered as "
+                                 f"{fam[0]}, not {typ}")
+            children = fam[2]
+            m = children.get(key)
+            if m is None:
+                m = _TYPES[typ](**metric_kw)
+                children[key] = m
+            return m
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        return self._get("counter", name, help, labels)
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        return self._get("gauge", name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets=SECONDS_BUCKETS, **labels) -> Histogram:
+        return self._get("histogram", name, help, labels, bounds=buckets)
+
+    def families(self):
+        """[(name, type, help, [(label_items, metric), ...]), ...] sorted
+        by name -- the export iteration order."""
+        with self._lock:
+            return [(name, typ, help, sorted(children.items()))
+                    for name, (typ, help, children)
+                    in sorted(self._families.items())]
+
+    def get_value(self, name: str, **labels):
+        """Read one series' value (None if absent) -- test/debug helper."""
+        fam = self._families.get(name)
+        if fam is None:
+            return None
+        key = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        m = fam[2].get(key)
+        return None if m is None else m.value
+
+
+class NullRegistry:
+    """Disabled registry: hands out the shared no-op metric and exports
+    nothing.  Components keep their handle-binding code unchanged."""
+
+    enabled = False
+
+    def counter(self, name, help="", **labels):
+        return NULL_METRIC
+
+    def gauge(self, name, help="", **labels):
+        return NULL_METRIC
+
+    def histogram(self, name, help="", buckets=SECONDS_BUCKETS, **labels):
+        return NULL_METRIC
+
+    def families(self):
+        return []
+
+    def get_value(self, name, **labels):
+        return None
+
+
+NULL_REGISTRY = NullRegistry()
+
+#: the process-global registry /metrics exports (launch/serve.py threads
+#: it into the engine; library components default to private registries)
+REGISTRY = MetricsRegistry()

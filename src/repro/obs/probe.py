@@ -1,0 +1,96 @@
+"""Execution-true tick probes (the ROADMAP "latency numbers lie" fix).
+
+Since the host-sync-free decode loop (DESIGN.md 12), ``step()`` RETURNS
+before the tick executes: timing the call measures DISPATCH -- host-side
+queueing cost -- not execution.  Window totals bracketed by ``sync()``
+stay the ground truth for throughput, but per-tick percentiles need two
+honestly-labeled channels:
+
+  dispatch_*   host time of the jitted-step call, recorded EVERY tick
+               (two clock reads; no sync, no allocation beyond a ring
+               slot)
+  exec_*       dispatch-start -> result-ready, measured by an explicit
+               ``jax.block_until_ready`` fence on every Nth tick
+               (``sample_every``).  The fence drains the device queue
+               through the sampled tick, so the sample includes queued
+               backlog -- that is the point: it is what a request
+               actually waits.  Sampling bounds the pipeline stalls the
+               probe itself injects.
+
+``exec >= dispatch`` holds per sample by construction (same start clock,
+the fence only adds wait), which is the acceptance invariant serving_micro
+asserts on the async loop.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.obs.metrics import NULL_REGISTRY, SECONDS_BUCKETS
+
+PCTS = (50, 95, 99)
+
+
+class TickProbe:
+    """Per-engine dispatch/execution latency sampler.
+
+    Keeps bounded rings of raw samples (exact percentiles on demand) and
+    mirrors them into registry histograms (fixed log-spaced buckets) for
+    the /metrics export.  The engine owns exactly one; a ``None`` probe
+    means observability is off and the step loop skips all timing.
+    """
+
+    def __init__(self, sample_every: int = 4, window: int = 2048,
+                 metrics=NULL_REGISTRY):
+        if sample_every < 0:
+            raise ValueError("sample_every must be >= 0 (0 = never fence)")
+        self.sample_every = sample_every
+        self.dispatch = collections.deque(maxlen=window)
+        self.execute = collections.deque(maxlen=window)
+        # (dispatch, exec) of each FENCED tick: the apples-to-apples set
+        # for the exec >= dispatch invariant (the aggregate exec_p50 vs
+        # dispatch_p50 comparison mixes sample sets -- dispatch covers
+        # every tick, exec only the fenced 1/N -- so it can cross)
+        self.pairs = collections.deque(maxlen=window)
+        self._last_dispatch = 0.0
+        self._h_dispatch = metrics.histogram(
+            "engine_tick_dispatch_seconds",
+            "host dispatch time of one decode tick", SECONDS_BUCKETS)
+        self._h_exec = metrics.histogram(
+            "engine_tick_exec_seconds",
+            "fenced execution time of one sampled decode tick",
+            SECONDS_BUCKETS)
+
+    def should_fence(self, tick_no: int) -> bool:
+        """Is ``tick_no`` a sampled (fenced) tick?"""
+        return self.sample_every > 0 and tick_no % self.sample_every == 0
+
+    def record_dispatch(self, seconds: float):
+        self.dispatch.append(seconds)
+        self._last_dispatch = seconds
+        self._h_dispatch.observe(seconds)
+
+    def record_exec(self, seconds: float):
+        self.execute.append(seconds)
+        self.pairs.append((self._last_dispatch, seconds))
+        self._h_exec.observe(seconds)
+
+    def fenced_pairs(self):
+        """[(dispatch_s, exec_s)] of fenced ticks -- same tick, same
+        start clock, so exec >= dispatch element-wise by construction."""
+        return list(self.pairs)
+
+    @staticmethod
+    def _pcts(samples, prefix: str) -> dict:
+        if not samples:
+            return {f"{prefix}_p{p}_ms": 0.0 for p in PCTS}
+        ms = np.asarray(samples) * 1e3
+        return {f"{prefix}_p{p}_ms": float(np.percentile(ms, p))
+                for p in PCTS}
+
+    def percentiles(self) -> dict:
+        """Both channels' p50/p95/p99 (ms), honestly labeled."""
+        return {**self._pcts(self.dispatch, "dispatch"),
+                **self._pcts(self.execute, "exec"),
+                "exec_samples": len(self.execute)}

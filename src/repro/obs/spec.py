@@ -1,0 +1,47 @@
+"""ObsSpec -- declarative observability configuration.
+
+Nested in ``ServeConfig`` (``scfg.obs``) the way ``AssistSpec`` nests
+assist decisions: configuration only, no imports of the runtime layers,
+so every layer can consume it without cycles.
+
+Defaults follow the telemetry-spine contract (DESIGN.md 13): counters ON
+(near-zero overhead -- handle-bound attribute adds), the execution probe
+ON (a fence every ``exec_sample_every`` ticks), traces OFF (a debugging
+artifact, enabled per run).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Which telemetry channels run, and at what sampling cost.
+
+    counters           counter/gauge/histogram registry (near-zero cost;
+                       OFF makes every metric handle a shared no-op and
+                       removes all probe/trace work from the hot path)
+    trace              Chrome trace-event span recording (admission /
+                       prefill / tick / retirement spans)
+    exec_probe         execution-true tick probe: fence every Nth tick
+    exec_sample_every  N for the probe fence (0 = record dispatch only)
+    probe_window       ring size for exact percentile computation
+    trace_max_events   trace buffer bound (drops, and counts drops, past it)
+    """
+    counters: bool = True
+    trace: bool = False
+    exec_probe: bool = True
+    exec_sample_every: int = 4
+    probe_window: int = 2048
+    trace_max_events: int = 200_000
+
+    def __post_init__(self):
+        if self.exec_sample_every < 0:
+            raise ValueError("exec_sample_every must be >= 0")
+        if self.probe_window < 1:
+            raise ValueError("probe_window must be >= 1")
+
+    @classmethod
+    def off(cls) -> "ObsSpec":
+        """Everything disabled: the overhead-free hot path."""
+        return cls(counters=False, trace=False, exec_probe=False)

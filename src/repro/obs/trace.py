@@ -1,0 +1,97 @@
+"""Span tracing -- Chrome trace-event JSON, viewable in Perfetto.
+
+The engine emits request-lifecycle spans (admission -> prefill -> tick
+spans -> retirement) with rid/lane/bucket attributes when tracing is
+enabled (``ObsSpec.trace``; default OFF -- the per-event append is cheap
+but not free, and traces are a debugging artifact, not a steady-state
+telemetry channel).
+
+Events use the trace-event format's ``X`` (complete: ts + dur) and ``i``
+(instant) phases, microsecond timestamps relative to tracer construction.
+``chrome_trace()`` returns the ``{"traceEvents": [...]}`` object; load the
+written file at https://ui.perfetto.dev or chrome://tracing.
+
+The tracer never calls into JAX: span boundaries time the HOST view of
+each phase (dispatch-side), which composes with the execution-true probe
+(obs/probe.py) rather than duplicating it.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+
+#: trace-event process ids: one synthetic "process" per engine role so
+#: Perfetto groups the engine loop and request lifecycle into lanes
+PID_ENGINE = 0
+
+
+class Tracer:
+    """Bounded in-memory trace-event buffer."""
+
+    def __init__(self, max_events: int = 200_000):
+        self.max_events = max_events
+        self.events: list[dict] = []
+        self.dropped = 0
+        self._t0 = time.perf_counter_ns()
+
+    def now_us(self) -> float:
+        """Microseconds since tracer construction (the trace clock)."""
+        return (time.perf_counter_ns() - self._t0) / 1e3
+
+    def _push(self, ev: dict):
+        if len(self.events) >= self.max_events:
+            self.dropped += 1
+            return
+        self.events.append(ev)
+
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 tid: int = 0, **args):
+        """One finished span (phase ``X``)."""
+        self._push({"name": name, "ph": "X", "pid": PID_ENGINE, "tid": tid,
+                    "ts": ts_us, "dur": max(dur_us, 0.0), "args": args})
+
+    def instant(self, name: str, tid: int = 0, **args):
+        """A point event (phase ``i``, thread scope)."""
+        self._push({"name": name, "ph": "i", "s": "t", "pid": PID_ENGINE,
+                    "tid": tid, "ts": self.now_us(), "args": args})
+
+    @contextmanager
+    def span(self, name: str, tid: int = 0, **args):
+        """Context manager emitting one complete event around the body."""
+        t0 = self.now_us()
+        try:
+            yield
+        finally:
+            self.complete(name, t0, self.now_us() - t0, tid=tid, **args)
+
+    def chrome_trace(self) -> dict:
+        """The trace-event JSON object (Perfetto/chrome://tracing)."""
+        meta = [{"name": "process_name", "ph": "M", "pid": PID_ENGINE,
+                 "ts": 0, "args": {"name": "repro.serving"}}]
+        return {"traceEvents": meta + self.events,
+                "displayTimeUnit": "ms",
+                "otherData": {"dropped_events": self.dropped}}
+
+    def write(self, path) -> str:
+        """Serialize to ``path``; returns the path written."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+        return str(path)
+
+
+def validate_chrome_trace(obj: dict) -> int:
+    """Assert ``obj`` is structurally valid trace-event JSON; returns the
+    event count.  The tier-1 smoke for ``benchmarks/run.py --trace`` uses
+    this, so format drift fails fast instead of breaking Perfetto loads."""
+    assert isinstance(obj, dict) and "traceEvents" in obj, obj.keys()
+    evs = obj["traceEvents"]
+    assert isinstance(evs, list) and evs
+    for ev in evs:
+        assert isinstance(ev, dict)
+        assert "ph" in ev and "name" in ev and "pid" in ev
+        if ev["ph"] in ("X", "i"):
+            assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert isinstance(ev["dur"], (int, float)) and ev["dur"] >= 0
+    return len(evs)

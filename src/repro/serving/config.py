@@ -22,6 +22,7 @@ import jax
 
 from repro.assist import AssistSpec
 from repro.configs.base import DEFAULT_EOS_ID
+from repro.obs import ObsSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,9 @@ class ServeConfig:
     interpret: bool = True
     max_cold_pages: Optional[int] = None
     assist: Optional[AssistSpec] = None
+    # observability (repro.obs): counters + execution probe on by default,
+    # traces off; None folds to the default ObsSpec in __post_init__
+    obs: Optional[ObsSpec] = None
 
     def __post_init__(self):
         if self.assist is None:
@@ -79,6 +83,8 @@ class ServeConfig:
                                  ("interpret", spec.interpret),
                                  ("max_cold_pages", spec.max_cold_pages)):
                 object.__setattr__(self, field, value)
+        if self.obs is None:
+            object.__setattr__(self, "obs", ObsSpec())
 
     # -- derived configs ------------------------------------------------------
 
@@ -100,12 +106,15 @@ class ServeConfig:
 
     # -- construction ---------------------------------------------------------
 
-    def build(self, model=None, params=None):
+    def build(self, model=None, params=None, obs=None):
         """(engine, model, params) for this config.
 
         ``model``/``params`` may be passed in to share one initialized
         model across several engine configurations (benchmarks do this);
         otherwise they are built from ``arch``/``reduced``/``seed``.
+        ``obs`` overrides the engine's Observability bundle (launch/
+        serve.py passes one bound to the process-global registry so
+        /metrics exports this engine).
         """
         if model is None:
             from repro.configs import get_arch, reduced as reduce_cfg
@@ -120,4 +129,5 @@ class ServeConfig:
         if params is None:
             params = model.init(jax.random.PRNGKey(self.seed))
         from repro.serving.engine import EngineBase
-        return EngineBase.from_config(self, model, params), model, params
+        return (EngineBase.from_config(self, model, params, obs=obs),
+                model, params)

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -38,6 +39,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import DEFAULT_EOS_ID
 from repro.models.model import ModelFns, prompt_bucket
+from repro.obs import Observability
+from repro.obs.metrics import TOKENS_BUCKETS
 
 
 @dataclasses.dataclass
@@ -71,9 +74,16 @@ class EngineBase:
     PREFILL_QUANTUM = 16
 
     @classmethod
-    def from_config(cls, scfg, model, params) -> "EngineBase":
-        """Build the engine a ServeConfig describes (dense or paged)."""
+    def from_config(cls, scfg, model, params, obs=None) -> "EngineBase":
+        """Build the engine a ServeConfig describes (dense or paged).
+
+        ``obs`` overrides the Observability bundle (launch/serve.py passes
+        one bound to the process-global registry for /metrics export);
+        by default the engine gets a private bundle built from
+        ``scfg.obs``."""
         spec = scfg.assist
+        if obs is None:
+            obs = Observability(getattr(scfg, "obs", None))
         if spec.paged:
             from repro.serving.paged_engine import PagedEngine
             return PagedEngine(
@@ -82,10 +92,10 @@ class EngineBase:
                 seed=scfg.seed, backend=spec.attn_backend,
                 use_roofline_trigger=spec.use_roofline_trigger,
                 max_cold_pages=spec.max_cold_pages,
-                interpret=spec.interpret)
+                interpret=spec.interpret, obs=obs)
         return Engine(model, params, batch_slots=scfg.slots,
                       max_len=scfg.max_len, kv_mode=spec.kv,
-                      eos_id=scfg.eos_id, seed=scfg.seed)
+                      eos_id=scfg.eos_id, seed=scfg.seed, obs=obs)
 
     def _init_intake(self):
         self._seen_rids: set[int] = set()
@@ -124,6 +134,7 @@ class EngineBase:
         plen = len(prompt)
         bucket = prompt_bucket(plen, self.max_len, quantum) \
             if self.bucket_prefill else plen
+        self._h_bucket.observe(bucket)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = prompt
         return {"tokens": jnp.asarray(toks),
@@ -135,7 +146,8 @@ class Engine(EngineBase):
     def __init__(self, model: ModelFns, params, *, batch_slots: int,
                  max_len: int, kv_mode: str = "bf16",
                  eos_id: int = DEFAULT_EOS_ID, seed: int = 0,
-                 bucket_prefill: bool = True):
+                 bucket_prefill: bool = True,
+                 obs: Optional[Observability] = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -143,6 +155,13 @@ class Engine(EngineBase):
         self.kv_mode = kv_mode
         self.eos_id = eos_id
         self.bucket_prefill = bucket_prefill
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self._c_tokens = m.counter("engine_tokens_generated_total",
+                                   "decode tokens harvested")
+        self._h_bucket = m.histogram(
+            "engine_prefill_bucket_tokens",
+            "padded prompt-bucket length per prefill", TOKENS_BUCKETS)
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.state = model.init_state(batch_slots, max_len, kv_mode=kv_mode)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
@@ -235,9 +254,18 @@ class Engine(EngineBase):
             prev, self._inflight = self._inflight, None
             return self._harvest(prev)
         self._tick += 1
+        probe = self.obs.probe
+        t0 = time.perf_counter() if probe is not None else 0.0
         nxt, self.state = self._decode(self.params, self.state, self.tokens,
                                        jnp.asarray(self._temps), self.rng,
                                        self._tick)
+        if probe is not None:
+            probe.record_dispatch(time.perf_counter() - t0)
+            if probe.should_fence(self._tick):
+                # execution-true sample: drain the device queue through
+                # this tick (what a request actually waits)
+                jax.block_until_ready(nxt)
+                probe.record_exec(time.perf_counter() - t0)
         self.tokens = nxt[:, None]
         snapshot = []
         for i, s in active:
@@ -269,6 +297,7 @@ class Engine(EngineBase):
                     continue
                 tok = int(nxt[i])
                 req.out.append(tok)
+                self._c_tokens.inc()
                 if rem <= 0 or tok == self.eos_id:
                     req.done = True
                     self.finished.append(req)
@@ -291,3 +320,16 @@ class Engine(EngineBase):
             self.step()
             ticks += 1
         return self.finished
+
+    def stats(self) -> dict:
+        """Registry view of the dense engine's counters (the paged
+        engine's richer ``stats()`` is the reference shape)."""
+        gv = self.obs.metrics.get_value
+        s = {"tick": self._tick,
+             "queued": len(self.queue),
+             "active_slots": sum(1 for sl in self.slots
+                                 if sl.req is not None),
+             "tokens_generated": gv("engine_tokens_generated_total") or 0}
+        if self.obs.probe is not None:
+            s.update(self.obs.probe.percentiles())
+        return s

@@ -53,6 +53,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Optional, Union
 
 import numpy as np
@@ -69,6 +70,8 @@ from repro.configs.base import DEFAULT_EOS_ID
 from repro.models import ssm as SSM
 from repro.models import transformer as T
 from repro.models.model import ModelFns
+from repro.obs import Observability
+from repro.obs.metrics import TOKENS_BUCKETS
 from repro.serving.engine import EngineBase, Request
 
 
@@ -107,7 +110,9 @@ class PagedEngine(EngineBase):
                  use_roofline_trigger: bool = True,
                  max_cold_pages: Optional[int] = None,
                  backend: str = "gather", interpret: bool = True,
-                 host_sync: bool = False):
+                 host_sync: bool = False,
+                 obs: Optional[Observability] = None):
+        self.obs = obs if obs is not None else Observability()
         cfg = model.cfg
         bad = T.paged_unsupported_layers(cfg)
         if bad:
@@ -165,12 +170,16 @@ class PagedEngine(EngineBase):
             warm, max_cold_pages = 0, 0
         num_pages = (hot + warm + max_cold_pages
                      + hot_state + warm_state + max_cold_state)
-        self.pool = BlockPool(num_pages, tier.page_size)
+        # ONE registry threads through pool/store/policy/controller so the
+        # whole engine exports a single metric namespace (DESIGN.md 13)
+        metrics = self.obs.metrics
+        self.pool = BlockPool(num_pages, tier.page_size, metrics=metrics)
         self.store = TieredKVStore(geom, num_pages, hot_pages=hot,
                                    warm_pages=warm, hot_state=hot_state,
                                    warm_state=warm_state,
                                    host_budget_bytes=tier.host_budget_bytes,
-                                   cold_delta=tier.cold_delta)
+                                   cold_delta=tier.cold_delta,
+                                   metrics=metrics)
         if host_sync:
             self.store.mover_batch = 1      # pre-PR per-page dispatches
         terms = site = None
@@ -190,9 +199,32 @@ class PagedEngine(EngineBase):
                                           kv_bytes=per_tok)
             site = kv_site(cfg, resident_est, kv_bytes=per_tok)
         self.policy = CachePolicy(tier, controller=controller
-                                  or AssistController(),
+                                  or AssistController(metrics=metrics),
                                   terms=terms, site=site,
-                                  measured_ratio=warm_ratio(cfg.head_dim))
+                                  measured_ratio=warm_ratio(cfg.head_dim),
+                                  metrics=metrics)
+
+        # engine-level series (handles bound once; no-ops when obs is off)
+        self._c_tokens = metrics.counter(
+            "engine_tokens_generated_total", "decode tokens harvested")
+        self._c_preempt = metrics.counter(
+            "engine_preemptions_total",
+            "lane preemptions (resident request demoted back to parked)")
+        self._c_admit = metrics.counter(
+            "engine_admissions_total", "requests admitted (prefilled)")
+        self._c_retire = metrics.counter(
+            "engine_retirements_total", "requests retired (EOS or budget)")
+        self._h_bucket = metrics.histogram(
+            "engine_prefill_bucket_tokens",
+            "padded prompt-bucket length per prefill", TOKENS_BUCKETS)
+        self._g_lanes = metrics.gauge(
+            "engine_lanes_active", "lanes decoding this tick")
+        self._g_parked = metrics.gauge(
+            "engine_parked", "resident requests parked without a lane")
+        self._g_queued = metrics.gauge(
+            "engine_queued", "requests waiting for admission")
+        self._g_resident = metrics.gauge(
+            "engine_resident_tokens", "tokens whose decode state is cached")
 
         self.lanes: list[Optional[int]] = [None] * lanes
         self.resident: dict[int, _RState] = {}
@@ -443,6 +475,8 @@ class PagedEngine(EngineBase):
         if self.has_state:
             spid = self.pool.allocate(self._state_rid(req.rid), 1)[0]
             self.store.place_hot_state(spid)
+        tr = self.obs.tracer
+        t0 = tr.now_us() if tr is not None else 0.0
         batch = self._pad_prompt(req.prompt, self.pool.page_size)
         tok, one_state = self._prefill(self.params, batch,
                                        float(req.temperature), self.rng,
@@ -450,6 +484,12 @@ class PagedEngine(EngineBase):
         self.store.write_prefill(slots, self._segment_kv(one_state), S=plen)
         if spid is not None:
             self.store.write_state(spid, self._segment_state(one_state))
+        if tr is not None:
+            tr.instant("admit", tid=1, rid=req.rid, prompt_len=plen)
+            tr.complete("prefill", t0, tr.now_us() - t0, tid=1, rid=req.rid,
+                        bucket=int(batch["tokens"].shape[1]),
+                        prompt_len=plen, pages=npg)
+        self._c_admit.inc()
         # the sampled first token stays on device; it is appended to
         # req.out (and becomes a host int) at the next harvest
         self.resident[req.rid] = _RState(req, plen, tok[0], req.max_new - 1)
@@ -576,6 +616,8 @@ class PagedEngine(EngineBase):
         tokens while this tick executes."""
         self.tick_no += 1
         self.admission_blocked = False
+        tr = self.obs.tracer
+        t_tick = tr.now_us() if tr is not None else 0.0
         # drain barrier: land last tick's async prefetch promotions BEFORE
         # anything can read the warm pool this tick (assist prefetch task)
         self.store.commit_promotions()
@@ -592,20 +634,36 @@ class PagedEngine(EngineBase):
             if rid is not None and not self._ensure_decodable(rid, protected):
                 self._vacate(i)                    # preempt by demotion
                 self.parked.appendleft(rid)
+                self._c_preempt.inc()
+                if tr is not None:
+                    tr.instant("preempt", tid=1, rid=rid, lane=i)
         self._admit_extra(protected)
         active = [i for i, rid in enumerate(self.lanes) if rid is not None]
+        self._g_lanes.set(len(active))
+        self._g_parked.set(len(self.parked))
+        self._g_queued.set(len(self.queue))
         if not active:
             prev, self._inflight = self._inflight, None
             return self._harvest(prev)
 
         self._push_lane_updates()
         self.store.flush_movers()     # pending tier copies precede the read
+        probe = self.obs.probe
+        t0 = time.perf_counter() if probe is not None else 0.0
         nxt, pools = self._decode(self.params, self.store.pools,
                                   self._tokens_dev, self._bt_dev,
                                   jnp.asarray(self._lengths),
                                   jnp.asarray(self._state_slots),
                                   jnp.asarray(self._temps),
                                   self.rng, self.tick_no)
+        if probe is not None:
+            probe.record_dispatch(time.perf_counter() - t0)
+            if probe.should_fence(self.tick_no):
+                # execution-true sample: drain the device queue through
+                # this tick (dispatch start -> result ready, backlog
+                # included -- it is what a request actually waits)
+                jax.block_until_ready(nxt)
+                probe.record_exec(time.perf_counter() - t0)
         self.store.pools = pools
         self._tokens_dev = nxt
 
@@ -624,13 +682,17 @@ class PagedEngine(EngineBase):
                 self._vacate(i)
             if st.remaining <= self.policy.cfg.prefetch_lookahead:
                 closing += 1
-        self.peak_resident_tokens = max(self.peak_resident_tokens,
-                                        self.resident_tokens())
+        res = self.resident_tokens()
+        self.peak_resident_tokens = max(self.peak_resident_tokens, res)
+        self._g_resident.set(res)
         if self.host_sync:
             prev, self._inflight = (nxt, snapshot), None
         else:
             prev, self._inflight = self._inflight, (nxt, snapshot)
         self._harvest(prev)
+        if tr is not None:
+            tr.complete("tick", t_tick, tr.now_us() - t_tick,
+                        tick=self.tick_no, lanes=len(active))
         # WaSP lookahead: start promoting the next parked requests' cold
         # TOKEN pages -- and their cold state slabs -- while the closing
         # lanes finish, so swap-in promotion hides behind decode ticks
@@ -670,6 +732,7 @@ class PagedEngine(EngineBase):
                 st.req.out.append(tok)
                 st.last_tok = tok
                 self.tokens_generated += 1
+                self._c_tokens.inc()
                 self._touch(rid)
                 if rem <= 0 or tok == self.eos_id:
                     self._retire(rid)
@@ -679,6 +742,10 @@ class PagedEngine(EngineBase):
         st = self.resident.pop(rid)
         st.req.done = True
         self.finished.append(st.req)
+        self._c_retire.inc()
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("retire", tid=1, rid=rid,
+                                    out_tokens=len(st.req.out))
         freed = self.pool.free_request(rid)
         if self.has_state:
             freed += self.pool.free_request(self._state_rid(rid))
@@ -714,21 +781,31 @@ class PagedEngine(EngineBase):
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> dict:
-        return {"tick": self.tick_no,
-                "backend": self.backend,
-                "queued": len(self.queue),
-                "parked": len(self.parked),
-                "resident_tokens": self.resident_tokens(),
-                "peak_resident_tokens": self.peak_resident_tokens,
-                "tokens_generated": self.tokens_generated,
-                "prefill_compiles": self.prefill_compiles(),
-                "hbm_bytes_used": self.store.hbm_bytes_used(),
-                "cold_bytes": self.store.cold_bytes,
-                "tiers": self.store.tier_counts(),
-                "state_slots": {"hot": self.store.hot_state,
-                                "warm": self.store.warm_state},
-                "pool": dataclasses.asdict(self.pool.stats),
-                "store": dict(self.store.stats),
-                "policy": dict(self.policy.stats),
-                "trigger": (dataclasses.asdict(self.policy.decision)
-                            if self.policy.decision else None)}
+        """Counter/gauge view of the engine (pool/store/policy sections
+        are themselves registry views since the telemetry spine; the flat
+        ``dispatch_p*``/``exec_p*`` keys are the honestly-labeled tick
+        latency channels, DESIGN.md 13)."""
+        gv = self.obs.metrics.get_value
+        s = {"tick": self.tick_no,
+             "backend": self.backend,
+             "queued": len(self.queue),
+             "parked": len(self.parked),
+             "resident_tokens": self.resident_tokens(),
+             "peak_resident_tokens": self.peak_resident_tokens,
+             "tokens_generated": self.tokens_generated,
+             "preemptions": gv("engine_preemptions_total") or 0,
+             "admissions": gv("engine_admissions_total") or 0,
+             "prefill_compiles": self.prefill_compiles(),
+             "hbm_bytes_used": self.store.hbm_bytes_used(),
+             "cold_bytes": self.store.cold_bytes,
+             "tiers": self.store.tier_counts(),
+             "state_slots": {"hot": self.store.hot_state,
+                             "warm": self.store.warm_state},
+             "pool": dataclasses.asdict(self.pool.stats),
+             "store": dict(self.store.stats),
+             "policy": dict(self.policy.stats),
+             "trigger": (dataclasses.asdict(self.policy.decision)
+                         if self.policy.decision else None)}
+        if self.obs.probe is not None:
+            s.update(self.obs.probe.percentiles())
+        return s
