@@ -465,6 +465,80 @@ def run_page_kinds(smoke: bool = False):
     return results
 
 
+def run_prefix_reuse(smoke: bool = False):
+    """Zipfian shared-prompt workload through the radix prefix store
+    (ISSUE 7): a few popular prompt headers, Zipf-weighted, each request
+    a header plus a short unique tail (sometimes no tail at all -- the
+    full-prefill-skip case).  The same stream and HBM budget run with
+    ``prefix_reuse`` off and on; the store must buy >= 1.5x the resident
+    LOGICAL tokens (shared pages count once physically, once per reader
+    logically) and a nonzero prefill-skip rate, with every request still
+    completing and the pool conserving at drain.
+    """
+    cfg = reduced(ARCHS[ARCH])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+    budget = (16 if smoke else 24) * geom.hot_page_bytes
+    n_req = 20 if smoke else 40
+    rng = np.random.default_rng(0)
+    # Zipf-popular headers: 3 full pages each, so a reused header costs
+    # 3 shared page refs instead of 3 fresh pages
+    headers = [list(rng.integers(2, cfg.vocab_size, 3 * PAGE))
+               for _ in range(2 if smoke else 3)]
+    weight = np.array([1 / (r + 1) ** 1.1 for r in range(len(headers))])
+    weight /= weight.sum()
+    prompts = []
+    for rid in range(n_req):
+        h = headers[int(rng.choice(len(headers), p=weight))]
+        tail = int(rng.integers(0, 9))      # 0 => exact header: full skip
+        prompts.append(h + list(rng.integers(2, cfg.vocab_size, tail)))
+
+    results, rows = {}, []
+    for label, enabled in (("disabled", False), ("enabled", True)):
+        spec = AssistSpec(paged=True, page_size=PAGE,
+                          hbm_budget_bytes=budget,
+                          enable_warm=False, enable_cold=False,
+                          use_roofline_trigger=False,
+                          prefix_reuse=enabled, prefix_min_pages=1)
+        eng = _build(model, params, spec, lanes=4, max_len=96)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new=4))
+        eng.step()                      # one tick admits all the budget allows
+        capacity = eng.resident_tokens()
+        done = eng.run(max_ticks=3000)
+        pstats = eng.stats()["prefix"] or {}
+        if enabled:
+            eng.drop_prefix_cache()
+        eng.pool.check()
+        skips = pstats.get("prefill_skips", 0)
+        results[label] = {
+            "capacity": capacity,
+            "peak_resident_tokens": eng.peak_resident_tokens,
+            "finished": len(done),
+            "prefill_skips": skips,
+            "skip_rate": skips / n_req,
+            "skipped_tokens": pstats.get("skipped_tokens", 0),
+            "shared_pages": pstats.get("shared_pages", 0),
+            "cow_pages": eng.pool.stats.cow,
+        }
+        rows.append([label, capacity, eng.peak_resident_tokens, skips,
+                     pstats.get("shared_pages", 0), eng.pool.stats.cow,
+                     len(done)])
+    ratio = (results["enabled"]["peak_resident_tokens"]
+             / max(results["disabled"]["peak_resident_tokens"], 1))
+    results["capacity_ratio"] = ratio
+    print_table(
+        "serving_micro prefix reuse: Zipf shared-prompt stream, one HBM "
+        "budget, prefix store off vs on",
+        ["prefix store", "tok@1st tick", "peak_resident_tok",
+         "prefill_skips", "shared_pages", "cow_pages", "done"], rows)
+    print(f"  logical resident-token capacity ratio: {ratio:.2f}x")
+    return results
+
+
 def run_trace(path: str, smoke: bool = True):
     """Decode one tiered scenario with tracing on and write a Chrome
     trace-event JSON (load in Perfetto / chrome://tracing).
@@ -555,12 +629,25 @@ def main(smoke: bool = False):
           f"{mla['ratio']:.2f}x >= 2x the dense-slab resident tokens; "
           f"hybrid state parking ratio "
           f"{kinds['hybrid-state']['ratio']:.2f}x")
+    prefix = run_prefix_reuse(smoke=smoke)
+    # acceptance bar (ISSUE 7): the prefix store buys >= 1.5x resident
+    # logical tokens on the Zipf shared-prompt stream with a nonzero
+    # prefill-skip rate, and every request completes in both configs
+    assert prefix["capacity_ratio"] >= 1.5, prefix
+    assert prefix["enabled"]["prefill_skips"] > 0, prefix
+    assert prefix["enabled"]["finished"] == \
+        prefix["disabled"]["finished"], prefix
+    print(f"[serving_micro] prefix reuse PASS: "
+          f"{prefix['capacity_ratio']:.2f}x >= 1.5x resident tokens, "
+          f"{prefix['enabled']['prefill_skips']} prefill skips "
+          f"({100 * prefix['enabled']['skip_rate']:.0f}% of admissions)")
     # one JSON-able record per section: benchmarks/run.py --json persists
     # this as BENCH_serving.json (the cross-PR perf trajectory)
     return {"tiers": res,
             "host_overhead": overhead,
             "backends": {f"{t}/{b}": v for (t, b), v in bres.items()},
-            "page_kinds": kinds}
+            "page_kinds": kinds,
+            "prefix_reuse": prefix}
 
 
 if __name__ == "__main__":

@@ -18,12 +18,19 @@ kinds of *page*:
                NON-GROWING slab per request: allocated once at admission,
                demotable/promotable like any page, int8 when parked
 
-A ``PageKind`` records the two facts the tiered store dispatches on:
-whether the kind grows with tokens (page-per-``page_size``-tokens vs one
-slab per request -- this decides which slot space and which pool
-segments a page of that kind occupies) and whether parking it may be
-lossy (``TieredKVStore.demote_to_warm`` refuses to int8-quantize a kind
-that declares ``lossy_park=False``).  The geometry itself (heads,
+A ``PageKind`` records the three facts the tiered store and the sharing
+machinery dispatch on: whether the kind grows with tokens
+(page-per-``page_size``-tokens vs one slab per request -- this decides
+which slot space and which pool segments a page of that kind occupies),
+whether parking it may be lossy (``TieredKVStore.demote_to_warm``
+refuses to int8-quantize a kind that declares ``lossy_park=False``), and
+whether pages of the kind may be SHARED read-only across requests
+(``shareable``).  Token pages are shareable because causal attention
+makes a shared token prefix yield identical K/V (or MLA latents)
+regardless of suffix; state slabs are NOT -- a recurrence state at
+position i summarizes the whole sequence so far and is cheap to park
+but meaningless to alias between requests that will diverge.  The
+geometry itself (heads,
 widths, rows) is per-model and lives in ``repro.cache.tiers.
 SegmentGeometry``; this module is the kind registry those descriptors
 reference.
@@ -41,11 +48,17 @@ class PageKind:
     #                    fixed slab per request
     lossy_park: bool   # demotion to the warm tier quantizes (bounded err);
     #                    False = must park through a lossless path only
+    shareable: bool = False  # may one physical page back several
+    #                    requests' block tables (refcounted read-only
+    #                    prefix sharing + COW)?  Token pages yes; state
+    #                    slabs never.
 
 
-ATTN_KV = PageKind("attn_kv", grows=True, lossy_park=True)
-MLA_LATENT = PageKind("mla_latent", grows=True, lossy_park=True)
-STATE_SLAB = PageKind("state_slab", grows=False, lossy_park=True)
+ATTN_KV = PageKind("attn_kv", grows=True, lossy_park=True, shareable=True)
+MLA_LATENT = PageKind("mla_latent", grows=True, lossy_park=True,
+                      shareable=True)
+STATE_SLAB = PageKind("state_slab", grows=False, lossy_park=True,
+                      shareable=False)
 
 PAGE_KINDS: dict = {k.name: k for k in (ATTN_KV, MLA_LATENT, STATE_SLAB)}
 

@@ -23,6 +23,43 @@ from repro.assist.tasks import (AssistSubroutine, AssistTask, CompressTask,
                                 KINDS, PrefetchTask)
 
 
+class PrefixReuseTask:
+    """Registry entry for cross-request prefix reuse: a factory for
+    ``repro.cache.prefix_store.PrefixStore`` (memoize kind -- prefix
+    matching IS memoization of prefill, lifted to the cache layer).
+    Consumers call ``build(pool=...)`` for a live store; ``plan`` gives
+    the prior-based verdict before one exists.  The store class itself is
+    imported lazily: the tier store imports THIS module at import time,
+    so a registry-time import of the cache layer would cycle.
+    """
+
+    kind = "memoize"
+
+    def __init__(self, name: str = "prefix"):
+        self.name = name
+
+    def build(self, pool, **kw):
+        from repro.cache.prefix_store import PrefixStore
+        return PrefixStore(pool, name=self.name, **kw)
+
+    def plan(self, site, roofline):
+        if roofline is None:
+            from repro.assist.tasks import AssistDecision
+            return AssistDecision(site.name, True, "prefix", 1.0,
+                                  "no roofline given: trigger bypassed",
+                                  kind="memoize")
+        from repro.assist.controller import AssistController
+        return AssistController().decide_memoize(roofline, site,
+                                                 site.measured_ratio)
+
+    def apply(self, *a, **kw):
+        raise TypeError("PrefixReuseTask is a factory; call build(pool=...) "
+                        "for a live PrefixStore")
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "name": self.name}
+
+
 class AssistRegistry:
     """Registry of assist tasks (the AWS), keyed by (kind, name)."""
 
@@ -106,6 +143,7 @@ def default_registry() -> AssistRegistry:
     r.register("int4", lambda x: quant.compress(x, "int4"), quant.decompress,
                lossless=False, jit_compress=True, decomp_ops_per_byte=1.5)
     r.register(MemoizeTask("lut"))
+    r.register(PrefixReuseTask("prefix"))
     r.register(PrefetchTask("coldpage"))
     return r
 

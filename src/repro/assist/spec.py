@@ -53,6 +53,12 @@ class AssistSpec:
     Memoize task (paper 8.1):
       memoize               enable LUT memoization where a consumer asks
       memoize_min_hit_rate  controller floor before self-disable
+
+    Prefix reuse (paper 8.1 lifted to the cache layer, DESIGN.md 14):
+      prefix_reuse      radix-tree prefix store at paged-engine admission
+                        (refcounted read-only page sharing + COW)
+      prefix_max_nodes  radix-tree node budget (one page held per node)
+      prefix_min_pages  shortest shareable prefix, in full pages
     """
     # serving / KV compress site
     kv: str = "bf16"
@@ -80,8 +86,16 @@ class AssistSpec:
     # memoize task
     memoize: bool = False
     memoize_min_hit_rate: float = 0.25
+    # prefix-reuse task (memoize kind, paged engine only)
+    prefix_reuse: bool = False
+    prefix_max_nodes: int = 512
+    prefix_min_pages: int = 1
 
     def __post_init__(self):
+        if self.prefix_max_nodes < 1:
+            raise ValueError("prefix_max_nodes must be >= 1")
+        if self.prefix_min_pages < 1:
+            raise ValueError("prefix_min_pages must be >= 1")
         if self.kv not in ("bf16", "int8"):
             raise ValueError(f"kv must be bf16|int8, got {self.kv!r}")
         if self.grads not in ("raw", "int8", "fp8"):

@@ -15,16 +15,26 @@ Three layers, strictly separated:
                and WaSP-style lookahead prefetch of parked requests'
                cold pages.
 
+A fourth, optional layer rides on the pool's refcounts (DESIGN.md 14):
+
+  prefix_store radix-tree prefix index over prompt pages for
+               cross-request reuse -- read-only sharing at admission,
+               copy-on-write on divergence.  NOT imported here: its
+               registry task lives in ``repro.assist.registry`` (the
+               tier store imports the registry at module level, so a
+               package-level import would cycle).
+
 The serving integration (block-table decode, preemption-by-demotion) lives
 in ``repro.serving.paged_engine``.
 """
-from repro.cache.block_pool import BlockPool
+from repro.cache.block_pool import PREFIX_RID, BlockPool, PoolExhausted
 from repro.cache.tiers import (TIER_HOT, TIER_WARM, TIER_COLD, PageGeometry,
                                SegmentGeometry, TieredKVStore)
 from repro.cache.policy import CachePolicy, TierConfig, decode_roofline_terms
 
 __all__ = [
-    "BlockPool", "TieredKVStore", "PageGeometry", "SegmentGeometry",
+    "BlockPool", "PoolExhausted", "PREFIX_RID",
+    "TieredKVStore", "PageGeometry", "SegmentGeometry",
     "TIER_HOT", "TIER_WARM", "TIER_COLD",
     "CachePolicy", "TierConfig", "decode_roofline_terms",
 ]

@@ -7,10 +7,20 @@ keeps the request -> [page ids] block tables; it does not own any tensor
 data -- physical placement (which tier a page's bytes live in) is the
 ``tiers.TieredKVStore``'s job.
 
+Ownership is REFCOUNTED (DESIGN.md 14): a page may appear in several
+readers' block tables at once (shared read-only prefix pages).  ``owner``
+keeps the canonical holder -- the first reader, handed to the tier store's
+dirty-page fan-out -- and ``readers[pid]`` holds every rid currently
+mapping the page.  ``share`` adds a reader, ``drop_page`` removes one
+(the physical page is recycled only when the last reader drops it), and
+``cow`` breaks a shared page out into a private copy for one writer.
+
 Invariants (enforced by ``check``, exercised by tests/test_cache.py):
-  * every page id is either free or owned by exactly one request;
+  * every owned page's refcount equals its total block-table occurrences;
   * a request's table has no duplicate pages;
-  * len(free) + sum(len(table)) == num_pages.
+  * the canonical ``owner`` is always one of the page's readers;
+  * free pages have refcount 0 and no readers;
+  * len(free) + len(owned) == num_pages.
 """
 from __future__ import annotations
 
@@ -20,6 +30,12 @@ import dataclasses
 import numpy as np
 
 from repro.obs.metrics import NULL_REGISTRY
+
+#: Shadow rid under which the prefix store holds its own reference to a
+#: shared page.  Far outside the real rid space (rids are >= 0) and the
+#: state-slab shadow space (-2 - rid), so the engines' fan-out loops can
+#: recognise and skip it.
+PREFIX_RID = -(1 << 60)
 
 
 class PoolExhausted(Exception):
@@ -31,6 +47,9 @@ class PoolStats:
     allocated: int = 0
     freed: int = 0
     peak_in_use: int = 0
+    shared: int = 0        # share() calls (refcount raised past 1)
+    unshared: int = 0      # drops/COWs that lowered a refcount from > 1
+    cow: int = 0           # copy-on-write divergences
 
 
 class BlockPool:
@@ -44,7 +63,9 @@ class BlockPool:
         self.page_size = page_size
         self.free: collections.deque[int] = collections.deque(range(num_pages))
         self.tables: dict[int, list[int]] = {}
-        self.owner = np.full(num_pages, -1, np.int64)      # rid or -1
+        self.owner = np.full(num_pages, -1, np.int64)      # canonical reader
+        self.refcount = np.zeros(num_pages, np.int64)
+        self.readers: dict[int, set[int]] = {}             # pid -> {rid,...}
         self.last_access = np.zeros(num_pages, np.int64)   # LRU tick stamps
         self.stats = PoolStats()
         # registry mirrors (handles bound once; no-ops when obs is off)
@@ -52,10 +73,18 @@ class BlockPool:
             "pool_pages_allocated_total", "logical pages allocated")
         self._c_freed = metrics.counter(
             "pool_pages_freed_total", "logical pages freed")
+        self._c_shared = metrics.counter(
+            "pool_pages_shared_total", "share() refs added to live pages")
+        self._c_unshared = metrics.counter(
+            "pool_pages_unshared_total", "refs dropped from shared pages")
+        self._c_cow = metrics.counter(
+            "pool_pages_cow_total", "copy-on-write page divergences")
         self._g_in_use = metrics.gauge(
             "pool_pages_in_use", "logical pages currently owned")
         self._g_peak = metrics.gauge(
             "pool_pages_peak_in_use", "high-water mark of owned pages")
+        self._g_shared = metrics.gauge(
+            "pool_pages_shared", "pages with more than one reader")
 
     # -- allocation ----------------------------------------------------------
 
@@ -76,6 +105,8 @@ class BlockPool:
         self.tables.setdefault(rid, []).extend(got)
         for p in got:
             self.owner[p] = rid
+            self.refcount[p] = 1
+            self.readers[p] = {rid}
         self.stats.allocated += n
         in_use = self.num_pages - len(self.free)
         self.stats.peak_in_use = max(self.stats.peak_in_use, in_use)
@@ -84,16 +115,132 @@ class BlockPool:
         self._g_peak.set_max(in_use)
         return got
 
+    # -- sharing -------------------------------------------------------------
+
+    def is_shared(self, pid: int) -> bool:
+        return int(self.refcount[pid]) > 1
+
+    def owners_of(self, pid: int):
+        """Every rid currently mapping ``pid`` (canonical owner included)."""
+        return self.readers.get(pid, ())
+
+    def share(self, pid: int, rid: int) -> None:
+        """Map the live page ``pid`` into ``rid``'s table as a read-only ref.
+
+        The page must already be owned; ``rid`` must not already hold it
+        (one occurrence per table -- a prefix never repeats a page).
+        """
+        if self.refcount[pid] < 1:
+            raise ValueError(f"share of unowned page {pid}")
+        rds = self.readers[pid]
+        if rid in rds:
+            raise ValueError(f"rid {rid} already maps page {pid}")
+        self.tables.setdefault(rid, []).append(pid)
+        rds.add(rid)
+        self.refcount[pid] += 1
+        self.stats.shared += 1
+        self._c_shared.inc()
+        self._g_shared.set(int(np.sum(self.refcount > 1)))
+
+    def drop_page(self, rid: int, pid: int) -> bool:
+        """Drop ``rid``'s reference to ``pid``.
+
+        Returns True when this was the LAST reference and the physical page
+        went back to the free list (the caller must then release tier
+        storage); False when other readers keep it alive.  Double drops
+        raise -- every ref is released exactly once.
+        """
+        rds = self.readers.get(pid)
+        if rds is None or rid not in rds:
+            raise ValueError(f"double free: rid {rid} does not hold "
+                             f"page {pid}")
+        table = self.tables.get(rid, [])
+        table.remove(pid)
+        if not table:
+            self.tables.pop(rid, None)
+        rds.discard(rid)
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            del self.readers[pid]
+            self.owner[pid] = -1
+            self.free.append(pid)
+            self.stats.freed += 1
+            self._c_freed.inc()
+            self._g_in_use.set(self.num_pages - len(self.free))
+            return True
+        self.stats.unshared += 1
+        self._c_unshared.inc()
+        if self.owner[pid] == rid:          # hand canon to a survivor
+            self.owner[pid] = next(iter(rds))
+        self._g_shared.set(int(np.sum(self.refcount > 1)))
+        return False
+
+    def cow(self, rid: int, pid: int) -> int:
+        """Copy-on-write: replace ``rid``'s ref to the SHARED page ``pid``
+        with a fresh private page at the same block-table position.
+
+        Returns the new page id.  The caller copies the tier bytes (the
+        pool tracks ids only).  Raises PoolExhausted when no page is free
+        and ValueError when the page is not actually shared (a private
+        page needs no COW).
+        """
+        if self.refcount[pid] < 2:
+            raise ValueError(f"cow of unshared page {pid}")
+        if not self.free:
+            raise PoolExhausted("cow: no free page")
+        table = self.tables[rid]
+        idx = table.index(pid)
+        new = self.free.popleft()
+        table[idx] = new
+        self.owner[new] = rid
+        self.refcount[new] = 1
+        self.readers[new] = {rid}
+        rds = self.readers[pid]
+        rds.discard(rid)
+        self.refcount[pid] -= 1
+        if self.owner[pid] == rid:
+            self.owner[pid] = next(iter(rds))
+        self.last_access[new] = self.last_access[pid]
+        self.stats.allocated += 1
+        self.stats.unshared += 1
+        self.stats.cow += 1
+        in_use = self.num_pages - len(self.free)
+        self.stats.peak_in_use = max(self.stats.peak_in_use, in_use)
+        self._c_alloc.inc()
+        self._c_unshared.inc()
+        self._c_cow.inc()
+        self._g_in_use.set(in_use)
+        self._g_peak.set_max(in_use)
+        self._g_shared.set(int(np.sum(self.refcount > 1)))
+        return new
+
     def free_request(self, rid: int) -> list[int]:
-        """Release every page of ``rid``; returns the freed page ids."""
+        """Release every ref of ``rid``; returns only the pages whose LAST
+        reference this was (the caller releases tier storage for exactly
+        those -- shared prefix pages survive for their other readers)."""
         pages = self.tables.pop(rid, [])
+        truly_freed = []
         for p in pages:
-            self.owner[p] = -1
-            self.free.append(p)
-        self.stats.freed += len(pages)
-        self._c_freed.inc(len(pages))
+            rds = self.readers[p]
+            if rid not in rds:
+                raise ValueError(f"double free: rid {rid} lost page {p}")
+            rds.discard(rid)
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                del self.readers[p]
+                self.owner[p] = -1
+                self.free.append(p)
+                truly_freed.append(p)
+            else:
+                self.stats.unshared += 1
+                self._c_unshared.inc()
+                if self.owner[p] == rid:
+                    self.owner[p] = next(iter(rds))
+        self.stats.freed += len(truly_freed)
+        self._c_freed.inc(len(truly_freed))
         self._g_in_use.set(self.num_pages - len(self.free))
-        return pages
+        self._g_shared.set(int(np.sum(self.refcount > 1)))
+        return truly_freed
 
     # -- lookups -------------------------------------------------------------
 
@@ -109,26 +256,46 @@ class BlockPool:
             self.last_access[p] = tick
 
     def lru_order(self, candidates) -> list[int]:
-        """Candidates sorted least-recently-used first."""
-        return sorted(candidates, key=lambda p: (self.last_access[p], p))
+        """Candidates sorted least-recently-used first; among equally old
+        pages, private pages go before shared ones (evicting a shared
+        prefix invalidates several lanes' working sets at once)."""
+        return sorted(candidates,
+                      key=lambda p: (self.refcount[p] > 1,
+                                     self.last_access[p], p))
 
     # -- invariants ----------------------------------------------------------
 
     def check(self):
         """Assert the structural invariants; cheap enough for tests."""
-        seen: dict[int, int] = {}
+        occurrences: dict[int, int] = collections.Counter()
+        holders: dict[int, set[int]] = collections.defaultdict(set)
         for rid, pages in self.tables.items():
             assert len(set(pages)) == len(pages), \
                 f"rid {rid} block table has duplicate pages"
             for p in pages:
                 assert 0 <= p < self.num_pages
-                assert p not in seen, \
-                    f"page {p} aliased by rids {seen[p]} and {rid}"
-                assert self.owner[p] == rid
-                seen[p] = rid
+                occurrences[p] += 1
+                holders[p].add(rid)
+        for p, n in occurrences.items():
+            assert self.refcount[p] == n, \
+                (f"page {p} refcount {self.refcount[p]} != "
+                 f"{n} table occurrences")
+            assert self.readers.get(p) == holders[p], \
+                f"page {p} readers {self.readers.get(p)} != {holders[p]}"
+            assert self.owner[p] in holders[p], \
+                f"page {p} canonical owner {self.owner[p]} not a reader"
         free_set = set(self.free)
         assert len(free_set) == len(self.free), "free list has duplicates"
-        assert not (free_set & set(seen)), "page both free and owned"
-        assert len(free_set) + len(seen) == self.num_pages, "page leaked"
+        assert not (free_set & set(occurrences)), "page both free and owned"
+        assert len(free_set) + len(occurrences) == self.num_pages, \
+            "page leaked"
         for p in free_set:
             assert self.owner[p] == -1
+            assert self.refcount[p] == 0
+            assert p not in self.readers
+        # refcount conservation: every share is either still live (a
+        # refcount above 1) or was matched by an unshare.
+        live_extra = int(np.sum(np.maximum(self.refcount - 1, 0)))
+        assert self.stats.shared == self.stats.unshared + live_extra, \
+            (f"share/unshare imbalance: {self.stats.shared} shares != "
+             f"{self.stats.unshared} unshares + {live_extra} live")

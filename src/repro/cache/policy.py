@@ -154,7 +154,17 @@ class CachePolicy:
 
         ``cls`` selects the page class: "kv" (token pages: attn KV / MLA
         latent) or "state" (recurrence slabs) -- the two classes occupy
-        disjoint slot spaces, so victims never cross."""
+        disjoint slot spaces, so victims never cross.
+
+        Sharing (DESIGN.md 14): ``protected`` is the union of every
+        active lane's block table, so a shared page is protected as long
+        as ANY sibling lane still reads it -- eviction can never pull a
+        shared hot page out from under a live reader.  Among evictable
+        pages, ``pool.lru_order`` puts private pages before shared ones
+        (demoting a shared prefix degrades several future admissions at
+        once), and because tier placement is keyed by PHYSICAL page id,
+        an evicted shared prefix parks exactly ONE warm/cold copy no
+        matter how many readers it had."""
         ids = store.hot_page_ids() if cls == "kv" else store.hot_state_ids()
         order = pool.lru_order([p for p in ids if p not in protected])
         return order[0] if order else None

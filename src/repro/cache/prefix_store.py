@@ -1,0 +1,308 @@
+"""Radix-tree prefix store: cross-request KV reuse at admission.
+
+The paper's memoization assist (8.1) converts repeated computation into
+storage lookups.  At serving scale the dominant repeated computation is
+prefill over shared prompt headers (system prompts, few-shot preambles),
+so the same idea lifts to the cache layer: remember which PHYSICAL pages
+hold the KV of which token prefix, and when a new request's prompt starts
+with a known prefix, map those read-only pages straight into its block
+table instead of recomputing them.  Causal attention makes this exact:
+K/V at position i depends only on tokens 0..i, so a shared token prefix
+yields bit-identical KV regardless of what follows (prefill bucketing is
+pad-invariant per PR 5).
+
+Structure: a page-granular radix tree.  Each edge is one FULL page of
+tokens (``page_size`` of them, as a tuple); each node owns exactly one
+physical page id, held alive via a ``PREFIX_RID`` reference in the
+``BlockPool`` refcount model.  Matching walks the tree page by page;
+insertion extends it with the pages a finished prefill just wrote.  The
+tree is bounded (``max_nodes``): past the budget, least-recently-matched
+LEAVES are evicted, dropping the store's reference -- the page itself
+survives as long as any lane still reads it, and pages referenced only by
+the store may be demoted/parked by the normal tier policy (ONE compressed
+cold copy of an evicted shared prefix, re-promoted on the next hit).
+
+Throttle: the store is a ``memoize``-kind assist task.  It reports
+per-page hit/call counts to the PR-6 counters (``memoize_*_total`` with
+``task="prefix"``) and re-consults the ``AssistController`` every
+``replan_every`` consults, disabling itself -- and releasing every held
+page -- when the windowed hit rate falls below the controller floor
+(paper 4.4 dynamic feedback, same discipline as ``Memoizer``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.assist.tasks import (AssistDecision, PEAK_FLOPS, HBM_BW,
+                                RooflineTerms, SiteDescriptor)
+from repro.cache.block_pool import PREFIX_RID, BlockPool
+from repro.obs.metrics import NULL_REGISTRY
+
+
+class _Node:
+    __slots__ = ("key", "pid", "children", "parent", "stamp")
+
+    def __init__(self, key, pid, parent):
+        self.key = key                  # tuple of page_size token ids
+        self.pid = pid                  # physical page holding this span's KV
+        self.children: dict = {}
+        self.parent = parent            # None for first-level nodes
+        self.stamp = 0                  # last-matched tick (LRU eviction)
+
+
+class PrefixStore:
+    """Page-granular radix tree over prompt prefixes (memoize-kind task)."""
+
+    kind = "memoize"
+
+    def __init__(self, pool: BlockPool, *, max_nodes: int = 512,
+                 min_pages: int = 1, name: str = "prefix",
+                 warmup_calls: int = 16, replan_every: int = 32,
+                 controller=None, metrics=NULL_REGISTRY):
+        if max_nodes < 1:
+            raise ValueError("max_nodes must be >= 1")
+        if min_pages < 1:
+            raise ValueError("min_pages must be >= 1")
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.max_nodes = max_nodes
+        self.min_pages = min_pages
+        self.name = name
+        self.enabled = True
+        self.warmup_calls = warmup_calls
+        self.replan_every = replan_every
+        self._controller = controller
+        self._root: dict = {}           # first page key -> _Node
+        self._n_nodes = 0
+        self._tick = 0
+        self._released: list[int] = []  # pids whose last ref dropped here
+        # lifetime page-granular hit/call totals + the last replan window
+        # (consult = one admission-time lookup; calls count pages walked)
+        self.calls = 0
+        self.hits = 0
+        self.consults = 0
+        self._since_replan = 0
+        self._win_hits = 0
+        self._win_calls = 0
+        self._c_hits = metrics.counter(
+            "memoize_hits_total", "LUT block hits (published per replan "
+            "window)", task=name)
+        self._c_calls = metrics.counter(
+            "memoize_calls_total", "LUT block lookups (published per "
+            "replan window)", task=name)
+        self._c_disable = metrics.counter(
+            "memoize_self_disable_total", "dynamic-feedback self-disables "
+            "(window hit rate under the controller floor)", task=name)
+        self._c_evict = metrics.counter(
+            "prefix_nodes_evicted_total", "radix-tree leaves evicted past "
+            "the node budget")
+        self._g_nodes = metrics.gauge(
+            "prefix_nodes", "live radix-tree nodes")
+
+    # -- controller plumbing (mirrors Memoizer) ------------------------------
+
+    def _ctl(self):
+        if self._controller is None:
+            from repro.assist.controller import AssistController
+            self._controller = AssistController()
+        return self._controller
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.calls if self.calls else 0.0
+
+    def admission_site(self, param_count: float,
+                       prompt_tokens: int) -> SiteDescriptor:
+        """The admission-time assist site: what one prefix hit skips
+        (prefill flops over the prompt) vs what the lookup moves (the
+        token keys walked)."""
+        return SiteDescriptor(
+            name=self.name,
+            bytes_per_step=float(prompt_tokens) * 4.0,   # i32 keys walked
+            term="compute",
+            lossless_required=True,
+            measured_ratio=max(self.hit_rate, 0.5),      # prior before warmup
+            flops_per_step=2.0 * param_count * prompt_tokens)
+
+    def admission_terms(self, param_count: float,
+                        prompt_tokens: int) -> RooflineTerms:
+        """Site-LOCAL roofline of the admission step itself: prefill
+        compute dominates the trie walk's memory traffic by construction
+        (this is the term the skip relieves, not the decode-tick
+        roofline)."""
+        return RooflineTerms(
+            compute=2.0 * param_count * prompt_tokens / PEAK_FLOPS,
+            memory=float(prompt_tokens) * 4.0 / HBM_BW,
+            collective=0.0)
+
+    def plan(self, site: SiteDescriptor,
+             roofline: Optional[RooflineTerms]) -> AssistDecision:
+        """Controller verdict for prefix matching at this site (uses the
+        observed page hit rate once warm, the site prior before)."""
+        rate = (self.hit_rate if self.consults >= self.warmup_calls
+                else site.measured_ratio)
+        if roofline is None:
+            return AssistDecision(site.name, self.enabled, "prefix", 1.0,
+                                  "no roofline given: trigger bypassed",
+                                  kind="memoize")
+        return self._ctl().decide_memoize(roofline, site, rate)
+
+    # -- tree ----------------------------------------------------------------
+
+    def _page_keys(self, prompt) -> list[tuple]:
+        p = self.page_size
+        n_full = len(prompt) // p
+        return [tuple(int(t) for t in prompt[i * p:(i + 1) * p])
+                for i in range(n_full)]
+
+    def match(self, prompt) -> list[int]:
+        """Longest-prefix match, page-granular.
+
+        Returns the physical page ids holding the KV of the longest known
+        FULL-page prefix of ``prompt`` (empty when shorter than
+        ``min_pages`` pages, or when the task disabled itself).  Counts
+        one consult; page hit/call counters feed the windowed controller
+        replan.
+        """
+        if not self.enabled:
+            return []
+        self._tick += 1
+        self.consults += 1
+        keys = self._page_keys(prompt)
+        level, node = self._root, None
+        pids: list[int] = []
+        for key in keys:
+            nxt = level.get(key)
+            if nxt is None:
+                break
+            node = nxt
+            pids.append(node.pid)
+            level = node.children
+        # LRU-touch the matched path so hot prefixes outlive cold ones
+        while node is not None:
+            node.stamp = self._tick
+            node = node.parent
+        self.calls += max(len(keys), 1)
+        self.hits += len(pids)
+        self._replan()
+        if len(pids) < self.min_pages:
+            return []
+        return pids
+
+    def insert(self, prompt, pids) -> int:
+        """Extend the tree with ``prompt``'s full pages, backed by the
+        physical pages ``pids`` (the request's own block table, in page
+        order).  Existing nodes keep their page (first writer wins -- all
+        copies are bit-identical); new nodes take a ``PREFIX_RID``
+        reference on the request's page, raising its refcount.  Returns
+        the number of nodes added.  May evict LRU leaves to stay under
+        ``max_nodes`` (release their pages via ``drain_released``).
+        """
+        if not self.enabled:
+            return 0
+        self._tick += 1
+        keys = self._page_keys(prompt)
+        if len(keys) < self.min_pages:     # too short to ever pay off
+            return 0
+        level, parent = self._root, None
+        added = 0
+        for key, pid in zip(keys, pids):
+            node = level.get(key)
+            if node is None:
+                if self._n_nodes >= self.max_nodes \
+                        and not self._evict_leaf(exclude_path=parent):
+                    break
+                node = _Node(key, pid, parent)
+                self.pool.share(pid, PREFIX_RID)
+                level[key] = node
+                self._n_nodes += 1
+                added += 1
+            node.stamp = self._tick
+            level, parent = node.children, node
+        self._g_nodes.set(self._n_nodes)
+        return added
+
+    def _evict_leaf(self, exclude_path=None) -> bool:
+        """Drop the least-recently-matched leaf (not on the path being
+        inserted).  Returns False when nothing is evictable."""
+        exclude = set()
+        n = exclude_path
+        while n is not None:
+            exclude.add(id(n))
+            n = n.parent
+        victim = None
+
+        def walk(level):
+            nonlocal victim
+            for node in level.values():
+                if node.children:
+                    walk(node.children)
+                elif id(node) not in exclude:
+                    if victim is None or node.stamp < victim.stamp:
+                        victim = node
+        walk(self._root)
+        if victim is None:
+            return False
+        self._remove(victim)
+        self._c_evict.inc()
+        return True
+
+    def _remove(self, node: _Node):
+        level = node.parent.children if node.parent else self._root
+        del level[node.key]
+        self._n_nodes -= 1
+        if self.pool.drop_page(PREFIX_RID, node.pid):
+            self._released.append(node.pid)
+        self._g_nodes.set(self._n_nodes)
+
+    def drop_all(self) -> None:
+        """Release every reference the store holds (drain / self-disable);
+        the freed pages surface via ``drain_released``."""
+        def walk(level):
+            for node in list(level.values()):
+                walk(node.children)
+                node.children = {}
+                self._n_nodes -= 1
+                if self.pool.drop_page(PREFIX_RID, node.pid):
+                    self._released.append(node.pid)
+        walk(self._root)
+        self._root = {}
+        assert self._n_nodes == 0
+        self._g_nodes.set(0)
+
+    def drain_released(self) -> list[int]:
+        """Pages whose LAST reference dropped inside the store since the
+        previous drain; the engine must release their tier storage."""
+        out, self._released = self._released, []
+        return out
+
+    # -- dynamic feedback ----------------------------------------------------
+
+    def _replan(self):
+        self._since_replan += 1
+        if (self._since_replan < self.replan_every
+                or self.consults < self.warmup_calls):
+            return
+        self._since_replan = 0
+        win_rate = ((self.hits - self._win_hits)
+                    / max(self.calls - self._win_calls, 1))
+        self._c_hits.inc(self.hits - self._win_hits)
+        self._c_calls.inc(self.calls - self._win_calls)
+        self._win_hits, self._win_calls = self.hits, self.calls
+        if win_rate < self._ctl().min_hit_rate:
+            self.enabled = False
+            self._c_disable.inc()
+            self.drop_all()
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "name": self.name,
+                "enabled": self.enabled, "nodes": self._n_nodes,
+                "consults": self.consults, "calls": self.calls,
+                "hits": self.hits, "hit_rate": self.hit_rate}
+
+
+# The registry entry for this task (``PrefixReuseTask``) lives in
+# ``repro.assist.registry``: the tier store imports the registry at module
+# level, so a registry-time import of this module would cycle through the
+# ``repro.cache`` package init.  The task's ``build(pool=...)`` defers the
+# import of ``PrefixStore`` until an engine actually wants one.

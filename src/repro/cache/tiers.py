@@ -351,6 +351,19 @@ def _promote_warm_to_hot(pools_j, warm_slots, hot_slots):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_hot_hot(pools_j, src_slots, dst_slots):
+    """Copy-on-write divergence: duplicate hot pages ``src_slots`` into
+    fresh hot slots ``dst_slots`` (bf16 -> bf16, no recompression).  Same
+    padded int32[MOVER_BATCH] convention as the other movers: padding
+    copies trash onto trash, which no gather can observe."""
+    out = dict(pools_j)
+    for hname, _, _ in _plane_triples(pools_j):
+        out[hname] = pools_j[hname].at[:, dst_slots].set(
+            pools_j[hname][:, src_slots])
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _write_warm(pools_j, warm_slot, planes):
     """planes: {int8/scale plane name -> array} for this pool's schema."""
     out = dict(pools_j)
@@ -496,6 +509,8 @@ class TieredKVStore:
         self._h_batch = m.histogram(
             "cache_mover_batch_pages", "pages per mover dispatch "
             "(batch occupancy)", buckets=log_buckets(1.0, 2 * MOVER_BATCH))
+        self._c_cow_copies = m.counter(
+            "cache_cow_copies_total", "copy-on-write hot-page duplications")
 
     @property
     def stats(self) -> dict:
@@ -575,7 +590,9 @@ class TieredKVStore:
         dst = np.zeros(K, np.int32)
         src[:len(srcs)] = srcs
         dst[:len(dsts)] = dsts
-        fn = _demote_hot_to_warm if op == "demote" else _promote_warm_to_hot
+        fn = {"demote": _demote_hot_to_warm,
+              "promote": _promote_warm_to_hot,
+              "copy": _copy_hot_hot}[op]
         src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
         for j in self._seg_idx[cls]:
             self.pools = self.pools[:j] + (fn(self.pools[j], src_j,
@@ -920,3 +937,24 @@ class TieredKVStore:
         self._hot_ids[cls].add(pid)
         self.dirty_pids.add(pid)
         self._c_promote[("hot", cls)].inc()
+
+    def copy_hot(self, src_pid: int, dst_pid: int):
+        """Copy-on-write: duplicate ``src_pid``'s hot bytes into
+        ``dst_pid`` (already placed hot via :meth:`place_hot`).
+
+        Rides the batched mover path, so a burst of COW divergences in
+        one policy episode lands as one dispatch.  Only token pages
+        (``kv`` class) are ever shared; state slabs declare
+        ``shareable=False`` and never reach here.
+        """
+        assert self.tier[src_pid] == TIER_HOT, \
+            f"COW source {src_pid} not hot (tier {self.tier[src_pid]})"
+        assert self.tier[dst_pid] == TIER_HOT, \
+            f"COW destination {dst_pid} not hot"
+        cls = self._cls(src_pid)
+        assert cls == "kv" and self._cls(dst_pid) == "kv", \
+            "state slabs are never shared: nothing to COW"
+        self._enqueue_move("copy", cls, int(self.slot[src_pid]),
+                           int(self.slot[dst_pid]))
+        self.dirty_pids.add(dst_pid)
+        self._c_cow_copies.inc()

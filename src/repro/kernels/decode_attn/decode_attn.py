@@ -51,6 +51,9 @@ def _decode_kernel(len_ref, q_ref, k8_ref, ks_ref, v8_ref, vs_ref, o_ref,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(logits - m_new)                           # [group, bs]
     p = jnp.where(valid, p, 0.0)
+    # select, don't rely on the zero weight: invalid rows may hold
+    # non-finite garbage and 0 * NaN = NaN
+    v = jnp.where(valid.reshape(bs, 1), v, 0.0)
     l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)

@@ -131,7 +131,10 @@ def masked_decode_attn(q, k, v, valid):
     logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     m = jnp.max(logits, axis=-1, keepdims=True)
     pr = jnp.exp(logits - m)
-    out = jnp.einsum("bghs,bgsd->bghd", pr, v.astype(jnp.float32))
+    # select, don't rely on the zero weight: invalid rows may hold non-finite
+    # garbage (paged gathers read the shared trash slot) and 0 * NaN = NaN
+    vf = jnp.where(valid[:, None, :, None], v.astype(jnp.float32), 0.0)
+    out = jnp.einsum("bghs,bgsd->bghd", pr, vf)
     out = out / jnp.sum(pr, axis=-1)[..., None]
     return out.reshape(B, H, v.shape[-1]).astype(q.dtype)
 
@@ -272,7 +275,10 @@ def masked_latent_decode_attn(q_lat, q_rope, c, r, valid, scale):
                            r.astype(jnp.float32))) * scale
     logits = jnp.where(valid[:, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhs,bsr->bhr", w, c.astype(jnp.float32))
+    # select, don't rely on the zero weight: invalid rows may hold non-finite
+    # garbage (paged gathers read the shared trash slot) and 0 * NaN = NaN
+    cf = jnp.where(valid[:, :, None], c.astype(jnp.float32), 0.0)
+    return jnp.einsum("bhs,bsr->bhr", w, cf)
 
 
 @register_latent_backend("gather")

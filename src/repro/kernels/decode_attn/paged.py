@@ -49,6 +49,9 @@ def _flash_step(s, np_, ps, window, len_b, q_ref, k, v, o_ref, m_s, l_s,
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(logits - m_new)
     p = jnp.where(valid, p, 0.0)
+    # select, don't rely on the zero weight: invalid rows may hold
+    # non-finite garbage (trash-slot pages) and 0 * NaN = NaN
+    v = jnp.where(valid.reshape(ps, 1), v, 0.0)
     l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     acc_s[...] = acc_s[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)

@@ -71,6 +71,17 @@ def main(argv=None):
     ap.add_argument("--max-cold-pages", type=int, default=None,
                     help="cap on cold (host-offloaded) page ids; default "
                          "derives from the host budget / HBM pools")
+    # cross-request prefix reuse (paged engine; DESIGN.md 14)
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="radix-tree prefix store at admission: shared "
+                         "prompt prefixes map read-only pages into new "
+                         "requests (COW on divergence), skipping prefill "
+                         "on a full hit")
+    ap.add_argument("--prefix-max-nodes", type=int, default=512,
+                    help="prefix-store node budget (one held page per "
+                         "node; LRU leaves evicted past it)")
+    ap.add_argument("--prefix-min-pages", type=int, default=1,
+                    help="shortest shareable prefix, in full pages")
     # observability (repro.obs, DESIGN.md 13)
     ap.add_argument("--no-obs", action="store_true",
                     help="disable all telemetry (counters, probe, trace): "

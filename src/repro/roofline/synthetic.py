@@ -1,0 +1,139 @@
+"""Analytic dry-run cells: closed-form roofline records, no lowering.
+
+The figure benchmarks (fig2/fig8/fig9/fig10) read the AOT dry-run's
+``summary.json`` (launch/dryrun.py): per-(arch x shape) roofline terms on
+the production 16x16 mesh.  That artifact needs the 512-host-device XLA
+dry-run -- minutes of AOT compilation that CI smoke runs and fresh clones
+don't have.  This module synthesizes the SAME record schema from the
+assigned architecture configs and the machine constants alone:
+
+  compute_s     model_flops_estimate / devices / PEAK_FLOPS
+  memory_s      per-device HBM traffic / HBM_BW -- weights (active params
+                over the model axis for serving; param+grad+moment passes
+                for training), activation streams, and the KV/state
+                working set actually read per step
+  collective_s  per-device ICI bytes / ICI_BW -- FSDP grad reduce-scatter
+                + param allgather for training, per-layer TP allreduce
+                streams for serving
+
+Every record carries ``"analytic": True`` so downstream tables can tell a
+synthesized cell from a measured one.  The closed forms reproduce the
+dry-run's qualitative census -- training compute-bound, prefill
+compute-bound, decode memory-bound by the weight stream -- because that
+is arithmetic, not tuning: a decode step moves 2*N_active/model_parallel
+bytes to produce 2*N_active*batch/devices flops.
+"""
+from __future__ import annotations
+
+from repro.configs import cells
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.roofline.analysis import (DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     model_flops_estimate)
+
+# single-pod production mesh (launch/mesh.py make_production_mesh)
+DATA, MODEL = 16, 16
+DEVICES = DATA * MODEL
+MESH = f"data={DATA}xmodel={MODEL}"
+
+_BF16 = 2           # bytes
+_F32 = 4
+
+
+def _layer_kinds(arch: ArchConfig) -> list:
+    """The per-layer kind sequence the block pattern unrolls to."""
+    return (list(arch.block_pattern) * arch.n_blocks
+            + list(arch.block_pattern[:arch.tail_layers]))
+
+
+def _kv_state_bytes_per_row(arch: ArchConfig, seq_len: int) -> float:
+    """Decode-state bytes ONE row reads per step (bf16, all layers).
+
+    Attention layers stream the KV history (MLA: the latent + rope
+    stream), windowed layers only their window, SSM/RWKV layers a
+    fixed-size recurrent state.
+    """
+    total = 0.0
+    for kind in _layer_kinds(arch):
+        if kind in ("attn", "attn_local", "shared_attn"):
+            span = seq_len
+            if kind == "attn_local" and arch.window:
+                span = min(seq_len, arch.window)
+            if arch.mla is not None:
+                per_tok = arch.mla.kv_lora_rank + arch.mla.rope_head_dim
+            else:
+                per_tok = 2 * arch.n_kv_heads * arch.head_dim
+            total += span * per_tok * _BF16
+        elif kind == "mamba2":
+            s = arch.ssm
+            total += s.expand * arch.d_model * s.d_state * _BF16
+        elif kind == "rwkv6":
+            # per-head head_dim x head_dim wkv state
+            total += arch.d_model * arch.head_dim * _BF16
+    return total
+
+
+def synthesize(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    """One analytic summary record for (arch, shape) on the 16x16 mesh."""
+    n_total = float(arch.param_count())
+    n_active = float(arch.active_param_count())
+    flops = model_flops_estimate(arch, shape)
+    flops_dev = flops / DEVICES
+    compute_s = flops_dev / PEAK_FLOPS
+    L = len(_layer_kinds(arch))
+    D = arch.d_model
+
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / DEVICES
+        # param read + grad write (bf16) + two f32 Adam moments touched
+        weight_bytes = (2 * _BF16 + 2 * _F32) * n_total / DEVICES
+        # forward + backward activation streams through every layer
+        act_bytes = 2.0 * tokens_dev * D * _BF16 * L * 4
+        mem_bytes = weight_bytes + act_bytes
+        # FSDP: grad reduce-scatter + param allgather, bf16
+        ici_bytes = 2 * 2 * _BF16 * n_total / DEVICES
+    else:
+        # serving: each model-axis group streams its shard of the ACTIVE
+        # weights once per step (ZeRO-3 gathers amortize over the data
+        # axis, so the HBM read per device is the per-model-shard slice)
+        weight_bytes = _BF16 * n_active / MODEL
+        if shape.kind == "prefill":
+            tokens_dev = shape.global_batch * shape.seq_len / DEVICES
+            rows_dev = 0.0
+        else:                        # decode: one token per row per step
+            tokens_dev = shape.global_batch / DEVICES
+            rows_dev = shape.global_batch / DATA
+        act_bytes = tokens_dev * D * _BF16 * L * 4
+        kv_bytes = (rows_dev
+                    * _kv_state_bytes_per_row(arch, shape.seq_len) / MODEL)
+        mem_bytes = weight_bytes + act_bytes + kv_bytes
+        # two TP allreduces per layer over the activation stream
+        ici_bytes = 2 * tokens_dev * D * _BF16 * L
+
+    memory_s = mem_bytes / HBM_BW
+    collective_s = ici_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    step = max(terms.values())
+    return {
+        "arch": arch.name, "shape": shape.name, "mesh": MESH,
+        "devices": DEVICES, "analytic": True,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(terms, key=terms.get),
+        "step_time_s": step,
+        "roofline_fraction": compute_s / step if step else 0.0,
+        "model_flops": flops,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": mem_bytes,
+        "ici_GB": ici_bytes / 1e9,
+        "dcn_GB": 0.0,
+    }
+
+
+def synthetic_cells() -> list:
+    """Analytic records for every runnable (arch x shape) cell, in the
+    deterministic ``repro.configs.cells()`` order."""
+    return [synthesize(arch, shape) for arch, shape, _ in cells()]
+
+
+__all__ = ["synthesize", "synthetic_cells", "MESH", "DEVICES", "DCN_BW"]

@@ -56,6 +56,11 @@ class ServeConfig:
     # build() engine was stuck in interpret mode with derived cold caps.
     interpret: bool = True
     max_cold_pages: Optional[int] = None
+    # cross-request prefix reuse (paged engine; DESIGN.md 14): flat
+    # aliases of the AssistSpec prefix knobs, same folding rules
+    prefix_reuse: bool = False
+    prefix_max_nodes: int = 512
+    prefix_min_pages: int = 1
     assist: Optional[AssistSpec] = None
     # observability (repro.obs): counters + execution probe on by default,
     # traces off; None folds to the default ObsSpec in __post_init__
@@ -68,7 +73,10 @@ class ServeConfig:
                 attn_backend=self.attn_backend, page_size=self.page_size,
                 hbm_budget_mb=self.hbm_budget_mb,
                 interpret=self.interpret,
-                max_cold_pages=self.max_cold_pages))
+                max_cold_pages=self.max_cold_pages,
+                prefix_reuse=self.prefix_reuse,
+                prefix_max_nodes=self.prefix_max_nodes,
+                prefix_min_pages=self.prefix_min_pages))
         else:
             # an explicit spec is authoritative: back-fill the flat
             # aliases so both spellings always agree (code reading
@@ -81,7 +89,12 @@ class ServeConfig:
                                   spec.budget_bytes / 2 ** 20),
                                  ("attn_backend", spec.attn_backend),
                                  ("interpret", spec.interpret),
-                                 ("max_cold_pages", spec.max_cold_pages)):
+                                 ("max_cold_pages", spec.max_cold_pages),
+                                 ("prefix_reuse", spec.prefix_reuse),
+                                 ("prefix_max_nodes",
+                                  spec.prefix_max_nodes),
+                                 ("prefix_min_pages",
+                                  spec.prefix_min_pages)):
                 object.__setattr__(self, field, value)
         if self.obs is None:
             object.__setattr__(self, "obs", ObsSpec())

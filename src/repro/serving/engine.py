@@ -92,7 +92,10 @@ class EngineBase:
                 seed=scfg.seed, backend=spec.attn_backend,
                 use_roofline_trigger=spec.use_roofline_trigger,
                 max_cold_pages=spec.max_cold_pages,
-                interpret=spec.interpret, obs=obs)
+                interpret=spec.interpret,
+                prefix_reuse=spec.prefix_reuse,
+                prefix_max_nodes=spec.prefix_max_nodes,
+                prefix_min_pages=spec.prefix_min_pages, obs=obs)
         return Engine(model, params, batch_slots=scfg.slots,
                       max_len=scfg.max_len, kv_mode=spec.kv,
                       eos_id=scfg.eos_id, seed=scfg.seed, obs=obs)

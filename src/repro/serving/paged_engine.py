@@ -61,10 +61,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.assist import AssistController
+from repro.assist.page_kinds import page_kind
 from repro.cache import (BlockPool, CachePolicy, TierConfig,
                          TieredKVStore, TIER_COLD, TIER_WARM,
                          decode_roofline_terms)
-from repro.cache.block_pool import PoolExhausted
+from repro.cache.block_pool import PREFIX_RID, PoolExhausted
 from repro.cache.policy import kv_site, warm_ratio
 from repro.configs.base import DEFAULT_EOS_ID
 from repro.models import ssm as SSM
@@ -111,6 +112,9 @@ class PagedEngine(EngineBase):
                  max_cold_pages: Optional[int] = None,
                  backend: str = "gather", interpret: bool = True,
                  host_sync: bool = False,
+                 prefix_reuse: bool = False,
+                 prefix_max_nodes: int = 512,
+                 prefix_min_pages: int = 1,
                  obs: Optional[Observability] = None):
         self.obs = obs if obs is not None else Observability()
         cfg = model.cfg
@@ -204,6 +208,36 @@ class PagedEngine(EngineBase):
                                   measured_ratio=warm_ratio(cfg.head_dim),
                                   metrics=metrics)
 
+        # cross-request prefix reuse (DESIGN.md 14): a radix-tree prefix
+        # store mapping known prompt-prefix pages read-only into new
+        # lanes' block tables.  Only token-page kinds that declare
+        # ``shareable`` participate; a stack with state slabs still
+        # shares token pages (dedup) but never skips prefill (the slab
+        # is only produced by running it).
+        self.prefix = None
+        self.prefix_decision = None
+        self._shareable = all(page_kind(s.page_kind).shareable
+                              for s in self.segments
+                              if page_kind(s.page_kind).grows)
+        if prefix_reuse and self._shareable and geom.hot_page_bytes:
+            from repro.assist.registry import REGISTRY
+            task = REGISTRY.get("prefix", "memoize")
+            self.prefix = task.build(
+                pool=self.pool, max_nodes=prefix_max_nodes,
+                min_pages=prefix_min_pages,
+                controller=self.policy.controller, metrics=metrics)
+            if use_roofline_trigger:
+                # SITE-LOCAL plan: the admission step the skip relieves
+                # is prefill (compute-dominant by construction), not the
+                # decode tick; a typical prompt is modeled at half max_len
+                n_active = float(cfg.active_param_count())
+                ptoks = max(max_len // 2, tier.page_size)
+                psite = self.prefix.admission_site(n_active, ptoks)
+                self.prefix_decision = self.prefix.plan(
+                    psite, self.prefix.admission_terms(n_active, ptoks))
+                if not self.prefix_decision.enabled:
+                    self.prefix.enabled = False
+
         # engine-level series (handles bound once; no-ops when obs is off)
         self._c_tokens = metrics.counter(
             "engine_tokens_generated_total", "decode tokens harvested")
@@ -225,6 +259,15 @@ class PagedEngine(EngineBase):
             "engine_queued", "requests waiting for admission")
         self._g_resident = metrics.gauge(
             "engine_resident_tokens", "tokens whose decode state is cached")
+        self._c_pskips = metrics.counter(
+            "engine_prefill_skips_total",
+            "admissions whose prefill was skipped on a full prefix hit")
+        self._c_pskip_tokens = metrics.counter(
+            "engine_prefill_skipped_tokens_total",
+            "prompt tokens never prefilled (covered by shared pages)")
+        self._c_pshared = metrics.counter(
+            "engine_prefix_shared_pages_total",
+            "prefix-store pages mapped read-only into admitted requests")
 
         self.lanes: list[Optional[int]] = [None] * lanes
         self.resident: dict[int, _RState] = {}
@@ -410,13 +453,16 @@ class PagedEngine(EngineBase):
             lane_of = {rid: i for i, rid in enumerate(self.lanes)
                        if rid is not None}
             for pid in moved:
-                owner = int(self.pool.owner[pid])
-                if owner == -1:
-                    continue
-                rid = owner if owner >= 0 else -2 - owner
-                i = lane_of.get(rid)
-                if i is not None:
-                    self._dirty_bt.add(i)
+                # a shared page maps into EVERY reader's block-table row:
+                # one physical move dirties all of them (the prefix
+                # store's own shadow ref has no lane)
+                for r in self.pool.owners_of(pid):
+                    if r == PREFIX_RID:
+                        continue
+                    rid = r if r >= 0 else -2 - r
+                    i = lane_of.get(rid)
+                    if i is not None:
+                        self._dirty_bt.add(i)
         if self.host_sync:                   # pre-PR loop: rebuild all
             self._dirty_bt.update(i for i, rid in enumerate(self.lanes)
                                   if rid is not None)
@@ -460,16 +506,33 @@ class PagedEngine(EngineBase):
 
     def _admit_one(self, req: Request, protected: set[int]) -> bool:
         plen = len(req.prompt)
+        ps = self.pool.page_size
         npg = self.pool.pages_for(plen)
-        if npg + (1 if self.has_state else 0) > self.pool.n_free:
+        # prefix-store consult (DESIGN.md 14): matched pages map into the
+        # new table READ-ONLY via pool.share -- they consume no free pages
+        # and no prefill work.  When the match covers every prompt
+        # position but the last, prefill is skipped outright and the
+        # first tick plays the final prompt token as a decode step.
+        matched: list[int] = []
+        if self.prefix is not None:
+            matched = self.prefix.match(req.prompt)
+            self._release_prefix_pages()
+        n_own = npg - len(matched)
+        full_skip = (bool(matched) and not self.has_state
+                     and len(matched) * ps >= plen - 1)
+        if n_own + (1 if self.has_state else 0) > self.pool.n_free:
             return False
-        if not self.policy.make_hot_room(self.pool, self.store, protected,
-                                         n=npg):
+        if n_own and not self.policy.make_hot_room(
+                self.pool, self.store, protected, n=n_own):
             return False
         if self.has_state and not self.policy.make_hot_room(
                 self.pool, self.store, protected, cls="state"):
             return False
-        pages = self.pool.allocate(req.rid, npg)
+        for p in matched:                        # table[:m] = shared prefix
+            self.pool.share(p, req.rid)
+            protected.add(p)
+        self._c_pshared.inc(len(matched))
+        pages = self.pool.allocate(req.rid, n_own) if n_own else []
         slots = [self.store.place_hot(p) for p in pages]
         spid = None
         if self.has_state:
@@ -477,27 +540,70 @@ class PagedEngine(EngineBase):
             self.store.place_hot_state(spid)
         tr = self.obs.tracer
         t0 = tr.now_us() if tr is not None else 0.0
-        batch = self._pad_prompt(req.prompt, self.pool.page_size)
-        tok, one_state = self._prefill(self.params, batch,
-                                       float(req.temperature), self.rng,
-                                       req.rid)
-        self.store.write_prefill(slots, self._segment_kv(one_state), S=plen)
-        if spid is not None:
-            self.store.write_state(spid, self._segment_state(one_state))
-        if tr is not None:
-            tr.instant("admit", tid=1, rid=req.rid, prompt_len=plen)
-            tr.complete("prefill", t0, tr.now_us() - t0, tid=1, rid=req.rid,
-                        bucket=int(batch["tokens"].shape[1]),
-                        prompt_len=plen, pages=npg)
+        if full_skip:
+            # every position 0..plen-2 is already cached; the first tick
+            # feeds prompt[-1] as the lane token, writes its KV (COW if
+            # that page is shared) and samples the first output token
+            self.resident[req.rid] = _RState(req, plen - 1,
+                                             int(req.prompt[plen - 1]),
+                                             req.max_new)
+            self._c_pskips.inc()
+            self._c_pskip_tokens.inc(plen)
+            if tr is not None:
+                tr.instant("admit", tid=1, rid=req.rid, prompt_len=plen)
+                tr.instant("prefix_hit", tid=1, rid=req.rid,
+                           shared_pages=len(matched), skipped=plen)
+        else:
+            # partial (or no) match: full prefill runs -- its recomputed
+            # KV for matched positions scatters into the trash slot, the
+            # tail lands in this request's own pages.  Token identity is
+            # the caller's own prefill logits; the shared pages hold
+            # bit-identical KV by causality + pad-invariant bucketing.
+            batch = self._pad_prompt(req.prompt, ps)
+            tok, one_state = self._prefill(self.params, batch,
+                                           float(req.temperature), self.rng,
+                                           req.rid)
+            self.store.write_prefill([0] * len(matched) + slots,
+                                     self._segment_kv(one_state), S=plen)
+            if spid is not None:
+                self.store.write_state(spid, self._segment_state(one_state))
+            if tr is not None:
+                tr.instant("admit", tid=1, rid=req.rid, prompt_len=plen)
+                tr.complete("prefill", t0, tr.now_us() - t0, tid=1,
+                            rid=req.rid,
+                            bucket=int(batch["tokens"].shape[1]),
+                            prompt_len=plen, pages=npg,
+                            shared_pages=len(matched))
+            # the sampled first token stays on device; it is appended to
+            # req.out (and becomes a host int) at the next harvest
+            self.resident[req.rid] = _RState(req, plen, tok[0],
+                                             req.max_new - 1)
+            self._pending_first.append((req, tok))
+        if self.prefix is not None:
+            # publish this prompt's own full pages for future admissions
+            self.prefix.insert(req.prompt, self.pool.table(req.rid))
+            self._release_prefix_pages()
         self._c_admit.inc()
-        # the sampled first token stays on device; it is appended to
-        # req.out (and becomes a host int) at the next harvest
-        self.resident[req.rid] = _RState(req, plen, tok[0], req.max_new - 1)
-        self._pending_first.append((req, tok))
         self._touch(req.rid)
         self.peak_resident_tokens = max(self.peak_resident_tokens,
                                         self.resident_tokens())
         return True
+
+    def _release_prefix_pages(self):
+        """Release tier storage of pages whose LAST reference dropped
+        inside the prefix store (node eviction / self-disable)."""
+        rel = self.prefix.drain_released()
+        if rel:
+            for pid in rel:
+                self.store.release(pid)
+            self.policy.forget_pages(rel)
+
+    def drop_prefix_cache(self):
+        """Drop every prefix-store reference (drain helper: after this,
+        retiring all requests returns the pool to fully free)."""
+        if self.prefix is not None:
+            self.prefix.drop_all()
+            self._release_prefix_pages()
 
     # -- lane maintenance ----------------------------------------------------
 
@@ -549,6 +655,19 @@ class PagedEngine(EngineBase):
                                              protected):
                 return False
             self.store.promote_to_hot(wp)
+        if self.pool.is_shared(wp):
+            # copy-on-write divergence (DESIGN.md 14): this tick WRITES
+            # the incoming token's KV into ``wp``, which other readers
+            # (sibling lanes / the prefix store) see read-only.  Break it
+            # out into a private hot copy first; the shared original
+            # keeps its slot, so no other reader's row dirties.
+            if self.pool.n_free < 1 or not self.policy.make_hot_room(
+                    self.pool, self.store, protected):
+                return False
+            new = self.pool.cow(rid, wp)
+            self.store.place_hot(new)
+            self.store.copy_hot(wp, new)
+            protected.add(new)
         return True
 
     def _fill_lanes(self, protected: set[int]):
@@ -805,7 +924,15 @@ class PagedEngine(EngineBase):
              "store": dict(self.store.stats),
              "policy": dict(self.policy.stats),
              "trigger": (dataclasses.asdict(self.policy.decision)
-                         if self.policy.decision else None)}
+                         if self.policy.decision else None),
+             "prefix": (dict(self.prefix.stats(),
+                             prefill_skips=gv("engine_prefill_skips_total")
+                             or 0,
+                             skipped_tokens=gv(
+                                 "engine_prefill_skipped_tokens_total") or 0,
+                             shared_pages=gv(
+                                 "engine_prefix_shared_pages_total") or 0)
+                        if self.prefix is not None else None)}
         if self.obs.probe is not None:
             s.update(self.obs.probe.percentiles())
         return s

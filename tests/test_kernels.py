@@ -144,6 +144,38 @@ def test_decode_attn_quant_error_small(rng):
     assert err < 0.05, err
 
 
+def test_decode_attn_nan_beyond_length_is_inert(rng):
+    """Rows past ``lengths`` may hold non-finite garbage (the paged
+    gather reads the shared trash slot, which any NaN'd forward pass can
+    poison): the masked softmax must SELECT valid rows, because a zero
+    weight does not neutralize them (0 * NaN = NaN)."""
+    B, H, G, S, D = 2, 4, 2, 64, 32
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    lengths = jnp.asarray([40, 17], jnp.int32)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    clean = da_ops.masked_decode_attn(q, k, v, valid)
+    poison = jnp.where(valid[:, None, :, None], 0.0, jnp.nan)
+    got = da_ops.masked_decode_attn(q, k + poison, v + poison, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+    # flash kernel (bf16 path), same property
+    clean_f = da_ops.decode_attn_raw(q, k, v, lengths, bs=32)
+    got_f = da_ops.decode_attn_raw(q, k + poison, v + poison, lengths, bs=32)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(clean_f))
+    # absorbed-MLA latent reference, same property
+    c = jnp.asarray(rng.standard_normal((B, S, 16)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((B, S, 8)), jnp.float32)
+    ql = jnp.asarray(rng.standard_normal((B, H, 16)), jnp.float32)
+    qr = jnp.asarray(rng.standard_normal((B, H, 8)), jnp.float32)
+    pc = jnp.where(valid[:, :, None], 0.0, jnp.nan)
+    clean_l = da_ops.masked_latent_decode_attn(ql, qr, c, r, valid, 0.25)
+    got_l = da_ops.masked_latent_decode_attn(
+        ql, qr, c + pc, r + jnp.where(valid[:, :, None], 0.0, jnp.nan),
+        valid, 0.25)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(clean_l))
+
+
 # ---------------------------------------------------------------------------
 # fused compressed-weight matmul
 # ---------------------------------------------------------------------------

@@ -1,0 +1,306 @@
+"""Cross-request prefix reuse: refcounted COW pool, radix store, engine.
+
+Pool level: share/COW/free conservation (every share is matched by an
+unshare or a live extra ref; allocate == freed at drain; double frees and
+foreign shares raise).  Store level: radix insert/match/evict round-trips
+under random workloads (hypothesis when available, seeded sweep always)
+and the dynamic-feedback self-disable publishing the memoize counters.
+Engine level: hot-only shared-prefix decode is TOKEN-IDENTICAL to an
+unshared engine on the same prompts -- through full prefill skips (the
+COW write on the last shared page), mid-page divergence, and sibling
+preemption under a single lane -- and the pool drains clean afterwards.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.assist import AssistSpec
+from repro.assist.controller import AssistController
+from repro.cache import TierConfig
+from repro.cache.block_pool import PREFIX_RID, BlockPool
+from repro.cache.prefix_store import PrefixStore
+from repro.configs import ARCHS, reduced
+from repro.models.model import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.config import ServeConfig
+from repro.serving.engine import EngineBase, Request
+from repro.serving.paged_engine import PagedEngine
+
+HOT_ONLY = TierConfig(page_size=16, hbm_budget_bytes=1 << 30,
+                      enable_warm=False, enable_cold=False)
+NO_EOS = 1 << 30                       # never fires: out of every vocab
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(ARCHS["qwen2-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# -- pool: refcount state machine -----------------------------------------
+
+
+def test_share_cow_free_conservation():
+    pool = BlockPool(8, 16)
+    a, b = pool.allocate(0, 2)
+    pool.share(a, 1)
+    pool.share(b, 1)
+    assert pool.is_shared(a) and pool.owners_of(a) == {0, 1}
+    assert pool.table(1) == [a, b]
+    pool.check()
+
+    new = pool.cow(1, a)               # rid 1 diverges on page a
+    assert new != a and pool.table(1) == [new, b]
+    assert not pool.is_shared(a) and not pool.is_shared(new)
+    pool.check()
+
+    assert pool.free_request(0) == sorted([a])   # b still read by rid 1
+    pool.check()
+    assert sorted(pool.free_request(1)) == sorted([new, b])
+    pool.check()
+    s = pool.stats
+    assert s.allocated == s.freed == 3            # a, b, cow copy
+    assert s.shared == s.unshared == 2
+    assert s.cow == 1 and pool.n_free == 8
+
+
+def test_pool_misuse_raises():
+    pool = BlockPool(4, 16)
+    (p,) = pool.allocate(0, 1)
+    with pytest.raises(ValueError):
+        pool.share(p, 0)               # duplicate reader
+    pool.share(p, 1)
+    assert not pool.drop_page(1, p)    # rid 0 still reads it
+    with pytest.raises(ValueError):
+        pool.drop_page(1, p)           # double free
+    with pytest.raises(ValueError):
+        pool.cow(0, p)                 # no longer shared: nothing to split
+    pool.free_request(0)
+    pool.check()
+    assert pool.n_free == 4
+
+
+def test_lru_order_prefers_private_victims():
+    """Eviction ordering: shared pages sort after ALL private pages, so a
+    shared hot page is never victimized while a cheaper private victim
+    exists -- regardless of recency."""
+    pool = BlockPool(8, 16)
+    shared = pool.allocate(0, 2)
+    private = pool.allocate(1, 2)
+    for p in shared:
+        pool.share(p, PREFIX_RID)
+    pool.touch(0, tick=5)              # shared pages MORE recent
+    pool.touch(1, tick=1)
+    order = pool.lru_order(shared + private)
+    assert order[:2] == private and set(order[2:]) == set(shared)
+
+
+# -- store: radix insert/match/evict round-trips --------------------------
+
+
+def _radix_roundtrip(rng, page_size=4, max_nodes=12):
+    """One randomized workload: insert a handful of correlated prompts,
+    match them all back, then drain -- checking the tree never exceeds
+    its budget, matches walk real tree paths, and the pool conserves."""
+    n_pages = 256
+    pool = BlockPool(n_pages, page_size)
+    # warmup high enough that dynamic feedback never fires mid-test
+    store = PrefixStore(pool, max_nodes=max_nodes, min_pages=1,
+                        warmup_calls=1 << 30)
+    prompts = []
+    for rid in range(int(rng.integers(2, 8))):
+        plen = (int(rng.integers(1, 6)) * page_size
+                + int(rng.integers(0, page_size)))
+        # tiny alphabet: prompts share prefixes by construction
+        prompt = [int(t) for t in rng.integers(0, 3, plen)]
+        pids = pool.allocate(rid, pool.pages_for(plen))
+        store.insert(prompt, pids)
+        prompts.append((rid, prompt))
+        assert store._n_nodes <= max_nodes
+        pool.check()
+    for rid, prompt in prompts:
+        got = store.match(prompt)
+        keys = store._page_keys(prompt)
+        assert len(got) <= len(keys)
+        level = store._root                 # each matched pid is the tree's
+        for key, pid in zip(keys, got):     # node for that exact page span
+            node = level[key]
+            assert node.pid == pid
+            level = node.children
+        pool.check()
+    store.drop_all()
+    for rid, _ in prompts:
+        pool.free_request(rid)
+    pool.check()
+    assert pool.n_free == n_pages
+    s = pool.stats
+    assert s.allocated == s.freed and s.shared == s.unshared
+
+
+def test_radix_roundtrip_seeded():
+    for seed in range(20):
+        _radix_roundtrip(np.random.default_rng(seed))
+
+
+def test_radix_roundtrip_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2 ** 32 - 1))
+    def run(seed):
+        _radix_roundtrip(np.random.default_rng(seed))
+    run()
+
+
+def test_store_full_match_when_unbounded(rng):
+    pool = BlockPool(64, 4)
+    store = PrefixStore(pool, max_nodes=1 << 20, min_pages=1,
+                        warmup_calls=1 << 30)
+    prompt = [int(t) for t in rng.integers(0, 1000, 19)]   # 4 full pages
+    pids = pool.allocate(7, pool.pages_for(19))
+    store.insert(prompt, pids)
+    assert store.match(prompt) == pids[:4]
+    assert store.match(prompt[:9]) == pids[:2]
+    assert store.match([9999] + prompt) == []
+    # a prompt sharing only the first page matches exactly that page
+    assert store.match(prompt[:4] + [9999] * 8) == pids[:1]
+
+
+def test_store_self_disable_publishes_memoize_counters(rng):
+    m = MetricsRegistry()
+    pool = BlockPool(64, 4)
+    store = PrefixStore(pool, max_nodes=32, min_pages=1, warmup_calls=1,
+                        replan_every=4,
+                        controller=AssistController(min_hit_rate=0.25),
+                        metrics=m)
+    prompt = [int(t) for t in rng.integers(0, 50, 12)]
+    pids = pool.allocate(0, 3)
+    store.insert(prompt, pids)
+    pool.free_request(0)               # store holds the last references
+    pool.check()
+    for i in range(8):                 # all misses: window rate 0 < 0.25
+        store.match([10_000 + i] * 12)
+    assert not store.enabled
+    assert m.get_value("memoize_self_disable_total", task="prefix") == 1
+    assert (m.get_value("memoize_calls_total", task="prefix") or 0) > 0
+    # self-disable released every held page back to the pool
+    assert sorted(store.drain_released()) == sorted(pids)
+    pool.check()
+    assert pool.n_free == 64 and store.match(prompt) == []
+
+
+# -- engine: shared-prefix decode identity --------------------------------
+
+
+def _run_separately(model, params, prompts, max_new, lanes=2):
+    """Reference outputs: one prefix-disabled engine per request (no
+    cross-request state of any kind)."""
+    out = {}
+    for rid, p in prompts.items():
+        eng = PagedEngine(model, params, lanes=lanes, max_len=96,
+                          tier=HOT_ONLY, eos_id=NO_EOS,
+                          use_roofline_trigger=False)
+        eng.submit(Request(rid=rid, prompt=p, max_new=max_new))
+        (done,) = eng.run()
+        out[rid] = done.out
+    return out
+
+
+def test_prefix_reuse_token_identity_and_full_skip(served_model, rng):
+    """Seed request, then: full prefill skip (COW on the last shared
+    page), mid-page divergence, full-page divergence -- all
+    token-identical to unshared decode, pool drains clean."""
+    cfg, model, params = served_model
+    base = [int(t) for t in rng.integers(2, 400, 48)]      # 3 full pages
+    prompts = {
+        0: base + [int(t) for t in rng.integers(2, 400, 3)],
+        1: base[:32],                            # full skip: 2 shared pages
+        2: base[:35] + [int(t) for t in rng.integers(401, 510, 10)],
+        3: base + [int(t) for t in rng.integers(401, 510, 7)],
+    }
+    want = _run_separately(model, params, prompts, max_new=5)
+
+    eng = PagedEngine(model, params, lanes=2, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      prefix_reuse=True)
+    assert eng.prefix is not None
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new=5))
+    eng.run()                          # seed the store with base's pages
+    for rid in (1, 2, 3):
+        eng.submit(Request(rid=rid, prompt=prompts[rid], max_new=5))
+    got = {r.rid: r.out for r in eng.run()}
+    for rid in (1, 2, 3):
+        assert got[rid] == want[rid], f"rid {rid} diverged under sharing"
+
+    st = eng.stats()["prefix"]
+    assert st["prefill_skips"] == 1            # rid 1 skipped prefill
+    assert st["skipped_tokens"] == 32
+    assert st["shared_pages"] >= 2 + 2 + 3     # rids 1-3 mapped base pages
+    assert st["hits"] > 0 and st["nodes"] > 0
+    assert eng.pool.stats.cow >= 1             # rid 1 wrote a shared page
+    # drain: store refs dropped, every page back, conservation holds
+    eng.drop_prefix_cache()
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+    s = eng.pool.stats
+    assert s.allocated == s.freed and s.shared == s.unshared
+
+
+def test_prefix_reuse_identity_under_sibling_preemption(served_model, rng):
+    """One lane, four sibling requests on one shared prefix: admission
+    preempts/parks siblings while their prefix pages stay shared
+    (hot-only parking is lossless, PR 5) -- outputs still match
+    per-request unshared decode, and nothing leaks at drain."""
+    cfg, model, params = served_model
+    base = [int(t) for t in rng.integers(2, 400, 32)]      # 2 full pages
+    prompts = {r: base + [int(t) for t in rng.integers(2, 400, 3 + r)]
+               for r in range(4)}
+    want = _run_separately(model, params, prompts, max_new=4, lanes=1)
+
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      prefix_reuse=True)
+    for rid, p in prompts.items():
+        eng.submit(Request(rid=rid, prompt=p, max_new=4))
+    got = {r.rid: r.out for r in eng.run()}
+    assert got == want
+    assert eng.stats()["prefix"]["shared_pages"] >= 2 * 3  # rids 1-3 hit
+    eng.drop_prefix_cache()
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+
+
+# -- knobs: spec/config threading (defaults regression) -------------------
+
+
+def test_prefix_knob_defaults_and_threading(served_model):
+    spec = AssistSpec()
+    assert (spec.prefix_reuse, spec.prefix_max_nodes,
+            spec.prefix_min_pages) == (False, 512, 1)
+    with pytest.raises(ValueError):
+        AssistSpec(prefix_max_nodes=0)
+    with pytest.raises(ValueError):
+        AssistSpec(prefix_min_pages=0)
+
+    # both spellings agree after folding/back-fill
+    nested = ServeConfig(arch="qwen2-7b", assist=AssistSpec(
+        paged=True, prefix_reuse=True, prefix_max_nodes=64,
+        prefix_min_pages=2))
+    flat = ServeConfig(arch="qwen2-7b", paged=True, prefix_reuse=True,
+                       prefix_max_nodes=64, prefix_min_pages=2)
+    for scfg in (nested, flat):
+        assert scfg.prefix_reuse and scfg.assist.prefix_reuse
+        assert scfg.prefix_max_nodes == scfg.assist.prefix_max_nodes == 64
+        assert scfg.prefix_min_pages == scfg.assist.prefix_min_pages == 2
+
+    # from_config threads the knobs into a live store; default stays off
+    cfg, model, params = served_model
+    eng = EngineBase.from_config(flat, model, params)
+    assert eng.prefix is not None
+    assert eng.prefix.max_nodes == 64 and eng.prefix.min_pages == 2
+    off = EngineBase.from_config(
+        ServeConfig(arch="qwen2-7b", paged=True), model, params)
+    assert off.prefix is None
