@@ -101,6 +101,12 @@ def _compare_serving(result, base, baseline_path, smoke, threshold=0.20,
     if not shared:
         raise SystemExit("--compare: no shared tokens/s scenarios between "
                          "the run and the baseline record")
+    fresh = sorted(set(new) - set(old))
+    if fresh:
+        # a scenario landing with its first record has no baseline yet:
+        # warn (so a typo'd rename is visible) but never fail on it
+        print(f"\n--compare: {len(fresh)} scenario(s) absent from "
+              f"{baseline_path} (new this run, not gated): {fresh}")
     import math
     shift = 1.0 if absolute else math.exp(
         sum(math.log(new[k] / old[k]) for k in shared) / len(shared))
@@ -139,6 +145,11 @@ def main() -> None:
                     help="comma-separated subset, e.g. fig8,fig13")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads (fast CI check)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed threaded through every benchmark "
+                         "stream that supports it (request prompts, "
+                         "session traces) -- one seed, bit-reproducible "
+                         "workloads")
     ap.add_argument("--with-tier1", action="store_true",
                     help="run the tier-1 pytest suite before the benchmarks")
     ap.add_argument("--json", action="store_true",
@@ -186,10 +197,12 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["main"])
+            params = inspect.signature(mod.main).parameters
             kwargs = {}
-            if args.smoke and \
-                    "smoke" in inspect.signature(mod.main).parameters:
+            if args.smoke and "smoke" in params:
                 kwargs["smoke"] = True
+            if "seed" in params:
+                kwargs["seed"] = args.seed
             result = mod.main(**kwargs)
             print(f"[{name}] done in {time.time() - t0:.1f}s")
             if name == "serving_micro":

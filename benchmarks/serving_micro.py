@@ -132,7 +132,7 @@ def _exec_pcts(stats: dict) -> dict:
                       "exec_samples")}
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, seed: int = 0):
     cfg = reduced(ARCHS[ARCH])
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -151,7 +151,7 @@ def run(smoke: bool = False):
     results = {}
     rows = []
     for name, spec in _assist_specs(hbm_budget).items():
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         eng = _build(model, params, spec, lanes, max_len)
         for rid in range(n_req):
             plen = int(rng.integers(18, 33))
@@ -191,7 +191,7 @@ def run(smoke: bool = False):
     return results
 
 
-def run_backends(smoke: bool = False):
+def run_backends(smoke: bool = False, seed: int = 0):
     """Per-backend tokens/s + latency, hot-only and with the warm tier in
     play.
 
@@ -224,7 +224,7 @@ def run_backends(smoke: bool = False):
     outputs = {}
     for tier_name, tier_kw in tiers.items():
         for backend in attn_backend_names():
-            rng = np.random.default_rng(0)
+            rng = np.random.default_rng(seed)
             spec = AssistSpec(paged=True, page_size=PAGE,
                               attn_backend=backend,
                               use_roofline_trigger=False, **tier_kw)
@@ -257,7 +257,7 @@ def run_backends(smoke: bool = False):
     return results, outputs
 
 
-def run_host_overhead(smoke: bool = False):
+def run_host_overhead(smoke: bool = False, seed: int = 0):
     """The host-overhead A/B (ISSUE 5 tentpole): mixed-length prompts --
     the retrace killer -- served once by the pre-PR loop (``host_sync``:
     exact-length prefill retracing per distinct prompt length, blocking
@@ -292,7 +292,7 @@ def run_host_overhead(smoke: bool = False):
     results = {}
     rows = []
     for mode, host_sync in (("host-sync", True), ("async", False)):
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         eng = PagedEngine(model, params, lanes=lanes, max_len=max_len,
                           tier=tier, eos_id=0, use_roofline_trigger=False,
                           host_sync=host_sync)
@@ -355,7 +355,7 @@ def run_host_overhead(smoke: bool = False):
     return results
 
 
-def run_local_window(smoke: bool = False):
+def run_local_window(smoke: bool = False, seed: int = 0):
     """A local-attention-window model end-to-end through the paged path
     (per-layer capability dispatch: attn + attn_local segments)."""
     import dataclasses
@@ -373,7 +373,7 @@ def run_local_window(smoke: bool = False):
                       attn_backend="pallas_int8",
                       use_roofline_trigger=False)
     n_req = 3 if smoke else 6
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     eng = _build(model, params, spec, lanes=2, max_len=48)
     for rid in range(n_req):
         eng.submit(Request(rid=rid,
@@ -389,9 +389,9 @@ def run_local_window(smoke: bool = False):
 
 
 def _capacity_run(arch: str, spec: AssistSpec, lanes: int, max_len: int,
-                  n_req: int, model, params, cfg):
+                  n_req: int, model, params, cfg, seed: int = 0):
     """Admit a stream and probe resident-token capacity + completion."""
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     eng = _build_arch(arch, model, params, spec, lanes, max_len)
     lens = []
     for rid in range(n_req):
@@ -414,7 +414,7 @@ def _build_arch(arch, model, params, spec, lanes, max_len):
     return eng
 
 
-def run_page_kinds(smoke: bool = False):
+def run_page_kinds(smoke: bool = False, seed: int = 0):
     """Resident-token capacity for the NEW page kinds (ISSUE 4): one MLA
     config (latent pages) and one hybrid (SSM state parking), tiered vs
     the bf16 DENSE-SLAB baseline under the same HBM budget.
@@ -447,7 +447,8 @@ def run_page_kinds(smoke: bool = False):
                           host_budget_bytes=budget,
                           use_roofline_trigger=False)
         capacity, finished, mean_len = _capacity_run(
-            arch_id, spec, lanes, max_len, n_req, model, params, cfg)
+            arch_id, spec, lanes, max_len, n_req, model, params, cfg,
+            seed=seed)
         slab_bytes = max_len * per_tok + geom.state_hot_bytes
         dense_slots = int(budget // slab_bytes)
         dense_capacity = dense_slots * mean_len
@@ -465,7 +466,7 @@ def run_page_kinds(smoke: bool = False):
     return results
 
 
-def run_prefix_reuse(smoke: bool = False):
+def run_prefix_reuse(smoke: bool = False, seed: int = 0):
     """Zipfian shared-prompt workload through the radix prefix store
     (ISSUE 7): a few popular prompt headers, Zipf-weighted, each request
     a header plus a short unique tail (sometimes no tail at all -- the
@@ -483,7 +484,7 @@ def run_prefix_reuse(smoke: bool = False):
                         PAGE, cfg.head_dim)
     budget = (16 if smoke else 24) * geom.hot_page_bytes
     n_req = 20 if smoke else 40
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     # Zipf-popular headers: 3 full pages each, so a reused header costs
     # 3 shared page refs instead of 3 fresh pages
     headers = [list(rng.integers(2, cfg.vocab_size, 3 * PAGE))
@@ -539,7 +540,110 @@ def run_prefix_reuse(smoke: bool = False):
     return results
 
 
-def run_trace(path: str, smoke: bool = True):
+def run_sessions(smoke: bool = False, seed: int = 0):
+    """Multi-turn sessions under trace-driven load (ISSUE 8 tentpole):
+    the SAME deterministic trace (repro.sessions.loadgen -- seeded
+    arrivals, Zipfian shared headers, heavy-tailed turn gaps) served in
+    two modes over one tiered budget:
+
+      park       conversations park between turns (pages pushed down the
+                 tier ladder in one batched episode, predictively
+                 re-promoted before the next turn) and resume WITHOUT
+                 re-prefilling history -- only unseen tokens replay
+                 through the decode step
+      reprefill  the stateless baseline: every turn re-prefills the full
+                 accumulated history
+
+    Reports GOODPUT UNDER SLO per latency class (turns whose last token
+    lands within the class budget of the turn becoming ready), not just
+    tokens/s.  Asserts the resume-without-reprefill bar: >= 1 session
+    resumes by replay, and park mode prefills strictly fewer prompt
+    tokens than the baseline.
+    """
+    from repro.sessions import SessionManager, SessionSpec, make_trace
+    from repro.sessions.spec import SLOClass
+    cfg = reduced(ARCHS[ARCH])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+    budget = (16 if smoke else 24) * geom.hot_page_bytes
+    max_len, lanes = 96, 2
+    n_sessions = 4 if smoke else 10
+    traces = make_trace(n_sessions=n_sessions, seed=seed,
+                        vocab_size=cfg.vocab_size, page_size=PAGE,
+                        max_len=max_len, mean_turns=2.5,
+                        turn_tokens=(6, 14), max_new=4 if smoke else 6,
+                        n_prefixes=2, arrival_rate=0.5,
+                        gap_mean=3.0, gap_cap=10 if smoke else 20)
+    n_turns = sum(len(t.turns) for t in traces)
+    # wide-but-real budgets for the toy CPU model: interactive turns must
+    # land an order of magnitude faster than batch is allowed to
+    classes = (SLOClass("interactive", priority=0, turn_budget_ticks=40),
+               SLOClass("batch", priority=1, turn_budget_ticks=400))
+    aspec = AssistSpec(paged=True, page_size=PAGE, hbm_budget_bytes=budget,
+                       hot_fraction=0.5, enable_warm=True, enable_cold=True,
+                       host_budget_bytes=budget, use_roofline_trigger=False)
+    results, rows = {}, []
+    for mode, park in (("park", True), ("reprefill", False)):
+        # "replay" pins the resume decision so the asserted bar measures
+        # the mechanism; the "auto" cost rule is exercised in tests
+        sspec = SessionSpec(park=park, resume_policy="replay",
+                            classes=classes)
+        scfg = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
+                           max_len=max_len, eos_id=0, assist=aspec,
+                           sessions=sspec)
+        eng, _, _ = scfg.build(model, params)
+        mgr = SessionManager(eng, scfg.session_spec(), traces)
+        eng.sync()
+        t0 = time.time()
+        rep = mgr.run(max_ticks=800 if smoke else 3000)
+        eng.sync()
+        dt = time.time() - t0
+        assert mgr.done(), f"{mode}: sessions did not finish " \
+            f"({[s.state for s in mgr.sessions]})"
+        eng.pool.check()
+        rep["tokens_per_s"] = eng.tokens_generated / max(dt, 1e-9)
+        results[mode] = rep
+        for cname, c in rep["per_class"].items():
+            rows.append([mode, cname, c["turns"], c["turns_ok"],
+                         c["slo_violations"], c["budget_ticks"],
+                         c["p95_latency_ticks"],
+                         rep["resumes_replay"], rep["resumes_reprefill"],
+                         rep["replayed_tokens"],
+                         rep["prefilled_prompt_tokens"]])
+    print_table(
+        f"serving_micro sessions: {n_sessions} sessions / {n_turns} turns, "
+        f"trace seed={seed}, park-and-resume vs stateless re-prefill",
+        ["mode", "class", "turns", "ok", "viol", "budget_tk", "p95_tk",
+         "res_replay", "res_reprefill", "replayed_tok", "prefilled_tok"],
+        rows)
+    # acceptance bars (ISSUE 8): >= 1 session resumed WITHOUT re-prefill,
+    # park mode prefilled strictly fewer prompt tokens than the stateless
+    # baseline, and both modes completed every turn of every session
+    park_r, base_r = results["park"], results["reprefill"]
+    assert park_r["resumes_replay"] >= 1, park_r
+    assert park_r["replayed_tokens"] > 0, park_r
+    assert park_r["resumes_reprefill"] == 0, park_r
+    assert base_r["resumes_replay"] == 0, base_r
+    assert park_r["prefilled_prompt_tokens"] \
+        < base_r["prefilled_prompt_tokens"], (park_r, base_r)
+    for mode, rep in results.items():
+        turns_done = sum(c["turns"] for c in rep["per_class"].values())
+        assert turns_done == n_turns, (mode, turns_done, n_turns)
+    print(f"[serving_micro] sessions PASS: {park_r['resumes_replay']} "
+          f"replay resumes (0 re-prefills) in park mode; prompt tokens "
+          f"prefilled {base_r['prefilled_prompt_tokens']} -> "
+          f"{park_r['prefilled_prompt_tokens']}; goodput "
+          + ", ".join(f"{c}={rep['goodput_frac']:.2f}"
+                      if (rep := park_r['per_class'][c])['turns'] else
+                      f"{c}=n/a"
+                      for c in park_r['per_class']))
+    return results
+
+
+def run_trace(path: str, smoke: bool = True, seed: int = 0):
     """Decode one tiered scenario with tracing on and write a Chrome
     trace-event JSON (load in Perfetto / chrome://tracing).
 
@@ -563,7 +667,7 @@ def run_trace(path: str, smoke: bool = True):
                        obs=ObsSpec(trace=True))
     obs = Observability(scfg.obs)
     eng, _, _ = scfg.build(model, params, obs=obs)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     n_req = 6 if smoke else 16
     for rid in range(n_req):
         eng.submit(Request(rid=rid,
@@ -577,8 +681,8 @@ def run_trace(path: str, smoke: bool = True):
     return n_events
 
 
-def main(smoke: bool = False):
-    res = run(smoke=smoke)
+def main(smoke: bool = False, seed: int = 0):
+    res = run(smoke=smoke, seed=seed)
     hot = res["hot-only"]["capacity"]
     warm = res["hot+warm"]["capacity"]
     cold = res["hot+warm+cold"]["capacity"]
@@ -592,7 +696,7 @@ def main(smoke: bool = False):
           f"{cold} (cold) resident tokens under one HBM budget "
           f"({cold / hot:.2f}x >= 2x)")
 
-    overhead = run_host_overhead(smoke=smoke)
+    overhead = run_host_overhead(smoke=smoke, seed=seed)
     # acceptance bar (ISSUE 5): the host-sync-free loop beats the pre-PR
     # loop >= 1.5x end-to-end on the mixed-length stream (recompile
     # elimination dominates) with the bucketed compile count bounded
@@ -604,7 +708,7 @@ def main(smoke: bool = False):
           f"{overhead['async']['prefill_compiles']} "
           f"(<= {overhead['n_buckets']} buckets)")
 
-    bres, bouts = run_backends(smoke=smoke)
+    bres, bouts = run_backends(smoke=smoke, seed=seed)
     backends = attn_backend_names()
     # equivalence bar on live traffic: hot-only greedy outputs identical
     ref = bouts[("hot-only", backends[0])]
@@ -616,8 +720,8 @@ def main(smoke: bool = False):
     assert len(done) == 1, f"warm-mode finished counts diverge: {done}"
     print(f"[serving_micro] backends PASS: {', '.join(backends)} "
           f"token-identical hot-only, all complete with int8 warm")
-    run_local_window(smoke=smoke)
-    kinds = run_page_kinds(smoke=smoke)
+    run_local_window(smoke=smoke, seed=seed)
+    kinds = run_page_kinds(smoke=smoke, seed=seed)
     # acceptance bar (ISSUE 4): the tiered MLA config holds >= 2x the
     # resident tokens of bf16 dense slabs under the same HBM budget, and
     # every admitted request completes for both new page kinds
@@ -629,7 +733,7 @@ def main(smoke: bool = False):
           f"{mla['ratio']:.2f}x >= 2x the dense-slab resident tokens; "
           f"hybrid state parking ratio "
           f"{kinds['hybrid-state']['ratio']:.2f}x")
-    prefix = run_prefix_reuse(smoke=smoke)
+    prefix = run_prefix_reuse(smoke=smoke, seed=seed)
     # acceptance bar (ISSUE 7): the prefix store buys >= 1.5x resident
     # logical tokens on the Zipf shared-prompt stream with a nonzero
     # prefill-skip rate, and every request completes in both configs
@@ -641,17 +745,21 @@ def main(smoke: bool = False):
           f"{prefix['capacity_ratio']:.2f}x >= 1.5x resident tokens, "
           f"{prefix['enabled']['prefill_skips']} prefill skips "
           f"({100 * prefix['enabled']['skip_rate']:.0f}% of admissions)")
+    sessions = run_sessions(smoke=smoke, seed=seed)
     # one JSON-able record per section: benchmarks/run.py --json persists
     # this as BENCH_serving.json (the cross-PR perf trajectory)
     return {"tiers": res,
             "host_overhead": overhead,
             "backends": {f"{t}/{b}": v for (t, b), v in bres.items()},
             "page_kinds": kinds,
-            "prefix_reuse": prefix}
+            "prefix_reuse": prefix,
+            "sessions": sessions}
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(smoke=a.smoke, seed=a.seed)

@@ -59,6 +59,9 @@ class AssistSpec:
                         (refcounted read-only page sharing + COW)
       prefix_max_nodes  radix-tree node budget (one page held per node)
       prefix_min_pages  shortest shareable prefix, in full pages
+      prefix_prefetch   route cold matched radix pages through the WaSP
+                        prefetch queue ahead of the prefill dispatch
+                        (counted on ``prefetch_issued_total{kind=prefix}``)
     """
     # serving / KV compress site
     kv: str = "bf16"
@@ -90,6 +93,7 @@ class AssistSpec:
     prefix_reuse: bool = False
     prefix_max_nodes: int = 512
     prefix_min_pages: int = 1
+    prefix_prefetch: bool = True
 
     def __post_init__(self):
         if self.prefix_max_nodes < 1:

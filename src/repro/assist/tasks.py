@@ -209,6 +209,20 @@ class PrefetchTask:
             "cold pages at swap-in (legacy miss: issued or not)")
         self._g_queue = self.metrics.gauge(
             "prefetch_queue_depth", "pages queued for cold->warm promotion")
+        # per-consumer issue counter: the queue serves several producers
+        # (lane lookahead, prefix-store re-promotion, session resume) and
+        # the kind label keeps their traffic separable without touching
+        # the outcome-conservation family above
+        self._c_kind: dict = {}
+
+    def _issued_kind(self, kind: str):
+        c = self._c_kind.get(kind)
+        if c is None:
+            c = self._c_kind[kind] = self.metrics.counter(
+                "prefetch_issued_total",
+                "pages entering the prefetch queue, by consumer kind",
+                kind=kind)
+        return c
 
     @property
     def counters(self) -> dict:
@@ -245,12 +259,19 @@ class PrefetchTask:
 
     # -- queue mechanics ------------------------------------------------------
 
-    def schedule(self, page_ids):
-        """Queue cold pages of a soon-to-run request for async promotion."""
+    def schedule(self, page_ids, kind: str = "lookahead"):
+        """Queue cold pages of a soon-to-run request for async promotion.
+
+        ``kind`` names the producer ("lookahead" for the engine's closing-
+        lane WaSP scan, "prefix" for matched radix pages at admission,
+        "session" for a parked conversation's pre-turn re-promotion) and
+        lands on ``prefetch_issued_total{kind=}``."""
+        c_kind = self._issued_kind(kind)
         for p in page_ids:
             if p not in self._queue and p not in self._outstanding:
                 self._queue.append(p)
                 self._c["issued"].inc()
+                c_kind.inc()
                 self._outstanding.add(p)
         self._g_queue.set(len(self._queue))
 

@@ -226,11 +226,50 @@ class CachePolicy:
             self.prefetch.discard_prefetched(victim)
         return free_warm() >= n
 
+    # -- session-granular park batch (DESIGN.md 15) ---------------------------
+
+    def park_pages(self, pool: BlockPool, store: TieredKVStore,
+                   page_ids, protected: set[int]) -> int:
+        """Explicitly push a parked session's pages down the tier ladder
+        (hot -> warm -> cold) in ONE batched-mover episode, instead of
+        waiting for LRU capacity pressure to do it page by page.
+
+        Respects the same gates as capacity eviction: the AWC trigger can
+        veto compression outright (hot-only parking is then lossless),
+        ``protected`` pages (still read by an active lane, e.g. a shared
+        prefix) are skipped, and a full host budget stops the cold phase
+        without failing the park.  Returns the number of tier moves."""
+        moved = 0
+        with store.deferred():
+            if self.compression_enabled:
+                for pid in page_ids:
+                    if pid in protected or store.tier[pid] != TIER_HOT:
+                        continue
+                    cls = store.cls_of(pid)
+                    if store.n_free_warm_cls(cls) == 0 and \
+                            not self.make_warm_room(pool, store, protected,
+                                                    cls=cls):
+                        continue
+                    store.demote_to_warm(pid)
+                    moved += 1
+            if self.cold_enabled:
+                for pid in page_ids:
+                    if pid in protected or store.tier[pid] != TIER_WARM:
+                        continue
+                    try:
+                        store.demote_to_cold(pid)
+                    except PoolExhausted:   # host budget full: park warm
+                        break
+                    self.prefetch.discard_prefetched(pid)
+                    moved += 1
+        return moved
+
     # -- prefetch task delegation (WaSP lookahead, paper 8.2) ----------------
 
-    def schedule_prefetch(self, page_ids):
-        """Queue cold pages of a soon-to-run request for async promotion."""
-        self.prefetch.schedule(page_ids)
+    def schedule_prefetch(self, page_ids, kind: str = "lookahead"):
+        """Queue cold pages of a soon-to-run request for async promotion.
+        ``kind`` labels the producer on ``prefetch_issued_total``."""
+        self.prefetch.schedule(page_ids, kind=kind)
 
     def drain_prefetch(self, pool: BlockPool, store: TieredKVStore,
                        protected: set[int]):

@@ -860,6 +860,30 @@ class TieredKVStore:
         self.dirty_pids.add(pid)
         self._c_promote[("warm", cls)].inc()
 
+    def promote_many(self, pids) -> list[int]:
+        """cold -> warm for a BATCH of pages in one dispatch episode (the
+        session-resume swap-in, DESIGN.md 15).
+
+        Each page's unpacked planes ship via async ``jax.device_put`` and
+        every pool write lands as ONE batched scatter per segment through
+        :meth:`commit_promotions`, so a parked conversation's K-page
+        swap-in costs O(1) device dispatches instead of K blocking
+        unpack+write calls.  Pages that are not cold are skipped; the
+        batch stops early if a warm slot class runs out (the caller made
+        room first, so that is a caller bug surfaced by the short return).
+        Returns the pages actually promoted, already committed."""
+        done: list[int] = []
+        for pid in pids:
+            if self.tier[pid] != TIER_COLD:
+                continue
+            if not self._free_warm[self.cls_of(pid)]:
+                break
+            self.promote_to_warm(pid, async_=True)
+            done.append(pid)
+        if done:
+            self.commit_promotions()
+        return done
+
     def commit_page(self, pid: int):
         """Land one page's in-flight promotion now (no-op if none).  Used
         when a page is about to be read this tick -- joins a decode block

@@ -82,6 +82,25 @@ def main(argv=None):
                          "node; LRU leaves evicted past it)")
     ap.add_argument("--prefix-min-pages", type=int, default=1,
                     help="shortest shareable prefix, in full pages")
+    # multi-turn sessions (repro.sessions, DESIGN.md 15; paged engine)
+    # dest avoids the ServeConfig.sessions field (a SessionSpec): the
+    # vars(args)-to-fields filter below must not plant this int there
+    ap.add_argument("--sessions", dest="n_sessions", type=int,
+                    default=None, metavar="N",
+                    help="serve N multi-turn sessions from the seeded "
+                         "load generator instead of one-shot requests: "
+                         "conversations park between turns and resume "
+                         "without re-prefilling history")
+    ap.add_argument("--no-session-park", dest="session_park",
+                    action="store_false",
+                    help="stateless baseline: drop pages between turns "
+                         "and re-prefill the full history each turn")
+    ap.add_argument("--session-resume", default="auto",
+                    choices=("auto", "replay", "reprefill"),
+                    help="resume policy for parked sessions (auto = the "
+                         "promotion-cost vs re-prefill rule)")
+    ap.add_argument("--session-turns", type=float, default=3.0,
+                    help="mean turns per generated session")
     # observability (repro.obs, DESIGN.md 13)
     ap.add_argument("--no-obs", action="store_true",
                     help="disable all telemetry (counters, probe, trace): "
@@ -119,13 +138,47 @@ def main(argv=None):
     cfg = model.cfg
     rng = np.random.default_rng(scfg.seed)
     t0 = time.time()
-    for rid in range(scfg.requests):
-        plen = int(rng.integers(4, scfg.max_len - scfg.max_new - 1))
-        eng.submit(Request(rid=rid,
-                           prompt=list(rng.integers(2, cfg.vocab_size,
-                                                    plen)),
-                           max_new=scfg.max_new))
-    done = eng.run()
+    if args.n_sessions is not None:
+        # trace-driven multi-turn serving (repro.sessions): parked turns
+        # keep their pages; goodput is accounted per SLO class
+        if not scfg.assist.paged:
+            raise SystemExit("--sessions needs --paged (the session "
+                             "layer parks pages, not slots)")
+        import dataclasses as _dc
+        from repro.sessions import SessionManager, make_trace
+        sspec = _dc.replace(scfg.session_spec(),
+                            resume_policy=args.session_resume)
+        traces = make_trace(n_sessions=args.n_sessions, seed=scfg.seed,
+                            vocab_size=cfg.vocab_size,
+                            page_size=scfg.page_size,
+                            max_len=scfg.max_len,
+                            mean_turns=args.session_turns,
+                            max_new=scfg.max_new)
+        mgr = SessionManager(eng, sspec, traces)
+        rep = mgr.run()
+        dt = time.time() - t0
+        n_tok = eng.tokens_generated
+        print(f"\n{rep['sessions']} sessions / {rep['turns']} turns, "
+              f"{n_tok} tokens in {dt:.1f}s ({n_tok / max(dt, 1e-9):.1f} "
+              f"tok/s); resumes: {rep['resumes_replay']} replay / "
+              f"{rep['resumes_reprefill']} re-prefill, "
+              f"{rep['replayed_tokens']} tokens replayed")
+        for cls_name, c in rep["per_class"].items():
+            gp = (f"{c['goodput_frac']:.2f}"
+                  if c["goodput_frac"] is not None else "n/a")
+            print(f"  {cls_name:12s} turns={c['turns']:3d} "
+                  f"ok={c['turns_ok']:3d} viol={c['slo_violations']:3d} "
+                  f"goodput={gp} p95={c['p95_latency_ticks']} ticks "
+                  f"(budget {c['budget_ticks']})")
+        done = eng.finished
+    else:
+        for rid in range(scfg.requests):
+            plen = int(rng.integers(4, scfg.max_len - scfg.max_new - 1))
+            eng.submit(Request(rid=rid,
+                               prompt=list(rng.integers(2, cfg.vocab_size,
+                                                        plen)),
+                               max_new=scfg.max_new))
+        done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.out) for r in done)
     for r in sorted(done, key=lambda r: r.rid)[:8]:

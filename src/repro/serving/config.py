@@ -61,7 +61,13 @@ class ServeConfig:
     prefix_reuse: bool = False
     prefix_max_nodes: int = 512
     prefix_min_pages: int = 1
+    prefix_prefetch: bool = True
     assist: Optional[AssistSpec] = None
+    # multi-turn sessions (repro.sessions, DESIGN.md 15): None means the
+    # one-shot serving path; ``session_park`` is the flat CLI alias for
+    # the spec's park switch (False = stateless re-prefill baseline)
+    sessions: Optional[object] = None
+    session_park: bool = True
     # observability (repro.obs): counters + execution probe on by default,
     # traces off; None folds to the default ObsSpec in __post_init__
     obs: Optional[ObsSpec] = None
@@ -76,7 +82,8 @@ class ServeConfig:
                 max_cold_pages=self.max_cold_pages,
                 prefix_reuse=self.prefix_reuse,
                 prefix_max_nodes=self.prefix_max_nodes,
-                prefix_min_pages=self.prefix_min_pages))
+                prefix_min_pages=self.prefix_min_pages,
+                prefix_prefetch=self.prefix_prefetch))
         else:
             # an explicit spec is authoritative: back-fill the flat
             # aliases so both spellings always agree (code reading
@@ -94,10 +101,22 @@ class ServeConfig:
                                  ("prefix_max_nodes",
                                   spec.prefix_max_nodes),
                                  ("prefix_min_pages",
-                                  spec.prefix_min_pages)):
+                                  spec.prefix_min_pages),
+                                 ("prefix_prefetch",
+                                  spec.prefix_prefetch)):
                 object.__setattr__(self, field, value)
         if self.obs is None:
             object.__setattr__(self, "obs", ObsSpec())
+
+    def session_spec(self):
+        """The SessionSpec this config serves under (lazy import: the
+        sessions package sits ABOVE serving, so config only names it).
+        An explicit ``sessions`` spec is authoritative; otherwise the
+        flat ``session_park`` alias folds into a default spec."""
+        from repro.sessions.spec import SessionSpec
+        if self.sessions is not None:
+            return self.sessions
+        return SessionSpec(park=self.session_park)
 
     # -- derived configs ------------------------------------------------------
 

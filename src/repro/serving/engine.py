@@ -95,7 +95,8 @@ class EngineBase:
                 interpret=spec.interpret,
                 prefix_reuse=spec.prefix_reuse,
                 prefix_max_nodes=spec.prefix_max_nodes,
-                prefix_min_pages=spec.prefix_min_pages, obs=obs)
+                prefix_min_pages=spec.prefix_min_pages,
+                prefix_prefetch=spec.prefix_prefetch, obs=obs)
         return Engine(model, params, batch_slots=scfg.slots,
                       max_len=scfg.max_len, kv_mode=spec.kv,
                       eos_id=scfg.eos_id, seed=scfg.seed, obs=obs)

@@ -84,11 +84,20 @@ class _RState:
     harvested, or a device scalar while the sample is still in flight
     (fresh admission) -- either feeds the token-injection scatter when the
     request enters a lane.
+
+    ``forced`` is the teacher-forcing queue of a RESUMED session turn
+    (DESIGN.md 15): known tokens (the turn's prompt, plus the parked
+    history's one uncached tail token) that are fed through the decode
+    step to grow the cache WITHOUT re-prefilling history.  While it is
+    non-empty the model's samples are discarded, the budget does not
+    advance, and the next tick's input comes from this queue.
     """
     req: Request
     length: int          # tokens whose KV is in the cache (incl. in-flight)
     last_tok: Union[int, jax.Array]
     remaining: int
+    forced: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
 
 
 @jax.jit
@@ -115,6 +124,7 @@ class PagedEngine(EngineBase):
                  prefix_reuse: bool = False,
                  prefix_max_nodes: int = 512,
                  prefix_min_pages: int = 1,
+                 prefix_prefetch: bool = True,
                  obs: Optional[Observability] = None):
         self.obs = obs if obs is not None else Observability()
         cfg = model.cfg
@@ -132,6 +142,7 @@ class PagedEngine(EngineBase):
         self.n_lanes = lanes
         self.maxp = max_len // tier.page_size
         self.host_sync = host_sync
+        self.prefix_prefetch = prefix_prefetch
         self.bucket_prefill = not host_sync
         self.segments = T.paged_segments(cfg)
         geom = T.paged_geometry(cfg, tier.page_size)
@@ -268,12 +279,28 @@ class PagedEngine(EngineBase):
         self._c_pshared = metrics.counter(
             "engine_prefix_shared_pages_total",
             "prefix-store pages mapped read-only into admitted requests")
+        # session lifecycle (DESIGN.md 15): parked conversations keep
+        # their pages across retirements and resume by forced replay
+        self._c_parks = metrics.counter(
+            "engine_session_parks_total",
+            "retired requests parked as sessions (pages kept)")
+        self._c_resumes = metrics.counter(
+            "engine_session_resumes_total",
+            "parked sessions resumed without history re-prefill")
+        self._c_replayed = metrics.counter(
+            "engine_replayed_tokens_total",
+            "known tokens teacher-forced through the decode step on resume")
+        self._g_parked_sessions = metrics.gauge(
+            "engine_parked_sessions",
+            "sessions parked between turns (pages resident, no request)")
 
         self.lanes: list[Optional[int]] = [None] * lanes
         self.resident: dict[int, _RState] = {}
         self.parked: collections.deque[int] = collections.deque()
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self._park_on_retire: set[int] = set()
+        self._parked_sessions: dict[int, int] = {}   # rid -> cached length
         self.rng = jax.random.PRNGKey(seed)
         self._init_intake()
         self.tick_no = 0
@@ -364,8 +391,8 @@ class PagedEngine(EngineBase):
         lag correction benchmark windows add to ``tokens_generated``."""
         if self._inflight is None:
             return 0
-        return sum(1 for _, rid, _ in self._inflight[1]
-                   if rid in self.resident)
+        return sum(1 for _, rid, _, keep in self._inflight[1]
+                   if keep and rid in self.resident)
 
     def _touch(self, rid: int):
         self.pool.touch(rid, self.tick_no)
@@ -466,28 +493,29 @@ class PagedEngine(EngineBase):
         if self.host_sync:                   # pre-PR loop: rebuild all
             self._dirty_bt.update(i for i, rid in enumerate(self.lanes)
                                   if rid is not None)
-        if not self._dirty_bt:
+        if not self._dirty_bt and not self._dirty_tok:
             return
-        idx = np.full(self.n_lanes, self.n_lanes, np.int32)
-        rows = np.zeros((self.n_lanes, self.maxp), np.int32)
-        for j, i in enumerate(sorted(self._dirty_bt)):
-            rid = self.lanes[i]
-            if rid is not None:
-                st = self.resident[rid]
-                table = self.pool.table(rid)
-                self._bt_host[i, :] = 0
-                self._bt_host[i, :len(table)] = \
-                    [self.store.encoded_loc(p) for p in table]
-                self._lengths[i] = st.length
-                self._temps[i] = st.req.temperature
-                if self.has_state:
-                    spid = self.pool.table(self._state_rid(rid))[0]
-                    self._state_slots[i] = self.store.state_hot_slot(spid)
-            idx[j] = i
-            rows[j] = self._bt_host[i]
-        self._bt_dev = _scatter_rows(self._bt_dev, jnp.asarray(idx),
-                                     jnp.asarray(rows))
-        self._dirty_bt.clear()
+        if self._dirty_bt:
+            idx = np.full(self.n_lanes, self.n_lanes, np.int32)
+            rows = np.zeros((self.n_lanes, self.maxp), np.int32)
+            for j, i in enumerate(sorted(self._dirty_bt)):
+                rid = self.lanes[i]
+                if rid is not None:
+                    st = self.resident[rid]
+                    table = self.pool.table(rid)
+                    self._bt_host[i, :] = 0
+                    self._bt_host[i, :len(table)] = \
+                        [self.store.encoded_loc(p) for p in table]
+                    self._lengths[i] = st.length
+                    self._temps[i] = st.req.temperature
+                    if self.has_state:
+                        spid = self.pool.table(self._state_rid(rid))[0]
+                        self._state_slots[i] = self.store.state_hot_slot(spid)
+                idx[j] = i
+                rows[j] = self._bt_host[i]
+            self._bt_dev = _scatter_rows(self._bt_dev, jnp.asarray(idx),
+                                         jnp.asarray(rows))
+            self._dirty_bt.clear()
         if self._dirty_tok:
             tidx = np.full(self.n_lanes, self.n_lanes, np.int32)
             vals: list = []
@@ -517,6 +545,19 @@ class PagedEngine(EngineBase):
         if self.prefix is not None:
             matched = self.prefix.match(req.prompt)
             self._release_prefix_pages()
+            if self.prefix_prefetch and matched:
+                # predictive WaSP re-promotion: matched radix pages that
+                # sit cold go through the prefetch queue AHEAD of the
+                # prefill dispatch, instead of promoting on first touch
+                cold_m = [p for p in matched
+                          if self.store.tier[p] == TIER_COLD]
+                if cold_m:
+                    self.policy.schedule_prefetch(cold_m, kind="prefix")
+                    self.policy.drain_prefetch(self.pool, self.store,
+                                               protected)
+                    self.policy.account_swap_in(
+                        matched, [p for p in cold_m
+                                  if self.store.tier[p] == TIER_COLD])
         n_own = npg - len(matched)
         full_skip = (bool(matched) and not self.has_state
                      and len(matched) * ps >= plen - 1)
@@ -639,13 +680,18 @@ class PagedEngine(EngineBase):
             self.store.place_hot(pid)
             protected.add(pid)
             table = self.pool.table(rid)
+        cold = [p for p in table if self.store.tier[p] == TIER_COLD]
+        if cold:
+            # swap-in promotion for the whole cold run in ONE batched
+            # episode (the session-resume path can carry a full parked
+            # history here) instead of K blocking unpack+write calls
+            if not self.policy.make_warm_room(self.pool, self.store,
+                                              protected, n=len(cold)):
+                return False
+            if len(self.store.promote_many(cold)) != len(cold):
+                return False
         for pid in table:
-            if self.store.tier[pid] == TIER_COLD:     # blocking promotion
-                if not self.policy.make_warm_room(self.pool, self.store,
-                                                  protected):
-                    return False
-                self.store.promote_to_warm(pid)
-            else:
+            if self.store.tier[pid] != TIER_COLD:
                 # page may have been async-promoted THIS tick (after the
                 # tick-start barrier): land it before the gather reads it
                 self.store.commit_page(pid)
@@ -792,9 +838,18 @@ class PagedEngine(EngineBase):
             rid = self.lanes[i]
             st = self.resident[rid]
             st.length += 1                  # host-known: the write position
-            st.remaining -= 1               # and budget advance at dispatch
             self._lengths[i] += 1
-            snapshot.append((i, rid, st.remaining))
+            if st.forced:
+                # resumed-session replay: the cache just absorbed a KNOWN
+                # token's KV; next tick's input comes from the replay
+                # queue, the model's sample is discarded at harvest
+                # (keep=False) and the budget does not advance
+                st.last_tok = st.forced.popleft()
+                self._dirty_tok.add(i)
+                snapshot.append((i, rid, st.remaining, False))
+                continue
+            st.remaining -= 1               # budget advance at dispatch
+            snapshot.append((i, rid, st.remaining, True))
             if st.remaining <= 0:
                 # budget exhausted (no readback needed): free the lane now;
                 # the final token is in flight and retires at harvest
@@ -823,7 +878,7 @@ class PagedEngine(EngineBase):
                 if self.store.tier[spid] == TIER_COLD:
                     cold.append(spid)
             if cold:
-                self.policy.schedule_prefetch(cold)
+                self.policy.schedule_prefetch(cold, kind="lookahead")
         return True
 
     def _harvest(self, prev) -> bool:
@@ -843,10 +898,12 @@ class PagedEngine(EngineBase):
                 st.last_tok = tok
         if prev is not None:
             nxt = np.asarray(vals[-1])
-            for i, rid, rem in prev[1]:
+            for i, rid, rem, keep in prev[1]:
                 st = self.resident.get(rid)
                 if st is None:
                     continue              # retired earlier: junk past EOS
+                if not keep:
+                    continue              # replay tick: sample discarded
                 tok = int(nxt[i])
                 st.req.out.append(tok)
                 st.last_tok = tok
@@ -865,15 +922,134 @@ class PagedEngine(EngineBase):
         if self.obs.tracer is not None:
             self.obs.tracer.instant("retire", tid=1, rid=rid,
                                     out_tokens=len(st.req.out))
+        for i, r in enumerate(self.lanes):
+            if r == rid:
+                self._vacate(i)
+        if rid in self._park_on_retire:
+            # session park (DESIGN.md 15): KEEP every page this rid owns
+            # -- token pages, MLA latents, state slab, shared-prefix refs
+            # -- so the next turn resumes against the cached history.
+            # ``st.length`` is exactly the number of cached positions
+            # (the prompt+output prefix whose KV the store holds).
+            self._park_on_retire.discard(rid)
+            self._parked_sessions[rid] = st.length
+            self._c_parks.inc()
+            self._g_parked_sessions.set(len(self._parked_sessions))
+            if self.obs.tracer is not None:
+                self.obs.tracer.instant("session_park", tid=1, rid=rid,
+                                        cached_len=st.length)
+            return
         freed = self.pool.free_request(rid)
         if self.has_state:
             freed += self.pool.free_request(self._state_rid(rid))
         for pid in freed:
             self.store.release(pid)
         self.policy.forget_pages(freed)
+
+    # -- session lifecycle (DESIGN.md 15) ------------------------------------
+
+    def park_on_retire(self, rid: int):
+        """Mark a request (queued or resident) so its retirement parks
+        the session: every page it owns stays allocated, recorded under
+        ``_parked_sessions`` for a later :meth:`resume_session`.  Call
+        AFTER ``submit`` -- submit may recycle a colliding rid."""
+        self._park_on_retire.add(rid)
+
+    def parked_session_len(self, rid: int) -> int:
+        """Cached positions a parked session holds (the prompt+output
+        prefix whose decode state is still in the store)."""
+        return self._parked_sessions[rid]
+
+    def session_pages(self, rid: int) -> list[int]:
+        """Every page a (parked or resident) session owns: token pages
+        in table order plus the state slab."""
+        pages = list(self.pool.table(rid))
+        if self.has_state:
+            pages += list(self.pool.table(self._state_rid(rid)))
+        return pages
+
+    def park_session_pages(self, rid: int) -> int:
+        """Push a parked session's pages down the tier ladder NOW (one
+        batched-mover episode) instead of waiting for LRU pressure --
+        frees hot capacity for live traffic during the turn gap."""
+        if rid not in self._parked_sessions:
+            raise KeyError(f"rid {rid} is not parked")
+        return self.policy.park_pages(self.pool, self.store,
+                                      self.session_pages(rid),
+                                      self._protected())
+
+    def prefetch_session(self, rid: int):
+        """Predictive re-promotion ahead of the next turn (the WaSP
+        prefetch idea lifted from pages to sessions): queue the parked
+        session's cold pages so promotion hides behind current decode."""
+        if rid not in self._parked_sessions:
+            return
+        cold = [p for p in self.session_pages(rid)
+                if self.store.tier[p] == TIER_COLD]
+        if cold:
+            self.policy.schedule_prefetch(cold, kind="session")
+
+    def resume_session(self, req: Request, replay):
+        """Resume a parked session WITHOUT re-prefilling its history.
+
+        ``req.rid`` must be the parked rid.  ``replay`` is the token
+        stream the cache has NOT seen: ``history[cached_len:]`` (zero or
+        one tail token, depending on how the previous turn retired) plus
+        the new turn's tokens -- at least one token, since the decode
+        step needs an input.  Replay tokens are teacher-forced through
+        the decode step (the budget does not advance); sampling resumes
+        after the last one.  The request joins the parked deque and
+        competes for a lane like any resident request."""
+        rid = req.rid
+        hlen = self._parked_sessions.pop(rid)
+        replay = [int(t) for t in replay]
+        if not replay:
+            raise ValueError("resume needs >= 1 replay token")
+        if hlen + len(replay) + req.max_new > self.max_len:
+            raise ValueError(
+                f"session {rid}: history ({hlen}) + replay "
+                f"({len(replay)}) + max_new ({req.max_new}) exceeds "
+                f"max_len ({self.max_len})")
+        self.resident[rid] = _RState(
+            req, hlen, replay[0], req.max_new,
+            forced=collections.deque(replay[1:]))
+        self._seen_rids.add(rid)
+        self.parked.append(rid)
+        self._c_resumes.inc()
+        self._c_replayed.inc(len(replay))
+        self._g_parked_sessions.set(len(self._parked_sessions))
+        self._touch(rid)
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("session_resume", tid=1, rid=rid,
+                                    cached_len=hlen, replay=len(replay))
+        self.peak_resident_tokens = max(self.peak_resident_tokens,
+                                        self.resident_tokens())
+
+    def release_session(self, rid: int):
+        """Drop a parked session for good: free every page it holds."""
+        self._parked_sessions.pop(rid)
+        freed = self.pool.free_request(rid)
+        if self.has_state:
+            freed += self.pool.free_request(self._state_rid(rid))
+        for pid in freed:
+            self.store.release(pid)
+        self.policy.forget_pages(freed)
+        self._g_parked_sessions.set(len(self._parked_sessions))
+
+    def preempt_lane(self, rid: int) -> bool:
+        """Demote ``rid`` out of its lane back to the parked deque (the
+        SLO scheduler's preempt-by-demotion).  Safe mid-flight: the
+        in-flight tick's harvest checks residency, not lane state."""
         for i, r in enumerate(self.lanes):
             if r == rid:
                 self._vacate(i)
+                self.parked.appendleft(rid)
+                self._c_preempt.inc()
+                if self.obs.tracer is not None:
+                    self.obs.tracer.instant("preempt", tid=1, rid=rid,
+                                            lane=i, by="scheduler")
+                return True
+        return False
 
     def sync(self):
         """Block until every dispatched tick/prefill/mover has executed
@@ -909,6 +1085,10 @@ class PagedEngine(EngineBase):
              "backend": self.backend,
              "queued": len(self.queue),
              "parked": len(self.parked),
+             "parked_sessions": len(self._parked_sessions),
+             "session_parks": gv("engine_session_parks_total") or 0,
+             "session_resumes": gv("engine_session_resumes_total") or 0,
+             "replayed_tokens": gv("engine_replayed_tokens_total") or 0,
              "resident_tokens": self.resident_tokens(),
              "peak_resident_tokens": self.peak_resident_tokens,
              "tokens_generated": self.tokens_generated,

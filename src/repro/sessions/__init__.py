@@ -1,0 +1,15 @@
+"""Multi-turn sessions, SLO scheduling, and trace-driven load
+(DESIGN.md 15) -- the serving layer above the paged engine."""
+from repro.sessions.loadgen import SessionTrace, Turn, make_trace
+from repro.sessions.scheduler import (SLOScheduler, choose_resume,
+                                      reprefill_cost_s, resume_cost_s)
+from repro.sessions.session import Session, SessionManager
+from repro.sessions.spec import (BATCH, INTERACTIVE, SessionSpec,
+                                 SLOClass)
+
+__all__ = [
+    "BATCH", "INTERACTIVE", "SLOClass", "SessionSpec",
+    "SessionTrace", "Turn", "make_trace",
+    "SLOScheduler", "choose_resume", "resume_cost_s", "reprefill_cost_s",
+    "Session", "SessionManager",
+]

@@ -1,0 +1,126 @@
+"""SLO-aware scheduling layered on the paged engine (DESIGN.md 15).
+
+Two mechanisms, both operating on state the engine already exposes --
+the scheduler never reaches into lane internals:
+
+* PRIORITY ORDERING: the engine fills lanes from its ``parked`` deque
+  FIFO; each tick the scheduler stable-sorts that deque by SLO-class
+  priority, so an interactive turn passes queued batch work without a
+  second queue structure.
+* PREEMPT-BY-DEMOTION: when a high-priority request has sat laneless
+  past the spec's patience, the scheduler demotes one lower-priority
+  lane back to parked (``engine.preempt_lane``) -- at most one per
+  tick, so the lane set never thrashes.
+
+The module also holds the promotion-cost vs. re-prefill decision rule:
+resuming a parked session costs its cold bytes over the host link plus
+one decode step per unseen token, re-prefilling costs compute over the
+FULL history -- replay wins exactly when the history's prefill FLOPs
+outweigh the promotion traffic.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable
+
+from repro.assist.tasks import HOST_BW, PEAK_FLOPS
+from repro.cache import TIER_COLD
+
+from repro.sessions.spec import SessionSpec, SLOClass
+
+
+def resume_cost_s(promote_bytes: float, n_active: float,
+                  replay_len: int) -> float:
+    """Seconds to resume by replay: cold pages over the host link, then
+    one decode step (2*N FLOPs) per token the cache has not seen."""
+    return (promote_bytes / HOST_BW
+            + 2.0 * n_active * replay_len / PEAK_FLOPS)
+
+
+def reprefill_cost_s(n_active: float, hist_len: int,
+                     replay_len: int) -> float:
+    """Seconds to resume by re-prefill: compute over history + turn."""
+    return 2.0 * n_active * (hist_len + replay_len) / PEAK_FLOPS
+
+
+def choose_resume(engine, rid: int, replay_len: int,
+                  policy: str = "auto") -> str:
+    """Pick "replay" or "reprefill" for a parked session's next turn.
+
+    "auto" applies the cost rule against the session's ACTUAL cold
+    footprint (pages still warm/hot promote for free, so a short gap
+    biases toward replay even on a cold-heavy config)."""
+    if policy != "auto":
+        return policy
+    hlen = engine.parked_session_len(rid)
+    cold = [p for p in engine.session_pages(rid)
+            if engine.store.tier[p] == TIER_COLD]
+    promote_bytes = float(len(cold)) * engine.store.geom.warm_page_bytes
+    n_active = float(engine.cfg.active_param_count())
+    if resume_cost_s(promote_bytes, n_active, replay_len) \
+            < reprefill_cost_s(n_active, hlen, replay_len):
+        return "replay"
+    return "reprefill"
+
+
+class SLOScheduler:
+    """Priority ordering + patience-gated preemption over engine lanes."""
+
+    def __init__(self, engine, spec: SessionSpec, metrics=None):
+        self.engine = engine
+        self.spec = spec
+        self.metrics = metrics if metrics is not None \
+            else engine.obs.metrics
+        self._c_preempt: dict = {}
+        self._waiting_since: dict = {}        # rid -> first laneless tick
+
+    def _preempt_counter(self, cls_name: str):
+        c = self._c_preempt.get(cls_name)
+        if c is None:
+            c = self._c_preempt[cls_name] = self.metrics.counter(
+                "scheduler_preemptions_total",
+                "lanes demoted so a higher-priority turn can run",
+                cls=cls_name)
+        return c
+
+    def tick(self, now: int, cls_of: Callable[[int], SLOClass]):
+        """Run once per engine tick, after dispatch and before
+        ``engine.step()``.  ``cls_of`` maps a resident rid to its SLO
+        class (non-session rids should map to the lowest priority)."""
+        eng = self.engine
+        if len(eng.parked) > 1:
+            eng.parked = collections.deque(
+                sorted(eng.parked, key=lambda r: cls_of(r).priority))
+        # patience bookkeeping: residents without a lane accrue wait
+        in_lane = set(r for r in eng.lanes if r is not None)
+        laneless = [r for r in eng.parked if r in eng.resident]
+        for r in laneless:
+            self._waiting_since.setdefault(r, now)
+        for r in list(self._waiting_since):
+            if r in in_lane or r not in eng.resident:
+                del self._waiting_since[r]
+        if not self.spec.preempt or not laneless:
+            return
+        over = [r for r in laneless
+                if now - self._waiting_since[r]
+                >= self.spec.preempt_wait_ticks]
+        if not over:
+            return
+        over.sort(key=lambda r: (cls_of(r).priority,
+                                 self._waiting_since[r]))
+        top = over[0]
+        victims = [r for r in in_lane
+                   if cls_of(r).priority > cls_of(top).priority]
+        if not victims:
+            return
+        # demote the victim with the most budget left (the turn that
+        # loses the least finished work); ONE preemption per tick
+        victim = max(victims, key=lambda r: eng.resident[r].remaining)
+        if eng.preempt_lane(victim):
+            self._preempt_counter(cls_of(top).name).inc()
+            try:
+                eng.parked.remove(top)
+            except ValueError:
+                pass
+            else:
+                eng.parked.appendleft(top)

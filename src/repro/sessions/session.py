@@ -1,0 +1,261 @@
+"""Multi-turn sessions over the paged engine (DESIGN.md 15).
+
+A ``Session`` owns one conversation from a load-generator trace.  Its
+lifecycle is the state machine
+
+    queued -> prefill/decoding -> parked -> resuming -> ... -> done
+
+driven by :class:`SessionManager`, which advances the engine tick by
+tick and, between a session's turns:
+
+* PARKS the finished turn -- the engine keeps every page the request
+  owns (token pages, MLA latents, state slab, shared-prefix refs) and
+  ``park_session_pages`` pushes them down the tier ladder in one
+  batched-mover episode;
+* predictively RE-PROMOTES the parked pages shortly before the next
+  turn becomes ready (``prefetch_session``, the WaSP idea lifted from
+  pages to sessions), so promotion hides behind foreground decode;
+* RESUMES without re-prefilling history: the unseen tokens (the new
+  turn, plus at most one uncached tail token) teacher-force through the
+  decode step against the cached pages.  The promotion-cost vs.
+  re-prefill rule (scheduler.choose_resume) can fall back to a full
+  re-prefill when the cold footprint outweighs the history compute.
+
+Goodput is accounted per SLO class: a turn counts as GOOD only when its
+last token lands within the class's tick budget of the turn becoming
+ready -- tokens/s alone would credit late work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.engine import Request
+from repro.sessions.loadgen import SessionTrace
+from repro.sessions.scheduler import SLOScheduler, choose_resume
+from repro.sessions.spec import SessionSpec, SLOClass
+
+# lifecycle states
+QUEUED = "queued"          # first turn not yet submitted
+DECODING = "decoding"      # a turn's request is in the engine
+PARKED = "parked"          # between turns, pages kept (or dropped when
+                           # the spec disables parking)
+RESUMING = "resuming"      # a later turn's request is in the engine
+DONE = "done"
+
+#: tick-latency histogram buckets for session turns
+TURN_LATENCY_BUCKETS = (2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass
+class Session:
+    """One conversation: trace position, accumulated token history, and
+    per-turn accounting."""
+    trace: SessionTrace
+    slo: SLOClass
+    state: str = QUEUED
+    rid: Optional[int] = None
+    turn_idx: int = 0
+    history: list = dataclasses.field(default_factory=list)
+    ready_tick: int = 0
+    req: Optional[Request] = None
+    parked_pages_kept: bool = False     # pages live across the gap?
+    prefetched_gap: bool = False        # predictive promote fired?
+    resumes_replay: int = 0
+    resumes_reprefill: int = 0
+    turn_latencies: list = dataclasses.field(default_factory=list)
+    turns_ok: int = 0
+    turns_violated: int = 0
+
+
+class SessionManager:
+    """Drive a set of session traces to completion over a PagedEngine."""
+
+    def __init__(self, engine, spec: SessionSpec, traces, *, metrics=None):
+        self.engine = engine
+        self.spec = spec
+        self.metrics = metrics if metrics is not None else engine.obs.metrics
+        self.sessions = [Session(tr, spec.cls(tr.slo),
+                                 ready_tick=tr.start_tick)
+                         for tr in traces]
+        self.scheduler = SLOScheduler(engine, spec, metrics=self.metrics)
+        self._by_rid: dict = {}
+        self.prefilled_prompt_tokens = 0    # tokens that went through prefill
+        self.ticks = 0
+        self._c_ok: dict = {}
+        self._c_bad: dict = {}
+        self._h_lat: dict = {}
+        for c in spec.classes:
+            self._c_ok[c.name] = self.metrics.counter(
+                "session_turns_ok_total",
+                "turns whose last token landed within the SLO budget",
+                cls=c.name)
+            self._c_bad[c.name] = self.metrics.counter(
+                "session_slo_violations_total",
+                "turns that missed their SLO budget", cls=c.name)
+            self._h_lat[c.name] = self.metrics.histogram(
+                "session_turn_latency_ticks",
+                "ready-to-last-token latency per turn",
+                TURN_LATENCY_BUCKETS, cls=c.name)
+
+    # -- class lookup for the scheduler (non-session rids -> last) ----------
+
+    def _cls_of(self, rid: int) -> SLOClass:
+        s = self._by_rid.get(rid)
+        if s is not None:
+            return s.slo
+        return min(self.spec.classes, key=lambda c: -c.priority)
+
+    # -- turn completion ------------------------------------------------------
+
+    def _harvest_turns(self, now: int):
+        for s in self.sessions:
+            if s.state not in (DECODING, RESUMING) or not s.req.done:
+                continue
+            lat = now - s.ready_tick
+            s.turn_latencies.append(lat)
+            self._h_lat[s.slo.name].observe(lat)
+            if lat <= s.slo.turn_budget_ticks:
+                s.turns_ok += 1
+                self._c_ok[s.slo.name].inc()
+            else:
+                s.turns_violated += 1
+                self._c_bad[s.slo.name].inc()
+            s.history.extend(s.req.out)
+            s.turn_idx += 1
+            gap = (s.trace.turns[s.turn_idx].gap_ticks
+                   if s.turn_idx < len(s.trace.turns) else 0)
+            if s.turn_idx >= len(s.trace.turns):
+                # final turn retired WITHOUT park_on_retire: pages freed
+                s.state = DONE
+                self._by_rid.pop(s.rid, None)
+                continue
+            s.state = PARKED
+            s.ready_tick = now + gap
+            s.prefetched_gap = False
+            s.parked_pages_kept = self.spec.park
+            if self.spec.park and self.spec.park_to_cold:
+                self.engine.park_session_pages(s.rid)
+
+    # -- turn dispatch --------------------------------------------------------
+
+    def _submit_turn(self, s: Session, turn, *, full_prompt: list):
+        """Fresh-prefill path (first turn, or re-prefill resume)."""
+        req = Request(rid=s.rid if s.rid is not None else s.trace.sid,
+                      prompt=list(full_prompt), max_new=turn.max_new)
+        self.engine.submit(req)
+        if s.rid is not None:
+            self._by_rid.pop(s.rid, None)
+        s.rid, s.req = req.rid, req            # submit may recycle the rid
+        self._by_rid[req.rid] = s
+        if self.spec.park and s.turn_idx + 1 < len(s.trace.turns):
+            self.engine.park_on_retire(req.rid)
+        self.prefilled_prompt_tokens += len(full_prompt)
+
+    def _dispatch_ready(self, now: int):
+        order = sorted(
+            (s for s in self.sessions
+             if s.ready_tick <= now and s.state in (QUEUED, PARKED)),
+            key=lambda s: (s.slo.priority, s.ready_tick))
+        for s in order:
+            turn = s.trace.turns[s.turn_idx]
+            if s.state == QUEUED:
+                self._submit_turn(s, turn, full_prompt=list(turn.tokens))
+                s.history.extend(turn.tokens)
+                s.state = DECODING
+                continue
+            # parked -> resuming
+            if not s.parked_pages_kept:
+                self._submit_turn(s, turn,
+                                  full_prompt=s.history + list(turn.tokens))
+                s.history.extend(turn.tokens)
+                s.resumes_reprefill += 1
+                s.state = RESUMING
+                continue
+            cached = self.engine.parked_session_len(s.rid)
+            replay = s.history[cached:] + list(turn.tokens)
+            mode = choose_resume(self.engine, s.rid, len(replay),
+                                 policy=self.spec.resume_policy)
+            if mode == "replay":
+                req = Request(rid=s.rid,
+                              prompt=s.history + list(turn.tokens),
+                              max_new=turn.max_new)
+                self.engine.resume_session(req, replay)
+                s.req = req
+                if s.turn_idx + 1 < len(s.trace.turns):
+                    self.engine.park_on_retire(s.rid)
+                s.resumes_replay += 1
+            else:
+                self.engine.release_session(s.rid)
+                self._submit_turn(s, turn,
+                                  full_prompt=s.history + list(turn.tokens))
+                s.resumes_reprefill += 1
+            s.history.extend(turn.tokens)
+            s.state = RESUMING
+
+    def _predictive_promote(self, now: int):
+        if not (self.spec.park and self.spec.predictive_promote):
+            return
+        for s in self.sessions:
+            if (s.state == PARKED and s.parked_pages_kept
+                    and not s.prefetched_gap
+                    and s.ready_tick - now <= self.spec.promote_horizon_ticks):
+                self.engine.prefetch_session(s.rid)
+                s.prefetched_gap = True
+
+    # -- main loop ------------------------------------------------------------
+
+    def done(self) -> bool:
+        return all(s.state == DONE for s in self.sessions)
+
+    def run(self, max_ticks: int = 20_000) -> dict:
+        while not self.done() and self.ticks < max_ticks:
+            now = self.engine.tick_no
+            self._harvest_turns(now)
+            self._predictive_promote(now)
+            self._dispatch_ready(now)
+            self.scheduler.tick(now, self._cls_of)
+            self.engine.step()
+            self.ticks += 1
+        self._harvest_turns(self.engine.tick_no)   # turns landing last tick
+        return self.report()
+
+    # -- accounting -----------------------------------------------------------
+
+    def report(self) -> dict:
+        gv = self.metrics.get_value
+        per_class = {}
+        for c in self.spec.classes:
+            sess = [s for s in self.sessions if s.slo.name == c.name]
+            lats = sorted(l for s in sess for l in s.turn_latencies)
+            ok = sum(s.turns_ok for s in sess)
+            bad = sum(s.turns_violated for s in sess)
+            pct = lambda q: (float(lats[min(int(q * len(lats)),
+                                            len(lats) - 1)])
+                             if lats else None)
+            per_class[c.name] = {
+                "sessions": len(sess),
+                "turns": ok + bad,
+                "turns_ok": ok,
+                "slo_violations": bad,
+                "budget_ticks": c.turn_budget_ticks,
+                "goodput_frac": ok / (ok + bad) if ok + bad else None,
+                "goodput_turns_per_ktick":
+                    1000.0 * ok / max(self.ticks, 1),
+                "p50_latency_ticks": pct(0.50),
+                "p95_latency_ticks": pct(0.95),
+            }
+        return {
+            "ticks": self.ticks,
+            "sessions": len(self.sessions),
+            "turns": sum(len(s.trace.turns) for s in self.sessions),
+            "per_class": per_class,
+            "resumes_replay": sum(s.resumes_replay for s in self.sessions),
+            "resumes_reprefill": sum(s.resumes_reprefill
+                                     for s in self.sessions),
+            "replayed_tokens": gv("engine_replayed_tokens_total") or 0,
+            "prefilled_prompt_tokens": self.prefilled_prompt_tokens,
+            "session_parks": gv("engine_session_parks_total") or 0,
+            "preemptions": gv("engine_preemptions_total") or 0,
+            "tokens_generated": self.engine.tokens_generated,
+        }

@@ -1,0 +1,87 @@
+"""SessionSpec / SLO classes -- declarative session-serving knobs.
+
+Configuration only, like :mod:`repro.assist.spec`: this module never
+imports the cache/serving layers, so ``ServeConfig`` can nest a
+``SessionSpec`` without cycles and the sessions runtime consumes it at
+build time (DESIGN.md 15).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One latency class: a name, a dispatch priority (lower wins), and
+    the turn-latency budget (ticks from turn-ready to last token) that
+    defines goodput for the class."""
+    name: str
+    priority: int
+    turn_budget_ticks: int
+
+    def __post_init__(self):
+        if self.turn_budget_ticks < 1:
+            raise ValueError("turn_budget_ticks must be >= 1")
+
+
+#: default classes: interactive turns want an answer within a couple of
+#: dozen ticks; batch turns tolerate an order of magnitude more
+INTERACTIVE = SLOClass("interactive", priority=0, turn_budget_ticks=24)
+BATCH = SLOClass("batch", priority=1, turn_budget_ticks=160)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """How multi-turn sessions park, resume, and get scheduled.
+
+      park                keep a finished turn's pages as a parked
+                          session (False reproduces the stateless
+                          baseline: every turn re-prefills its history)
+      park_to_cold        push a parked session's pages down the tier
+                          ladder right at park time (one batched-mover
+                          episode); False leaves demotion to LRU pressure
+      predictive_promote  enqueue a parked session's cold pages on the
+                          prefetch queue ``promote_horizon_ticks`` before
+                          its next turn becomes ready (WaSP lifted from
+                          pages to sessions)
+      promote_horizon_ticks  how far ahead of turn-ready to prefetch
+      preempt             let the scheduler demote a lower-priority lane
+                          when a higher-priority turn has waited
+                          ``preempt_wait_ticks`` without a lane
+      preempt_wait_ticks  patience before preempting
+      resume_policy       "replay" always teacher-forces the unseen
+                          tokens through the decode step; "reprefill"
+                          always drops the parked pages and re-prefills
+                          the full history; "auto" picks per turn by the
+                          promotion-cost vs. re-prefill rule
+                          (DESIGN.md 15)
+      classes             the SLO classes traffic is tagged with
+    """
+    park: bool = True
+    park_to_cold: bool = True
+    predictive_promote: bool = True
+    promote_horizon_ticks: int = 3
+    preempt: bool = True
+    preempt_wait_ticks: int = 4
+    resume_policy: str = "auto"
+    classes: Tuple[SLOClass, ...] = (INTERACTIVE, BATCH)
+
+    def __post_init__(self):
+        if self.resume_policy not in ("auto", "replay", "reprefill"):
+            raise ValueError(f"resume_policy must be auto|replay|reprefill, "
+                             f"got {self.resume_policy!r}")
+        if self.promote_horizon_ticks < 0:
+            raise ValueError("promote_horizon_ticks must be >= 0")
+        if self.preempt_wait_ticks < 1:
+            raise ValueError("preempt_wait_ticks must be >= 1")
+        names = [c.name for c in self.classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate SLO class names: {names}")
+
+    def cls(self, name: str) -> SLOClass:
+        for c in self.classes:
+            if c.name == name:
+                return c
+        raise KeyError(f"unknown SLO class {name!r} "
+                       f"(have {[c.name for c in self.classes]})")

@@ -1,0 +1,444 @@
+"""Multi-turn sessions (DESIGN.md 15): park/resume, SLO scheduling, load.
+
+The core guarantee, per page kind: a session that parks between turns
+and resumes by teacher-forced replay produces EXACTLY the tokens an
+uninterrupted decode of the full conversation would -- for attention KV
+pages (qwen2), MLA latent pages (deepseek-v2-lite) and SSM state slabs
+(zamba2 hybrid) -- with ONE prefill for the whole conversation.  That
+holds even when a concurrent request COWs the parked session's shared
+prefix pages mid-gap, and the pool drains clean afterwards.
+
+Around the core: cold parking + predictive re-promotion land on the
+``prefetch_issued_total{kind=}`` counter families, the promotion-cost
+vs. re-prefill rule flips where the arithmetic says it should, the SLO
+scheduler preempts by demotion only after its patience runs out, the
+load generator is bit-reproducible from its seed, and the spec/config
+knobs thread both spellings.
+"""
+import collections
+import functools
+
+import numpy as np
+import jax
+import pytest
+
+from repro.assist import AssistSpec
+from repro.cache import TIER_COLD, TIER_HOT, TierConfig
+from repro.configs import ARCHS, reduced
+from repro.models import transformer as T
+from repro.models.model import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request
+from repro.serving.paged_engine import PagedEngine
+from repro.sessions import (SessionManager, SessionSpec, SessionTrace,
+                            SLOScheduler, Turn, choose_resume, make_trace,
+                            reprefill_cost_s, resume_cost_s)
+from repro.sessions.spec import BATCH, INTERACTIVE
+
+HOT_ONLY = TierConfig(page_size=16, hbm_budget_bytes=1 << 30,
+                      enable_warm=False, enable_cold=False)
+NO_EOS = 1 << 30                       # never fires: out of every vocab
+
+# one arch per page kind: attention KV, MLA latents, SSM state slab
+SESSION_ARCHS = ("qwen2-7b", "deepseek-v2-lite-16b", "zamba2-1.2b")
+
+
+@functools.lru_cache(maxsize=None)
+def _built(arch):
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module", params=SESSION_ARCHS)
+def served_arch(request):
+    return _built(request.param)
+
+
+@pytest.fixture(scope="module")
+def served_qwen():
+    return _built("qwen2-7b")
+
+
+def _reference(model, params, prompt, max_new, lanes=1):
+    """Uninterrupted decode of the full conversation on a fresh engine:
+    the output a parked-and-resumed session must reproduce."""
+    eng = PagedEngine(model, params, lanes=lanes, max_len=96,
+                      tier=HOT_ONLY, eos_id=NO_EOS,
+                      use_roofline_trigger=False)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new=max_new))
+    (done,) = eng.run()
+    return done.out
+
+
+# -- park -> resume token identity, per page kind --------------------------
+
+
+def test_park_resume_token_identity(served_arch, rng):
+    """Two turns, one prefill: turn 1 parks on retire, turn 2 resumes by
+    replaying the tokens the cache has not seen (the uncached tail token
+    plus the new turn) -- output identical to decoding the whole
+    conversation uninterrupted, and every page freed at the end."""
+    cfg, model, params = served_arch
+    t1 = [int(t) for t in rng.integers(2, 400, 24)]
+    t2 = [int(t) for t in rng.integers(2, 400, 5)]
+    max_new = 4
+
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False)
+    r1 = Request(rid=7, prompt=t1, max_new=max_new)
+    eng.submit(r1)
+    eng.park_on_retire(7)
+    eng.run()
+    assert r1.done and len(r1.out) == max_new
+    hist = t1 + r1.out
+    hlen = eng.parked_session_len(7)
+    assert hlen == len(hist) - 1       # budget retire: tail token uncached
+    assert eng.stats()["parked_sessions"] == 1
+
+    replay = hist[hlen:] + t2
+    r2 = Request(rid=7, prompt=hist + t2, max_new=max_new)
+    eng.resume_session(r2, replay)
+    eng.run()
+    assert r2.done and len(r2.out) == max_new
+    assert r2.out == _reference(model, params, hist + t2, max_new), \
+        f"{cfg.name}: resumed decode diverged from uninterrupted decode"
+
+    gv = eng.obs.metrics.get_value
+    assert gv("engine_admissions_total") == 1   # resume never re-prefilled
+    assert gv("engine_session_parks_total") == 1
+    assert gv("engine_session_resumes_total") == 1
+    assert gv("engine_replayed_tokens_total") == len(replay)
+    # the final turn retired un-parked: everything returns to the pool
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+
+
+def test_park_resume_identity_under_cow_mid_gap(served_qwen, rng):
+    """A parked session's shared-prefix pages get COW'd by a concurrent
+    full-skip request DURING the gap; the resume still reproduces the
+    uninterrupted conversation, the sibling matches its own unshared
+    reference, and the pool conserves after the store drains."""
+    cfg, model, params = served_qwen
+    base = [int(t) for t in rng.integers(2, 400, 32)]      # 2 full pages
+    t1 = base + [int(t) for t in rng.integers(2, 400, 5)]
+    t2 = [int(t) for t in rng.integers(401, 510, 4)]
+    max_new = 4
+
+    eng = PagedEngine(model, params, lanes=2, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      prefix_reuse=True)
+    r1 = Request(rid=0, prompt=t1, max_new=max_new)
+    eng.submit(r1)
+    eng.park_on_retire(0)
+    eng.run()
+    hist = t1 + r1.out
+    hlen = eng.parked_session_len(0)
+
+    # mid-gap: the sibling full-skips on the published prefix and COWs
+    # the last shared page (its recompute of token 31 writes there)
+    sib = Request(rid=1, prompt=base[:32], max_new=max_new)
+    eng.submit(sib)
+    eng.run()
+    assert sib.done
+    assert eng.stats()["prefix"]["prefill_skips"] == 1
+    assert eng.pool.stats.cow >= 1
+
+    replay = hist[hlen:] + t2
+    r2 = Request(rid=0, prompt=hist + t2, max_new=max_new)
+    eng.resume_session(r2, replay)
+    eng.run()
+    assert r2.out == _reference(model, params, hist + t2, max_new), \
+        "COW on shared prefix pages corrupted the parked session"
+    assert sib.out == _reference(model, params, base[:32], max_new)
+
+    eng.drop_prefix_cache()
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+    s = eng.pool.stats
+    assert s.allocated == s.freed and s.shared == s.unshared
+
+
+# -- tiered parking + predictive re-promotion ------------------------------
+
+
+def test_cold_park_prefetch_session_resume(served_qwen, rng):
+    """park_session_pages pushes the whole session cold in one episode,
+    prefetch_session queues it back under ``kind="session"``, and the
+    resumed turn completes against the promoted pages."""
+    cfg, model, params = served_qwen
+    geom = T.paged_geometry(cfg, 16)
+    tier = TierConfig(page_size=16,
+                      hbm_budget_bytes=24 * geom.hot_page_bytes,
+                      enable_warm=True, enable_cold=True)
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=tier,
+                      eos_id=NO_EOS, use_roofline_trigger=False)
+    t1 = [int(t) for t in rng.integers(2, 400, 40)]
+    t2 = [int(t) for t in rng.integers(2, 400, 5)]
+    r1 = Request(rid=3, prompt=t1, max_new=4)
+    eng.submit(r1)
+    eng.park_on_retire(3)
+    eng.run()
+
+    assert eng.park_session_pages(3) > 0
+    pages = eng.session_pages(3)
+    assert pages and all(eng.store.tier[p] == TIER_COLD for p in pages)
+
+    eng.prefetch_session(3)
+    gv = eng.obs.metrics.get_value
+    assert (gv("prefetch_issued_total", kind="session") or 0) >= len(pages)
+
+    hist = t1 + r1.out
+    replay = hist[eng.parked_session_len(3):] + t2
+    r2 = Request(rid=3, prompt=hist + t2, max_new=4)
+    eng.resume_session(r2, replay)
+    eng.run(max_ticks=200)
+    assert r2.done and len(r2.out) == 4
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+
+
+def test_prefix_prefetch_on_cold_match(served_qwen, rng):
+    """Admission-time WaSP for the prefix store: matching a prompt whose
+    published prefix pages have gone cold queues them for promotion
+    under ``kind="prefix"`` ahead of the prefill."""
+    cfg, model, params = served_qwen
+    geom = T.paged_geometry(cfg, 16)
+    tier = TierConfig(page_size=16,
+                      hbm_budget_bytes=24 * geom.hot_page_bytes,
+                      enable_warm=True, enable_cold=True)
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=tier,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      prefix_reuse=True)
+    base = [int(t) for t in rng.integers(2, 400, 32)]      # 2 full pages
+    r0 = Request(rid=0, prompt=base + [7, 9, 11], max_new=3)
+    eng.submit(r0)
+    eng.run()
+    matched = eng.prefix.match(base)
+    assert len(matched) == 2
+    # a long idle gap: the store-held prefix pages sink to cold
+    eng.policy.park_pages(eng.pool, eng.store, matched, set())
+    assert all(eng.store.tier[p] == TIER_COLD for p in matched)
+
+    r1 = Request(rid=1, prompt=base + [13, 15, 17], max_new=3)
+    eng.submit(r1)
+    eng.run()
+    assert r1.done and len(r1.out) == 3
+    gv = eng.obs.metrics.get_value
+    assert (gv("prefetch_issued_total", kind="prefix") or 0) >= 1
+    eng.drop_prefix_cache()
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+
+
+# -- promotion-cost vs re-prefill rule -------------------------------------
+
+
+class _NS:
+    """Ad-hoc attribute namespace for duck-typed engine fakes."""
+
+
+def _fake_parked_engine(n_cold, hlen, n_pages=64,
+                        warm_page_bytes=1 << 20, n_active=1e9):
+    eng = _NS()
+    pages = list(range(n_pages))
+    store = _NS()
+    store.tier = {p: (TIER_COLD if i < n_cold else TIER_HOT)
+                  for i, p in enumerate(pages)}
+    store.geom = _NS()
+    store.geom.warm_page_bytes = warm_page_bytes
+    eng.store = store
+    eng.parked_session_len = lambda rid: hlen
+    eng.session_pages = lambda rid: pages
+    eng.cfg = _NS()
+    eng.cfg.active_param_count = lambda: n_active
+    return eng
+
+
+def test_resume_cost_rule_flips_with_cold_footprint():
+    n = 1e9
+    # nothing cold: replay is pure decode compute, re-prefill pays the
+    # whole history again
+    assert resume_cost_s(0.0, n, 8) < reprefill_cost_s(n, 500, 8)
+    assert choose_resume(_fake_parked_engine(0, 500), 0, 8) == "replay"
+    # cold-heavy, short history: promotion traffic dwarfs the re-prefill
+    assert resume_cost_s(64 * (1 << 20), n, 8) > reprefill_cost_s(n, 4, 8)
+    heavy = _fake_parked_engine(64, 4)
+    assert choose_resume(heavy, 0, 8) == "reprefill"
+    # explicit policies bypass the arithmetic entirely
+    assert choose_resume(heavy, 0, 8, policy="replay") == "replay"
+    assert choose_resume(_fake_parked_engine(0, 500), 0, 8,
+                         policy="reprefill") == "reprefill"
+
+
+# -- SLO scheduler: priority ordering + patience-gated preemption ----------
+
+
+class _FakeLaneEngine:
+    def __init__(self, metrics):
+        self.parked = collections.deque()
+        self.lanes = [None, None]
+        self.resident = {}
+        self.obs = _NS()
+        self.obs.metrics = metrics
+        self.preempted = []
+
+    def preempt_lane(self, rid):
+        for i, r in enumerate(self.lanes):
+            if r == rid:
+                self.lanes[i] = None
+                self.parked.appendleft(rid)
+                self.preempted.append(rid)
+                return True
+        return False
+
+
+class _Rem:
+    def __init__(self, remaining):
+        self.remaining = remaining
+
+
+def test_slo_scheduler_priority_and_preemption():
+    metrics = MetricsRegistry()
+    spec = SessionSpec(preempt=True, preempt_wait_ticks=2)
+    eng = _FakeLaneEngine(metrics)
+    sched = SLOScheduler(eng, spec, metrics=metrics)
+    cls_of = lambda rid: INTERACTIVE if rid >= 100 else BATCH
+
+    # two batch turns hold both lanes; one batch and one interactive
+    # turn wait laneless, batch queued first
+    eng.lanes = [0, 1]
+    eng.resident = {0: _Rem(5), 1: _Rem(9), 2: _Rem(1), 100: _Rem(3)}
+    eng.parked = collections.deque([2, 100])
+
+    sched.tick(0, cls_of)
+    # priority ordering passes interactive ahead of the earlier batch
+    assert list(eng.parked) == [100, 2]
+    assert eng.preempted == []         # patience not yet exhausted
+    sched.tick(1, cls_of)
+    assert eng.preempted == []
+    sched.tick(2, cls_of)
+    # patience ran out: the batch lane with the MOST budget left (rid 1,
+    # remaining=9) is demoted, exactly one preemption, waiter moves to
+    # the head of the parked deque
+    assert eng.preempted == [1]
+    assert eng.lanes == [0, None]
+    assert eng.parked[0] == 100
+    assert metrics.get_value("scheduler_preemptions_total",
+                             cls="interactive") == 1
+
+
+def test_slo_scheduler_no_preempt_without_lower_priority_victim():
+    metrics = MetricsRegistry()
+    spec = SessionSpec(preempt=True, preempt_wait_ticks=1)
+    eng = _FakeLaneEngine(metrics)
+    sched = SLOScheduler(eng, spec, metrics=metrics)
+    cls_of = lambda rid: INTERACTIVE   # everyone equal priority
+    eng.lanes = [0, 1]
+    eng.resident = {0: _Rem(5), 1: _Rem(9), 100: _Rem(3)}
+    eng.parked = collections.deque([100])
+    for now in range(4):
+        sched.tick(now, cls_of)
+    assert eng.preempted == []         # never demote a peer
+
+
+# -- load generator --------------------------------------------------------
+
+
+def test_loadgen_deterministic_and_bounded():
+    kw = dict(n_sessions=12, seed=5, vocab_size=1000, page_size=16,
+              max_len=128, max_new=4)
+    a = make_trace(**kw)
+    assert a == make_trace(**kw)                 # bit-reproducible
+    assert a != make_trace(**{**kw, "seed": 6})
+    assert {t.slo for t in a} <= {"interactive", "batch"}
+    # Zipfian headers collide: fewer distinct openers than sessions
+    headers = {t.turns[0].tokens[:16] for t in a}
+    assert len(headers) < len(a)
+    for tr in a:
+        hist = 0
+        for i, turn in enumerate(tr.turns):
+            assert turn.gap_ticks == 0 if i == 0 else turn.gap_ticks >= 1
+            assert all(1 <= t < 1000 for t in turn.tokens)
+            hist += len(turn.tokens) + turn.max_new
+        assert 0 < hist <= 128                   # never inadmissible
+    starts = [t.start_tick for t in a]
+    assert starts == sorted(starts)
+
+
+# -- SessionManager end-to-end ---------------------------------------------
+
+
+def test_session_manager_goodput_and_no_reprefill(served_qwen, rng):
+    """Two two-turn sessions (one per SLO class) run to completion with
+    ONE prefill each: both second turns resume by replay, goodput is
+    accounted per class, and the pool drains clean."""
+    cfg, model, params = served_qwen
+    eng = PagedEngine(model, params, lanes=2, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False)
+    tok = lambda n: tuple(int(t) for t in rng.integers(2, 400, n))
+    traces = [
+        SessionTrace(sid=0, slo="interactive", start_tick=0, turns=(
+            Turn(gap_ticks=0, tokens=tok(18), max_new=3),
+            Turn(gap_ticks=2, tokens=tok(5), max_new=3))),
+        SessionTrace(sid=1, slo="batch", start_tick=1, turns=(
+            Turn(gap_ticks=0, tokens=tok(12), max_new=3),
+            Turn(gap_ticks=3, tokens=tok(4), max_new=3))),
+    ]
+    spec = SessionSpec(park=True, park_to_cold=False,
+                       resume_policy="replay")
+    mgr = SessionManager(eng, spec, traces)
+    rep = mgr.run(max_ticks=400)
+    assert mgr.done()
+    assert rep["sessions"] == 2 and rep["turns"] == 4
+    assert rep["resumes_replay"] == 2 and rep["resumes_reprefill"] == 0
+    assert rep["replayed_tokens"] > 0
+    assert rep["session_parks"] == 2
+    # resume-without-reprefill: only the two FIRST turns went through
+    # prefill; the second turns replayed against parked pages
+    assert rep["prefilled_prompt_tokens"] == 18 + 12
+    for name in ("interactive", "batch"):
+        pc = rep["per_class"][name]
+        assert pc["sessions"] == 1 and pc["turns"] == 2
+        assert pc["turns_ok"] + pc["slo_violations"] == 2
+        assert pc["goodput_frac"] is not None
+        assert pc["p95_latency_ticks"] is not None
+    eng.pool.check()
+    assert eng.pool.n_free == eng.pool.num_pages
+
+
+# -- knob threading --------------------------------------------------------
+
+
+def test_session_spec_validation_and_config_threading():
+    spec = SessionSpec()
+    assert spec.park and spec.resume_policy == "auto"
+    assert spec.cls("interactive").priority < spec.cls("batch").priority
+    with pytest.raises(KeyError):
+        spec.cls("bogus")
+    with pytest.raises(ValueError):
+        SessionSpec(resume_policy="sometimes")
+    with pytest.raises(ValueError):
+        SessionSpec(preempt_wait_ticks=0)
+    with pytest.raises(ValueError):
+        SessionSpec(classes=(INTERACTIVE, INTERACTIVE))
+
+    # flat alias folds into a default spec; explicit spec is authoritative
+    assert ServeConfig(arch="qwen2-7b", paged=True).session_spec().park
+    off = ServeConfig(arch="qwen2-7b", paged=True, session_park=False)
+    assert off.session_spec().park is False
+    explicit = SessionSpec(park=False, promote_horizon_ticks=7)
+    nested = ServeConfig(arch="qwen2-7b", paged=True, sessions=explicit)
+    assert nested.session_spec() is explicit
+
+    # prefix-prefetch knob: default on, folds in both spellings
+    assert AssistSpec().prefix_prefetch is True
+    assert ServeConfig(arch="qwen2-7b").prefix_prefetch is True
+    via_spec = ServeConfig(arch="qwen2-7b", assist=AssistSpec(
+        paged=True, prefix_prefetch=False))
+    assert via_spec.prefix_prefetch is False
+    via_flat = ServeConfig(arch="qwen2-7b", paged=True,
+                           prefix_prefetch=False)
+    assert via_flat.assist.prefix_prefetch is False
