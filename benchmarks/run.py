@@ -107,6 +107,14 @@ def _compare_serving(result, base, baseline_path, smoke, threshold=0.20,
         # warn (so a typo'd rename is visible) but never fail on it
         print(f"\n--compare: {len(fresh)} scenario(s) absent from "
               f"{baseline_path} (new this run, not gated): {fresh}")
+    stale = sorted(set(old) - set(new))
+    if stale:
+        # the record can also be NEWER than the checkout (a baseline
+        # committed by a later PR, compared on an older branch): those
+        # scenarios have nothing to gate against -- warn, never crash
+        print(f"\n--compare: {len(stale)} scenario(s) only in "
+              f"{baseline_path} (stale or from a newer schema, not "
+              f"gated): {stale}")
     import math
     shift = 1.0 if absolute else math.exp(
         sum(math.log(new[k] / old[k]) for k in shared) / len(shared))
@@ -165,6 +173,11 @@ def main() -> None:
     ap.add_argument("--trace", metavar="OUT_JSON", default=None,
                     help="write a Chrome trace-event JSON of one tiered "
                          "serving scenario and exit (view in Perfetto)")
+    ap.add_argument("--strict-transfers", action="store_true",
+                    help="run serving benchmarks with the tick transfer "
+                         "guard armed (jax.transfer_guard('disallow') "
+                         "around the jitted dispatch): an implicit host "
+                         "sync in the decode loop fails the run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -203,6 +216,8 @@ def main() -> None:
                 kwargs["smoke"] = True
             if "seed" in params:
                 kwargs["seed"] = args.seed
+            if args.strict_transfers and "strict_transfers" in params:
+                kwargs["strict_transfers"] = True
             result = mod.main(**kwargs)
             print(f"[{name}] done in {time.time() - t0:.1f}s")
             if name == "serving_micro":

@@ -43,12 +43,14 @@ import time
 import numpy as np
 import jax
 
+from repro.analysis.runtime import assert_compile_bound
 from repro.assist import AssistSpec
 from repro.cache import PageGeometry, TierConfig
 from repro.configs import ARCHS, reduced
 from repro.kernels.decode_attn.ops import attn_backend_names
-from repro.models.model import build_model
+from repro.models.model import build_model, n_prompt_buckets
 from repro.models.transformer import stack_plan
+from repro.obs import Observability, ObsSpec
 from repro.serving.config import ServeConfig
 from repro.serving.engine import Request
 from repro.serving.paged_engine import PagedEngine
@@ -56,6 +58,18 @@ from benchmarks.common import print_table
 
 PAGE = 16
 ARCH = "qwen2-7b"
+
+#: set by main(strict_transfers=True) (benchmarks/run.py
+#: --strict-transfers): every engine built below then arms the tick
+#: transfer guard, so an implicit host sync in the decode loop fails the
+#: benchmark instead of silently slowing it
+STRICT_TRANSFERS = False
+
+
+def _obs_spec():
+    """The ObsSpec every scenario engine is built with (None = the
+    ServeConfig default: counters + probe on, guard off)."""
+    return ObsSpec(strict_transfers=True) if STRICT_TRANSFERS else None
 
 
 def _assist_specs(hbm_budget: int):
@@ -72,7 +86,8 @@ def _assist_specs(hbm_budget: int):
 
 def _build(model, params, spec: AssistSpec, lanes: int, max_len: int):
     scfg = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
-                       max_len=max_len, eos_id=0, assist=spec)
+                       max_len=max_len, eos_id=0, assist=spec,
+                       obs=_obs_spec())
     eng, _, _ = scfg.build(model, params)
     return eng
 
@@ -182,6 +197,10 @@ def run(smoke: bool = False, seed: int = 0):
                      s["store"]["demote_cold"],
                      s["policy"]["prefetch_hits"]])
         eng.pool.check()
+        # retrace sentinel: the whole mixed-length stream must fit the
+        # bucketed prefill compile bound (DESIGN.md 16)
+        assert_compile_bound(f"tiers/{name}", eng.prefill_compiles(),
+                             n_prompt_buckets(max_len, PAGE))
     print_table(
         f"serving_micro: fixed HBM budget = {hbm_budget // 1024} KiB "
         f"({budget_pages} bf16 pages), {n_req} requests",
@@ -293,9 +312,13 @@ def run_host_overhead(smoke: bool = False, seed: int = 0):
     rows = []
     for mode, host_sync in (("host-sync", True), ("async", False)):
         rng = np.random.default_rng(seed)
+        # the host-sync arm keeps the guard OFF: its loop syncs on purpose
+        # (the A/B baseline), and the guard would fail it by design
+        obs = Observability(_obs_spec()) \
+            if STRICT_TRANSFERS and not host_sync else None
         eng = PagedEngine(model, params, lanes=lanes, max_len=max_len,
                           tier=tier, eos_id=0, use_roofline_trigger=False,
-                          host_sync=host_sync)
+                          host_sync=host_sync, obs=obs)
         for rid, plen in enumerate(lens):
             eng.submit(Request(rid=rid,
                                prompt=list(rng.integers(2, cfg.vocab_size,
@@ -349,9 +372,11 @@ def run_host_overhead(smoke: bool = False, seed: int = 0):
     results["speedup"] = speedup
     results["n_buckets"] = n_prompt_buckets(max_len, PAGE)
     assert results["async"]["finished"] == results["host-sync"]["finished"]
-    # retrace guard: the async path compiles at most one prefill per bucket
-    assert results["async"]["prefill_compiles"] <= results["n_buckets"], \
-        results
+    # retrace sentinel: the async path compiles at most one prefill per
+    # bucket (>= 12 distinct prompt lengths above map into n_buckets)
+    assert_compile_bound("host_overhead/async",
+                         results["async"]["prefill_compiles"],
+                         results["n_buckets"])
     return results
 
 
@@ -409,7 +434,7 @@ def _capacity_run(arch: str, spec: AssistSpec, lanes: int, max_len: int,
 
 def _build_arch(arch, model, params, spec, lanes, max_len):
     scfg = ServeConfig(arch=arch, reduced=True, slots=lanes,
-                       max_len=max_len, assist=spec)
+                       max_len=max_len, assist=spec, obs=_obs_spec())
     eng, _, _ = scfg.build(model, params)
     return eng
 
@@ -593,7 +618,7 @@ def run_sessions(smoke: bool = False, seed: int = 0):
                             classes=classes)
         scfg = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
                            max_len=max_len, eos_id=0, assist=aspec,
-                           sessions=sspec)
+                           sessions=sspec, obs=_obs_spec())
         eng, _, _ = scfg.build(model, params)
         mgr = SessionManager(eng, scfg.session_spec(), traces)
         eng.sync()
@@ -664,7 +689,8 @@ def run_trace(path: str, smoke: bool = True, seed: int = 0):
                       use_roofline_trigger=False)
     scfg = ServeConfig(arch=ARCH, reduced=True, slots=2, max_len=48,
                        eos_id=0, assist=spec,
-                       obs=ObsSpec(trace=True))
+                       obs=ObsSpec(trace=True,
+                                   strict_transfers=STRICT_TRANSFERS))
     obs = Observability(scfg.obs)
     eng, _, _ = scfg.build(model, params, obs=obs)
     rng = np.random.default_rng(seed)
@@ -681,7 +707,13 @@ def run_trace(path: str, smoke: bool = True, seed: int = 0):
     return n_events
 
 
-def main(smoke: bool = False, seed: int = 0):
+def main(smoke: bool = False, seed: int = 0,
+         strict_transfers: bool = False):
+    global STRICT_TRANSFERS
+    STRICT_TRANSFERS = bool(strict_transfers)
+    if STRICT_TRANSFERS:
+        print("[serving_micro] strict transfers ON: tick dispatches run "
+              "under jax.transfer_guard('disallow')")
     res = run(smoke=smoke, seed=seed)
     hot = res["hot-only"]["capacity"]
     warm = res["hot+warm"]["capacity"]
@@ -761,5 +793,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strict-transfers", action="store_true")
     a = ap.parse_args()
-    main(smoke=a.smoke, seed=a.seed)
+    main(smoke=a.smoke, seed=a.seed, strict_transfers=a.strict_transfers)

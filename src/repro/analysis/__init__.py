@@ -1,0 +1,27 @@
+"""repro.analysis -- the hot-path sanitizer (DESIGN.md 16).
+
+Static half: an AST linter (``rules.run_checks``) enforcing the decode
+loop's invariants -- hot-path purity, metrics discipline, page-ownership
+protocol, jit-boundary hygiene -- reachability-scoped to the engine
+``step`` roots, with ``# sync-ok:``/``# lint-ok():`` pragmas for the
+sanctioned exemptions and a grandfather baseline (``baseline``).  Run it
+via ``python tools/check.py``.
+
+Runtime half (``runtime``): ``jax.transfer_guard`` around the jitted
+tick dispatch behind ``ObsSpec.strict_transfers``, and the retrace
+sentinel asserting the prefill compile-count bound per scenario.
+
+This package imports only the stdlib (the CI linter job needs no jax);
+``runtime`` imports jax lazily, and only when a guard is enabled.
+"""
+from repro.analysis.baseline import (load_baseline, new_findings,
+                                     save_baseline)
+from repro.analysis.findings import (Finding, PRAGMA_NO_REASON, Pragmas,
+                                     SYNC_RULES)
+from repro.analysis.rules import ALL_RULES, ROOTS, run_checks
+
+__all__ = [
+    "ALL_RULES", "Finding", "PRAGMA_NO_REASON", "Pragmas", "ROOTS",
+    "SYNC_RULES", "load_baseline", "new_findings", "run_checks",
+    "save_baseline",
+]

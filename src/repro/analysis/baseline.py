@@ -1,0 +1,51 @@
+"""Finding baselines: grandfather what exists, fail on what is new.
+
+The baseline file (``analysis_baseline.json`` at the repo root) holds
+the fingerprints of known findings.  ``tools/check.py --compare`` fails
+only on fingerprints NOT in the file, so a rule can land stricter than
+the current code without blocking CI -- but the goal state (and the
+shipped state for ``serving/`` and ``cache/``) is an EMPTY baseline:
+every real finding fixed or pragma'd, nothing grandfathered.
+
+``pragma-no-reason`` findings are never baselineable: an exemption
+without a reason is a process violation, not technical debt.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.findings import PRAGMA_NO_REASON, Finding
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path) -> set:
+    """Fingerprint set from a baseline file (empty if absent)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return {f["fingerprint"] for f in data.get("findings", [])}
+
+
+def save_baseline(path, findings) -> None:
+    """Write the grandfather file for the given findings (sorted,
+    reason-less pragmas excluded -- those must be fixed, not recorded)."""
+    by_fp = {f.fingerprint(): f for f in findings
+             if f.rule != PRAGMA_NO_REASON}
+    records = [
+        {"fingerprint": fp, "rule": f.rule, "path": f.path,
+         "qualname": f.qualname, "message": f.message}
+        for fp, f in sorted(by_fp.items())]
+    pathlib.Path(path).write_text(json.dumps(
+        {"version": BASELINE_VERSION, "findings": records},
+        indent=2, sort_keys=True) + "\n")
+
+
+def new_findings(findings, baseline_fps) -> list:
+    """Findings not covered by the baseline.  ``pragma-no-reason`` is
+    always new by design."""
+    return [f for f in findings
+            if f.rule == PRAGMA_NO_REASON
+            or f.fingerprint() not in baseline_fps]

@@ -1,0 +1,115 @@
+"""Name-based call graph over the repo's ASTs (DESIGN.md 16).
+
+Python offers no sound static call resolution, so the sanitizer
+over-approximates on purpose: a call ``self.f()`` / ``obj.f()`` /
+``f()`` reaches *every* definition named ``f`` anywhere in the scanned
+tree.  Over-approximation errs toward scanning too much code with the
+hot-path rules -- strictly safe for a linter whose job is catching
+accidental host syncs (a missed edge would be a silent hole; a spurious
+edge is at worst a pragma).
+
+Nested ``def``s (the jit bodies built inside ``__init__``) index under
+their parent's qualname but are only reachable through an explicit
+name reference; the tick never calls them by name (they are dispatched
+through jitted attributes), so trace-time code stays out of host-sync
+scope -- Python control flow on tracers inside a jit already fails at
+trace time and needs no linter.
+"""
+from __future__ import annotations
+
+import ast
+import collections
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    qualname: str              # e.g. "PagedEngine.step", "prompt_bucket"
+    name: str                  # bare name, the resolution key
+    cls: Optional[str]         # enclosing class, if a method
+    path: str                  # repo-relative path of the defining module
+    node: ast.AST              # the FunctionDef
+    calls: set = dataclasses.field(default_factory=set)   # called names
+
+
+def _called_names(fn: ast.AST) -> set:
+    """Bare names this function calls (or references, for the local
+    nested-def case), excluding nested function bodies."""
+    names: set = set()
+    nested = {n.name for n in ast.walk(fn)
+              if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+              and n is not fn}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name):
+                names.add(f.id)
+            elif isinstance(f, ast.Attribute):
+                names.add(f.attr)
+        elif isinstance(node, ast.Name) and node.id in nested:
+            names.add(node.id)           # e.g. jax.jit(step_fn)
+    return names
+
+
+class SymbolIndex:
+    """Every function/method definition in the scanned tree, resolvable
+    by bare name, plus reachability from a set of root methods."""
+
+    def __init__(self):
+        self.funcs: dict[str, FuncInfo] = {}
+        self.by_name: dict[str, list[str]] = collections.defaultdict(list)
+
+    def add_module(self, path: str, tree: ast.Module):
+        def add(fn: ast.AST, qual: str, cls: Optional[str]):
+            fi = FuncInfo(qualname=f"{path}::{qual}", name=fn.name,
+                          cls=cls, path=path, node=fn,
+                          calls=_called_names(fn))
+            self.funcs[fi.qualname] = fi
+            self.by_name[fi.name].append(fi.qualname)
+            for child in ast.walk(fn):
+                if (isinstance(child, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+                        and child is not fn
+                        and getattr(child, "_cg_seen", False) is False):
+                    child._cg_seen = True
+                    add(child, f"{qual}.{child.name}", cls)
+
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                node._cg_seen = True
+                add(node, node.name, None)
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        item._cg_seen = True
+                        add(item, f"{node.name}.{item.name}", node.name)
+
+    def roots(self, root_specs) -> list[str]:
+        """Qualnames matching (class, method) root specs.  ``class`` of
+        None matches module-level functions of that name."""
+        out = []
+        for cls, name in root_specs:
+            for qual in self.by_name.get(name, ()):
+                fi = self.funcs[qual]
+                if fi.cls == cls or (cls is not None and fi.cls is not None
+                                     and fi.cls == cls):
+                    out.append(qual)
+        return out
+
+    def reachable(self, root_specs) -> set:
+        """Qualnames reachable from the roots through the by-name graph."""
+        seen: set = set()
+        work = list(self.roots(root_specs))
+        while work:
+            qual = work.pop()
+            if qual in seen:
+                continue
+            seen.add(qual)
+            fi = self.funcs[qual]
+            for name in fi.calls:
+                for callee in self.by_name.get(name, ()):
+                    if callee not in seen:
+                        work.append(callee)
+        return seen

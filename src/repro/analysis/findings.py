@@ -1,0 +1,103 @@
+"""Findings and pragmas for the hot-path sanitizer (DESIGN.md 16).
+
+A ``Finding`` is one rule violation at one source location.  Its
+``fingerprint`` deliberately omits the line number: baselines must
+survive unrelated edits above a grandfathered site, so identity is
+(rule, file, enclosing def, message) -- stable until the offending code
+itself moves files or changes meaning.
+
+Suppression pragmas are comments on the offending line or the line
+above (the comment marker is elided here so the sanitizer does not read
+its own documentation as pragmas):
+
+    ``sync-ok: <reason>``           exempts a sanctioned host sync
+                                    (hot-sync / hot-branch rules only)
+    ``lint-ok(<rule>): <reason>``   exempts one named rule
+    ``lint-ok: <reason>``           exempts any rule on that line
+
+The reason is mandatory: a pragma with an empty reason both fails to
+suppress and raises its own ``pragma-no-reason`` finding, which is never
+baselineable -- every exemption stays self-documenting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# the rules a bare sync-ok pragma covers: sanctioned host syncs
+SYNC_RULES = frozenset({"hot-sync", "hot-branch"})
+PRAGMA_NO_REASON = "pragma-no-reason"
+
+_PRAGMA_RE = re.compile(
+    r"#\s*(?P<kind>sync-ok|lint-ok)"
+    r"(?:\(\s*(?P<rule>[a-z0-9_-]+)\s*\))?"
+    r"\s*:\s*(?P<reason>.*?)\s*$")
+# looser net: a pragma-shaped comment that the strict form rejects
+# (missing colon / reason) must fail loudly, not silently not-suppress
+_PRAGMA_ANY_RE = re.compile(r"#\s*(sync-ok|lint-ok)\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    qualname: str      # enclosing Class.method / function / <module>
+    message: str
+
+    def fingerprint(self) -> str:
+        return "|".join((self.rule, self.path, self.qualname, self.message))
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"{self.qualname}: {self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    kind: str                  # "sync-ok" | "lint-ok"
+    rule: Optional[str]        # the named rule filter; None = any rule
+    reason: str
+    line: int
+
+
+class Pragmas:
+    """Per-file pragma table: which (rule, line) pairs are exempted."""
+
+    def __init__(self, source: str, path: str):
+        self.path = path
+        self._by_line: dict[int, Pragma] = {}
+        self.malformed: list[int] = []     # pragma-shaped, reason missing
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _PRAGMA_RE.search(text)
+            if m:
+                p = Pragma(m.group("kind"), m.group("rule"),
+                           m.group("reason"), i)
+                if p.reason:
+                    self._by_line[i] = p
+                else:
+                    self.malformed.append(i)
+            elif _PRAGMA_ANY_RE.search(text):
+                self.malformed.append(i)
+
+    def covers(self, rule: str, line: int) -> Optional[Pragma]:
+        """The pragma exempting ``rule`` at ``line`` (same line or the
+        line above), if any."""
+        for ln in (line, line - 1):
+            p = self._by_line.get(ln)
+            if p is None:
+                continue
+            if p.kind == "sync-ok" and rule in SYNC_RULES:
+                return p
+            if p.kind == "lint-ok" and (p.rule is None or p.rule == rule):
+                return p
+        return None
+
+    def reasonless_findings(self) -> list[Finding]:
+        return [Finding(PRAGMA_NO_REASON, self.path, ln, "<module>",
+                        "suppression pragma without a reason (write "
+                        "'sync-ok: <why>' or 'lint-ok(<rule>): <why>' "
+                        "after the comment marker)")
+                for ln in self.malformed]

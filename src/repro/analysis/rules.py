@@ -1,0 +1,599 @@
+"""The hot-path sanitizer's rule catalog (DESIGN.md 16).
+
+Four invariant families over ``src/repro`` (each PR 5-8 property that is
+otherwise just a convention), all AST-level, no imports of the checked
+code:
+
+hot-sync / hot-branch   no host sync (``jax.device_get``,
+                        ``block_until_ready``, ``.item()``, or
+                        ``int``/``float``/``bool``/``np.asarray`` of a
+                        device value) and no Python ``if``/``while`` on
+                        a device value inside functions reachable from
+                        the engine ``step`` roots.  Sanctioned syncs
+                        carry a ``# sync-ok: <reason>`` pragma.
+metrics-name/-bind/-label
+                        registry names match the Prometheus grammar
+                        (counters end ``_total``); handles bind at
+                        construction, never in tick scope; label values
+                        come from the repo-wide vocabulary (a singleton
+                        value one edit away from an established one is
+                        the ``kind="sesion"`` typo class).
+ownership-pair/-deferred
+                        a class that ``share()``s or ``cow()``s pages
+                        must also release them somewhere
+                        (``drop_page``/``release``/``free_request``);
+                        engine/session-layer tier movers run inside a
+                        ``store.deferred()`` episode so eviction storms
+                        stay batched.
+donated-reread / prefill-bucket
+                        a buffer donated to a jitted call is reassigned
+                        in the same function after the dispatch; every
+                        prefill batch comes from ``_pad_prompt`` (the
+                        bucketing choke point), never a raw dict.
+
+Device-value tracking is an intra-function taint walk: values produced
+by ``jnp.*``/``jax.*`` calls (or jitted attributes, or device-resident
+``self`` attributes discovered by a per-class fixpoint) are device;
+``jax.device_get`` and the host casts launder back to host.  The walk is
+deliberately shallow -- no inter-procedural taint -- so its false
+positives stay explainable and its misses are covered by the runtime
+transfer guard (repro.analysis.runtime).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Optional
+
+from repro.analysis.callgraph import SymbolIndex
+from repro.analysis.findings import Finding, Pragmas
+
+# the decode-loop roots: everything reachable from these is tick scope
+ROOTS = (("PagedEngine", "step"), ("Engine", "step"))
+
+ALL_RULES = ("hot-sync", "hot-branch", "metrics-name", "metrics-bind",
+             "metrics-label", "ownership-pair", "ownership-deferred",
+             "donated-reread", "prefill-bucket")
+
+# calls that produce HOST values (cut the taint walk; some are also the
+# banned casts when fed a device value)
+_HOST_PRODUCERS = {
+    "jax.device_get", "int", "float", "bool", "str", "len", "range",
+    "isinstance", "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "time.time", "time.perf_counter", "jnp.dtype", "jnp.shape",
+}
+# array METADATA reads are host values even on a device array: shapes
+# and dtypes never live on the accelerator
+_HOST_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "nbytes"}
+_HOST_CASTS = {"int", "float", "bool"}
+_NP_READS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+
+# device-resident attribute seeds that the per-class assignment fixpoint
+# cannot derive (built through helpers, e.g. the tier store's pools
+# tuple): reads of ``self.<name>`` count as device values
+DEVICE_ATTR_SEEDS = {"pools"}
+
+_METRIC_FACTORIES = {"counter", "gauge", "histogram"}
+_METRIC_READS = {"get_value", "families"}
+_LABEL_KEYS = {"kind", "cls", "to", "tier", "task"}
+_MOVERS = {"demote_to_warm", "demote_to_cold", "promote_to_hot",
+           "promote_to_warm", "copy_hot"}
+_ACQUIRES = {"share", "cow"}
+_RELEASES = {"drop_page", "release", "free_request"}
+# the mover-episode rule applies where eviction storms originate
+_DEFERRED_SCOPES = ("serving/", "sessions/")
+
+
+def _dotted(node) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _iter_own_nodes(fn: ast.AST):
+    """Walk a function body, excluding nested def/class/lambda bodies
+    (jit closures are traced code, not host code)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# -- taint --------------------------------------------------------------------
+
+class _Taint:
+    """Intra-function device-value tracking."""
+
+    def __init__(self, device_attrs: set, jit_attrs: set):
+        self.device_attrs = device_attrs
+        self.jit_attrs = jit_attrs
+        self.names: set = set()
+
+    def tainted(self, node) -> bool:
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in _HOST_ATTRS:
+                return False
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "self"
+                    and node.attr in self.device_attrs):
+                return True
+            return self.tainted(node.value)
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func)
+            if d in _HOST_PRODUCERS:
+                return False
+            if d is not None:
+                root = d.split(".", 1)[0]
+                if root in ("jnp", "jax"):
+                    return True
+                if d.startswith("self.") and d[5:] in self.jit_attrs:
+                    return True
+            return (any(self.tainted(a) for a in node.args)
+                    or any(self.tainted(k.value) for k in node.keywords))
+        return any(self.tainted(c) for c in ast.iter_child_nodes(node))
+
+    def assign(self, target, is_device: bool):
+        if isinstance(target, ast.Name):
+            (self.names.add if is_device
+             else self.names.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.assign(elt, is_device)
+        # self.X targets are handled by the class-level fixpoint
+
+
+def _class_device_attrs(methods, jit_attrs: set) -> set:
+    """Per-class fixpoint: attributes ever assigned a device value in
+    any method become device attributes everywhere in the class."""
+    attrs = set(DEVICE_ATTR_SEEDS)
+    for _ in range(4):                       # tiny lattice; converges fast
+        grew = False
+        for fn in methods:
+            taint = _Taint(attrs, jit_attrs)
+            for node in _walk_statements(fn):
+                _simulate_assign(node, taint)
+                if isinstance(node, ast.Assign):
+                    dev = taint.tainted(node.value)
+                    if not dev:
+                        continue
+                    for tgt in node.targets:
+                        for leaf in ([tgt] if not isinstance(
+                                tgt, (ast.Tuple, ast.List)) else tgt.elts):
+                            if (isinstance(leaf, ast.Attribute)
+                                    and isinstance(leaf.value, ast.Name)
+                                    and leaf.value.id == "self"
+                                    and leaf.attr not in attrs):
+                                attrs.add(leaf.attr)
+                                grew = True
+        if not grew:
+            break
+    return attrs
+
+
+def _walk_statements(fn):
+    """Statements of a function in source order (nested defs excluded),
+    with loop bodies visited twice so loop-carried taint propagates."""
+    def emit(body):
+        out = []
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            out.append(stmt)
+            for field in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, field, None)
+                if inner:
+                    sub = emit(inner)
+                    out.extend(sub)
+                    if isinstance(stmt, (ast.For, ast.While)):
+                        out.extend(sub)      # second pass: loop carry
+            for h in getattr(stmt, "handlers", ()) or ():
+                out.extend(emit(h.body))
+        return out
+    return emit(fn.body)
+
+
+def _simulate_assign(node, taint: _Taint):
+    """Update the taint set for one statement (no findings)."""
+    if isinstance(node, ast.Assign):
+        dev = taint.tainted(node.value)
+        for tgt in node.targets:
+            taint.assign(tgt, dev)
+    elif isinstance(node, ast.AnnAssign) and node.value is not None:
+        taint.assign(node.target, taint.tainted(node.value))
+    elif isinstance(node, ast.AugAssign):
+        if taint.tainted(node.value):
+            taint.assign(node.target, True)
+    elif isinstance(node, ast.For):
+        taint.assign(node.target, taint.tainted(node.iter))
+    elif isinstance(node, ast.With):
+        for item in node.items:
+            if item.optional_vars is not None:
+                taint.assign(item.optional_vars,
+                             taint.tainted(item.context_expr))
+
+
+# -- per-module scan ----------------------------------------------------------
+
+class Module:
+    def __init__(self, relpath: str, source: str):
+        self.relpath = relpath
+        self.source = source
+        self.tree = ast.parse(source)
+        self.pragmas = Pragmas(source, relpath)
+
+
+def _stmt_exprs(stmt):
+    """The expressions belonging to ONE statement (headers of compound
+    statements; nested statement bodies are visited as their own
+    statements, so walking them here would double-report)."""
+    if isinstance(stmt, ast.With):
+        for i in stmt.items:
+            yield i.context_expr
+        return
+    for c in ast.iter_child_nodes(stmt):
+        if isinstance(c, ast.expr):
+            yield c
+
+
+def _expr_calls(stmt):
+    for root in _stmt_exprs(stmt):
+        for sub in ast.walk(root):
+            if isinstance(sub, ast.Call):
+                yield sub
+
+
+def _class_jit_attrs(cls_node) -> dict:
+    """{attr: donate_argnums tuple} for ``self.X = jax.jit(...)``
+    assignments anywhere in the class (module-level jits resolve through
+    the same shapes with an empty class)."""
+    out = {}
+    for node in ast.walk(cls_node):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call)
+                and _dotted(call.func) == "jax.jit"):
+            continue
+        donated = ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    donated = tuple(ast.literal_eval(kw.value))
+                except (ValueError, TypeError):
+                    donated = ()
+        out[tgt.attr] = donated
+    return out
+
+
+def _check_function(mod: Module, fn, qualname: str, device_attrs: set,
+                    jit_attrs: dict, in_tick_scope: bool,
+                    findings: list):
+    """Hot-sync / hot-branch / metrics-bind / donated-reread /
+    prefill-bucket over one function body."""
+    taint = _Taint(device_attrs, set(jit_attrs))
+    assigns = [n for n in _walk_statements(fn) if isinstance(n, ast.Assign)]
+
+    def emit(rule, node, msg):
+        findings.append(Finding(rule, mod.relpath, node.lineno,
+                                qualname, msg))
+
+    for stmt in _walk_statements(fn):
+        _simulate_assign(stmt, taint)
+        if in_tick_scope and isinstance(stmt, (ast.If, ast.While)):
+            if taint.tainted(stmt.test):
+                emit("hot-branch", stmt,
+                     "Python control flow on a device value forces a "
+                     "blocking d2h read in the decode tick")
+        for call in _expr_calls(stmt):
+            d = _dotted(call.func)
+            attr = (call.func.attr
+                    if isinstance(call.func, ast.Attribute) else None)
+            if in_tick_scope:
+                if d == "jax.device_get":
+                    emit("hot-sync", call,
+                         "jax.device_get in tick scope (host sync)")
+                elif attr == "block_until_ready":
+                    emit("hot-sync", call,
+                         "block_until_ready in tick scope (host sync)")
+                elif attr == "item" and not call.args:
+                    emit("hot-sync", call,
+                         ".item() in tick scope (host sync)")
+                elif (d in _HOST_CASTS
+                        and any(taint.tainted(a) for a in call.args)):
+                    emit("hot-sync", call,
+                         f"{d}() of a device value in tick scope "
+                         f"(host sync)")
+                elif (d in _NP_READS
+                        and any(taint.tainted(a) for a in call.args)):
+                    emit("hot-sync", call,
+                         f"{d}() of a device value in tick scope "
+                         f"(d2h read the transfer guard cannot see "
+                         f"on CPU)")
+                elif attr in (_METRIC_FACTORIES | _METRIC_READS):
+                    emit("metrics-bind", call,
+                         f".{attr}() in tick scope: bind metric handles "
+                         f"in __init__, not per tick")
+            # donated-reread: the donated operand must be reassigned
+            # after the dispatch, in the same function
+            if (d is not None and d.startswith("self.")
+                    and d[5:] in jit_attrs and jit_attrs[d[5:]]):
+                for pos in jit_attrs[d[5:]]:
+                    if pos >= len(call.args):
+                        continue
+                    donated = _dotted(call.args[pos])
+                    if donated is None:
+                        continue
+                    ok = any(
+                        a.lineno >= call.lineno
+                        and any(_dotted(t) == donated for t in a.targets)
+                        for a in assigns)
+                    if not ok:
+                        emit("donated-reread", call,
+                             f"donated buffer {donated} is not "
+                             f"reassigned after the jitted dispatch "
+                             f"(reading it is use-after-donate)")
+            # prefill-bucket: the batch operand of self._prefill must
+            # come from _pad_prompt (the bucketing choke point)
+            if d == "self._prefill" and len(call.args) >= 2:
+                batch = call.args[1]
+                ok = False
+                bd = _dotted(batch)
+                if (isinstance(batch, ast.Call)
+                        and _dotted(batch.func) == "self._pad_prompt"):
+                    ok = True
+                elif bd is not None:
+                    for a in assigns:
+                        if (a.lineno <= call.lineno
+                                and any(_dotted(t) == bd
+                                        for t in a.targets)
+                                and isinstance(a.value, ast.Call)
+                                and _dotted(a.value.func)
+                                == "self._pad_prompt"):
+                            ok = True
+                if not ok:
+                    emit("prefill-bucket", call,
+                         "prefill batch does not come from _pad_prompt: "
+                         "unbucketed shapes recompile per prompt length")
+
+
+def _check_metrics_names(mod: Module, findings: list):
+    import re
+    name_re = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        attr = (node.func.attr
+                if isinstance(node.func, ast.Attribute) else None)
+        if attr not in _METRIC_FACTORIES or not node.args:
+            continue
+        first = node.args[0]
+        if not (isinstance(first, ast.Constant)
+                and isinstance(first.value, str)):
+            continue
+        name = first.value
+        qual = "<module>"
+        if not name_re.match(name):
+            findings.append(Finding(
+                "metrics-name", mod.relpath, node.lineno, qual,
+                f"metric name {name!r} violates the Prometheus grammar"))
+        elif attr == "counter" and not name.endswith("_total"):
+            findings.append(Finding(
+                "metrics-name", mod.relpath, node.lineno, qual,
+                f"counter {name!r} must end in _total"))
+
+
+def _edit_distance(a: str, b: str) -> int:
+    if abs(len(a) - len(b)) > 1:
+        return 2                             # only 0/1 matter here
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        for j, cb in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1,
+                           prev[j - 1] + (ca != cb)))
+        prev = cur
+    return prev[-1]
+
+
+def _check_label_vocab(modules: list, findings: list):
+    """Repo-wide closed label vocabulary: a literal label value used
+    exactly once, one edit away from a value used >= 2 times, is a typo."""
+    sites: list = []                         # (key, value, mod, node)
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if (kw.arg in _LABEL_KEYS
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, str)):
+                    sites.append((kw.arg, kw.value.value, mod, node))
+    counts: dict = {}
+    for key, val, _, _ in sites:
+        counts[(key, val)] = counts.get((key, val), 0) + 1
+    established = {(k, v) for (k, v), n in counts.items() if n >= 2}
+    for key, val, mod, node in sites:
+        if counts[(key, val)] != 1:
+            continue
+        near = [v for (k, v) in established
+                if k == key and _edit_distance(val, v) == 1]
+        if near:
+            findings.append(Finding(
+                "metrics-label", mod.relpath, node.lineno, "<module>",
+                f"label {key}={val!r} appears once and is one edit from "
+                f"established {key}={near[0]!r} -- typo?"))
+
+
+def _check_ownership_pair(mod: Module, findings: list):
+    """A class that share()/cow()s pages must release them somewhere."""
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        defined = {i.name for i in node.body
+                   if isinstance(i, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))}
+        if _ACQUIRES & defined:
+            continue                         # the pool itself / a stub
+        acquires, releases = [], False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and isinstance(sub.func,
+                                                        ast.Attribute):
+                if sub.func.attr in _ACQUIRES:
+                    acquires.append(sub)
+                elif sub.func.attr in _RELEASES:
+                    releases = True
+        if acquires and not releases:
+            first = acquires[0]
+            findings.append(Finding(
+                "ownership-pair", mod.relpath, first.lineno, node.name,
+                f"class takes page references ({first.func.attr}) but "
+                f"never releases them (no drop_page/release/"
+                f"free_request call)"))
+
+
+def _check_deferred(mod: Module, findings: list):
+    """Tier movers in engine/session code must run inside a
+    ``store.deferred()`` episode (batched-dispatch discipline)."""
+    if not any(s in mod.relpath for s in _DEFERRED_SCOPES):
+        return
+
+    def walk(node, qual, in_deferred):
+        for child in ast.iter_child_nodes(node):
+            q, deferred = qual, in_deferred
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = (f"{qual}.{child.name}" if qual != "<module>"
+                     else child.name)
+                deferred = False             # episodes do not cross defs
+            elif isinstance(child, ast.ClassDef):
+                q = child.name
+            elif isinstance(child, ast.With):
+                if any(isinstance(i.context_expr, ast.Call)
+                       and isinstance(i.context_expr.func, ast.Attribute)
+                       and i.context_expr.func.attr == "deferred"
+                       for i in child.items):
+                    deferred = True
+            elif (isinstance(child, ast.Call)
+                    and isinstance(child.func, ast.Attribute)
+                    and child.func.attr in _MOVERS
+                    and not in_deferred):
+                findings.append(Finding(
+                    "ownership-deferred", mod.relpath, child.lineno, qual,
+                    f".{child.func.attr}() outside a store.deferred() "
+                    f"episode: single-page mover dispatches serialize "
+                    f"eviction storms"))
+            walk(child, q, deferred)
+
+    walk(mod.tree, "<module>", False)
+
+
+# -- driver -------------------------------------------------------------------
+
+def _collect_files(paths) -> list:
+    files = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def run_checks(paths, root=None, rules=None, roots=ROOTS) -> list:
+    """Run the rule catalog over ``paths``; returns unsuppressed
+    findings sorted by location.  ``root`` anchors the repo-relative
+    paths used in fingerprints (defaults to the common parent)."""
+    rules = set(rules if rules is not None else ALL_RULES)
+    files = _collect_files(paths)
+    root = pathlib.Path(root) if root is not None else None
+    modules, findings = [], []
+    for f in files:
+        rel = (f.relative_to(root) if root and f.is_relative_to(root)
+               else f).as_posix()
+        try:
+            modules.append(Module(rel, f.read_text()))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding("parse", rel,
+                                    getattr(e, "lineno", 1) or 1,
+                                    "<module>", f"unparseable: {e.msg}"))
+
+    index = SymbolIndex()
+    for mod in modules:
+        index.add_module(mod.relpath, mod.tree)
+    tick_scope = index.reachable(roots)
+
+    for mod in modules:
+        if rules & {"metrics-name"}:
+            _check_metrics_names(mod, findings)
+        if rules & {"ownership-pair"}:
+            _check_ownership_pair(mod, findings)
+        if rules & {"ownership-deferred"}:
+            _check_deferred(mod, findings)
+        # per-function rules need class context (jit attrs / device attrs)
+        tops = [(n, None) for n in mod.tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for node in mod.tree.body:
+            if isinstance(node, ast.ClassDef):
+                tops.extend((i, node) for i in node.body
+                            if isinstance(i, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef)))
+        by_class: dict = {}
+        for fn, cls in tops:
+            by_class.setdefault(cls.name if cls else None,
+                                []).append(fn)
+        jit_by_class = {}
+        dev_by_class = {}
+        for node in mod.tree.body:
+            if isinstance(node, ast.ClassDef):
+                jit = _class_jit_attrs(node)
+                jit_by_class[node.name] = jit
+                dev_by_class[node.name] = _class_device_attrs(
+                    by_class.get(node.name, []), set(jit))
+        for fn, cls in tops:
+            cname = cls.name if cls else None
+            qual = f"{cname}.{fn.name}" if cname else fn.name
+            in_scope = f"{mod.relpath}::{qual}" in tick_scope
+            _check_function(
+                mod, fn, qual,
+                dev_by_class.get(cname, set(DEVICE_ATTR_SEEDS)),
+                jit_by_class.get(cname, {}), in_scope, findings)
+
+    if rules & {"metrics-label"}:
+        _check_label_vocab(modules, findings)
+
+    # pragma suppression + reasonless-pragma findings
+    pragmas = {m.relpath: m.pragmas for m in modules}
+    kept = []
+    for f in findings:
+        if f.rule not in rules and f.rule != "parse":
+            continue
+        p = pragmas.get(f.path)
+        if p is not None and p.covers(f.rule, f.line):
+            continue
+        kept.append(f)
+    for m in modules:
+        kept.extend(m.pragmas.reasonless_findings())
+    # the taint walk visits loop bodies twice (loop-carried taint); the
+    # second pass must not double-report
+    kept = sorted(set(kept), key=lambda f: (f.path, f.line, f.rule))
+    return kept

@@ -1,0 +1,82 @@
+"""Runtime sentinels for the hazards the AST cannot see (DESIGN.md 16).
+
+Two guards, both fence-free when disabled (the NULL_REGISTRY pattern:
+disabled mode costs one attribute read and a no-op context manager, no
+jax import, no device traffic):
+
+``tick_guard``      a context-manager factory wrapping the jitted tick
+                    dispatch in ``jax.transfer_guard("disallow")``:
+                    any IMPLICIT host<->device transfer inside the
+                    dispatch (a host mirror leaked into the jit args, a
+                    Python scalar re-staged per tick) raises instead of
+                    silently serializing.  Explicit moves
+                    (``jax.device_get``, ``jax.device_put``) stay legal
+                    -- the lagged harvest is sanctioned.  Note the CPU
+                    backend's d2h reads (``np.asarray`` of a committed
+                    array) are zero-copy and invisible to the guard;
+                    the AST hot-sync rule covers that gap.
+``RetraceSentinel`` / ``assert_compile_bound``
+                    the compile-count assertion behind the PR 5 bucket
+                    ladder: >= 12 distinct prompt lengths must compile
+                    <= n_prompt_buckets prefill variants.  serving_micro
+                    checks it per scenario so a quiet bucketing
+                    regression fails CI, not a later bisect.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class _NullCtx:
+    """Shared no-op context manager: the disabled-guard hot path."""
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+def tick_guard(strict: bool):
+    """A zero-arg context factory for the jitted tick dispatch.
+
+    ``strict=False`` returns the shared no-op (no jax import, nothing
+    on the hot path); ``strict=True`` returns a factory opening
+    ``jax.transfer_guard("disallow")`` around each dispatch.  Callers
+    must stage every per-tick jit input as a committed device value
+    BEFORE opening the guard -- implicit h2d of a host mirror inside it
+    raises, which is exactly the invariant being enforced.
+    """
+    if not strict:
+        return lambda: _NULL_CTX
+    import jax
+    return lambda: jax.transfer_guard("disallow")
+
+
+class RetraceError(AssertionError):
+    """A scenario compiled more prefill variants than the bucket ladder
+    allows -- the pre-PR one-program-per-prompt-length regression."""
+
+
+def assert_compile_bound(scenario: str, compiles: int, bound: int) -> None:
+    if compiles > bound:
+        raise RetraceError(
+            f"{scenario}: {compiles} prefill compiles exceeds the "
+            f"{bound}-bucket bound (prompt bucketing regressed; see "
+            f"DESIGN.md 12/16)")
+
+
+@dataclasses.dataclass
+class RetraceSentinel:
+    """Compile-count watchdog bound to one engine: ``check()`` after a
+    scenario asserts the bucket-ladder bound still holds."""
+    scenario: str
+    bound: int
+
+    def check(self, engine) -> int:
+        compiles = engine.prefill_compiles()
+        assert_compile_bound(self.scenario, compiles, self.bound)
+        return compiles

@@ -193,6 +193,7 @@ class Memoizer:
         if (self._since_replan >= self.replan_every
                 and self._calls_host >= self.warmup_calls):
             self._since_replan = 0
+            # sync-ok: once-per-window replan reads the LUT hit counters
             hits, calls = int(self.lut["hits"]), int(self.lut["calls"])
             win_rate = ((hits - self._win_hits)
                         / max(calls - self._win_calls, 1))

@@ -219,6 +219,7 @@ def _encode_uniform(blocks: jax.Array, enc_id: int):
 def choose_uniform_encoding(x: jax.Array, block_bytes: int = bo.DEFAULT_BLOCK_BYTES) -> int:
     """Smallest encoding feasible for EVERY block (paper's one-encoding opt)."""
     blocks, _ = bo.pad_to_blocks(bo.to_bytes(x), block_bytes)
+    # sync-ok: cold-pack encoding choice reads the feasibility vector
     feas_all = np.asarray(jnp.all(analyze(blocks), axis=0))
     sizes = np.asarray([enc_size(i, block_bytes) for i, *_ in ENCODINGS])
     sizes = np.where(feas_all, sizes, 1 << 30)

@@ -69,6 +69,7 @@ class CPacked:
         return self.ok.shape[0]
 
     def compressed_bytes(self) -> int:
+        # sync-ok: cold-pack size accounting reads the feasibility count
         nc = int(np.asarray(jnp.sum(self.ok)))
         n = self.nblocks
         cb = compressed_block_bytes(self.block_bytes)

@@ -54,6 +54,7 @@ class PlanesTensor:
         return self.ok.shape[0]
 
     def compressed_bytes(self) -> int:
+        # sync-ok: cold-pack size accounting reads the feasibility count
         nc = int(np.asarray(jnp.sum(self.ok)))
         n = self.nblocks
         V = self.block_values

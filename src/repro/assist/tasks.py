@@ -160,6 +160,11 @@ AssistSubroutine = CompressTask
 # trigger/throttle implementation.
 # ---------------------------------------------------------------------------
 
+# the known prefetch consumers (the ``kind=`` label vocabulary): lane
+# lookahead, prefix-store re-promotion, session resume
+PREFETCH_KINDS = ("lookahead", "prefix", "session")
+
+
 class PrefetchTask:
     """Cold->warm page prefetch queue (the WaSP lookahead, paper 8.2).
 
@@ -209,15 +214,23 @@ class PrefetchTask:
             "cold pages at swap-in (legacy miss: issued or not)")
         self._g_queue = self.metrics.gauge(
             "prefetch_queue_depth", "pages queued for cold->warm promotion")
-        # per-consumer issue counter: the queue serves several producers
+        # per-consumer issue counters: the queue serves several producers
         # (lane lookahead, prefix-store re-promotion, session resume) and
         # the kind label keeps their traffic separable without touching
-        # the outcome-conservation family above
-        self._c_kind: dict = {}
+        # the outcome-conservation family above.  The known kinds are
+        # PRE-BOUND (metrics discipline, DESIGN.md 16: no registry access
+        # in tick scope); an out-of-vocabulary kind binds lazily, once.
+        self._c_kind: dict = {
+            kind: self.metrics.counter(
+                "prefetch_issued_total",
+                "pages entering the prefetch queue, by consumer kind",
+                kind=kind)
+            for kind in PREFETCH_KINDS}
 
     def _issued_kind(self, kind: str):
         c = self._c_kind.get(kind)
         if c is None:
+            # lint-ok(metrics-bind): out-of-vocabulary kind, binds once
             c = self._c_kind[kind] = self.metrics.counter(
                 "prefetch_issued_total",
                 "pages entering the prefetch queue, by consumer kind",

@@ -248,6 +248,7 @@ def _pack_cold(x8: np.ndarray, use_delta: bool = True):
         arr = jnp.asarray(plane)
         for name, task in COLD_TASKS.items():
             c = task.compress(arr)
+            # sync-ok: cold-pack scheme choice compares freshly packed sizes
             if c.compressed_bytes() < best_bytes:
                 best_name = name + suffix
                 best_obj, best_bytes = c, c.compressed_bytes()
@@ -795,8 +796,10 @@ class TieredKVStore:
             pj = self.pools[j]
             recs = []
             for _, qname, sname in _plane_triples(pj):
+                # sync-ok: cold packing reads the warm planes on host
                 x8 = np.asarray(pj[qname][:, ws])
                 name, obj, nb = _pack_cold(x8, self.cold_delta)
+                # sync-ok: cold packing reads the warm scales on host
                 sc = np.asarray(pj[sname][:, ws])
                 recs.append((name, obj, sc))
                 nbytes += nb + sc.nbytes
@@ -840,8 +843,10 @@ class TieredKVStore:
             for (name, obj, sc), (_, qname, sname), w in zip(
                     rec.planes[i], _plane_triples(self.pools[j]), widths):
                 shp = (sg.n_stack, sg.heads, sg.rows, w)
+                # sync-ok: cold unpack decodes on host before the upload
                 planes[qname] = np.asarray(_unpack_cold(name, obj, shp),
                                            np.int8)
+                # sync-ok: cold unpack restores host scales for the upload
                 planes[sname] = np.asarray(sc, np.float32)
             if async_:
                 in_flight.append((j, {n: jax.device_put(a)

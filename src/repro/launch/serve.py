@@ -115,10 +115,18 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="write a Chrome trace-event JSON (Perfetto) of "
                          "the run here")
+    ap.add_argument("--strict-transfers", action="store_true",
+                    help="wrap the jitted tick dispatch in "
+                         "jax.transfer_guard('disallow'): any implicit "
+                         "host<->device transfer in the decode loop "
+                         "raises instead of silently syncing")
     args = ap.parse_args(argv)
     fields = {f.name for f in dataclasses.fields(ServeConfig)}
     spec = ObsSpec.off() if args.no_obs else ObsSpec(
         trace=args.trace is not None)
+    if args.strict_transfers:
+        # composes with --no-obs: the guard is independent of telemetry
+        spec = dataclasses.replace(spec, strict_transfers=True)
     scfg = ServeConfig(obs=spec, **{k: v for k, v in vars(args).items()
                                     if k in fields and k != "obs"})
 

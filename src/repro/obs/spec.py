@@ -27,6 +27,11 @@ class ObsSpec:
     exec_sample_every  N for the probe fence (0 = record dispatch only)
     probe_window       ring size for exact percentile computation
     trace_max_events   trace buffer bound (drops, and counts drops, past it)
+    strict_transfers   wrap the jitted tick dispatch in
+                       ``jax.transfer_guard("disallow")`` (DESIGN.md 16):
+                       any implicit host<->device transfer inside the
+                       dispatch raises.  OFF is fence-free (a shared
+                       no-op context, the NULL_REGISTRY pattern)
     """
     counters: bool = True
     trace: bool = False
@@ -34,6 +39,7 @@ class ObsSpec:
     exec_sample_every: int = 4
     probe_window: int = 2048
     trace_max_events: int = 200_000
+    strict_transfers: bool = False
 
     def __post_init__(self):
         if self.exec_sample_every < 0:

@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.runtime import tick_guard
 from repro.configs.base import DEFAULT_EOS_ID
 from repro.models.model import ModelFns, prompt_bucket
 from repro.obs import Observability
@@ -132,6 +133,12 @@ class EngineBase:
             key, logits / t[:, None], axis=-1).astype(jnp.int32)
         return jnp.where(temps > 0.0, sampled, greedy)
 
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes compiled so far (the retrace gauge:
+        analysis/runtime.py::assert_compile_bound checks it against the
+        bucket count)."""
+        return self._prefill._cache_size()
+
     def _pad_prompt(self, prompt, quantum: int) -> dict:
         """Bucket-padded prefill batch: tokens padded up to the bucket,
         true_len carrying the real length for the in-jit mask."""
@@ -160,6 +167,10 @@ class Engine(EngineBase):
         self.eos_id = eos_id
         self.bucket_prefill = bucket_prefill
         self.obs = obs if obs is not None else Observability()
+        # strict mode wraps the jitted tick dispatch in a transfer guard
+        # (DESIGN.md 16); OFF shares one no-op context -- fence-free
+        self._strict_transfers = bool(self.obs.spec.strict_transfers)
+        self._tick_guard = tick_guard(self._strict_transfers)
         m = self.obs.metrics
         self._c_tokens = m.counter("engine_tokens_generated_total",
                                    "decode tokens harvested")
@@ -258,16 +269,24 @@ class Engine(EngineBase):
             prev, self._inflight = self._inflight, None
             return self._harvest(prev)
         self._tick += 1
+        # stage host mirrors ABOVE the transfer guard; the tick counter is
+        # staged only in strict mode (weak python int vs strong int32 hash
+        # to different jit cache entries -- one compile per mode)
+        temps = jnp.asarray(self._temps)
+        tick = (jnp.asarray(self._tick, jnp.int32)
+                if self._strict_transfers else self._tick)
         probe = self.obs.probe
         t0 = time.perf_counter() if probe is not None else 0.0
-        nxt, self.state = self._decode(self.params, self.state, self.tokens,
-                                       jnp.asarray(self._temps), self.rng,
-                                       self._tick)
+        with self._tick_guard():
+            nxt, self.state = self._decode(self.params, self.state,
+                                           self.tokens, temps, self.rng,
+                                           tick)
         if probe is not None:
             probe.record_dispatch(time.perf_counter() - t0)
             if probe.should_fence(self._tick):
                 # execution-true sample: drain the device queue through
                 # this tick (what a request actually waits)
+                # sync-ok: every-Nth execution-true probe fence
                 jax.block_until_ready(nxt)
                 probe.record_exec(time.perf_counter() - t0)
         self.tokens = nxt[:, None]
@@ -291,6 +310,7 @@ class Engine(EngineBase):
         if prev is None and not firsts:
             return False
         handles = [t for _, t in firsts] + ([prev[0]] if prev else [])
+        # sync-ok: lagged harvest -- device_get overlaps the in-flight tick
         vals = jax.device_get(handles)
         for (req, _), v in zip(firsts, vals):
             req.out.append(int(np.asarray(v).ravel()[0]))

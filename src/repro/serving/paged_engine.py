@@ -60,6 +60,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.runtime import tick_guard
 from repro.assist import AssistController
 from repro.assist.page_kinds import page_kind
 from repro.cache import (BlockPool, CachePolicy, TierConfig,
@@ -127,6 +128,10 @@ class PagedEngine(EngineBase):
                  prefix_prefetch: bool = True,
                  obs: Optional[Observability] = None):
         self.obs = obs if obs is not None else Observability()
+        # strict mode wraps the jitted tick dispatch in a transfer guard
+        # (DESIGN.md 16); OFF shares one no-op context -- fence-free
+        self._strict_transfers = bool(self.obs.spec.strict_transfers)
+        self._tick_guard = tick_guard(self._strict_transfers)
         cfg = model.cfg
         bad = T.paged_unsupported_layers(cfg)
         if bad:
@@ -380,10 +385,6 @@ class PagedEngine(EngineBase):
 
     def resident_tokens(self) -> int:
         return sum(r.length for r in self.resident.values())
-
-    def prefill_compiles(self) -> int:
-        """Distinct prefill shapes compiled so far (the retrace gauge)."""
-        return self._prefill._cache_size()
 
     def pending_decode_tokens(self) -> int:
         """In-flight decode tokens that WILL be appended at the next
@@ -652,69 +653,83 @@ class PagedEngine(EngineBase):
         """All of rid's pages gatherable, its write page AND its state slab
         hot; may allocate the next page at a page boundary.  The request's
         own pages join ``protected`` up front so making room for one of
-        them can never evict another."""
-        st = self.resident[rid]
-        table = self.pool.table(rid)
-        protected.update(table)
-        if self.has_state:
-            spid = self.pool.table(self._state_rid(rid))[0]
-            protected.add(spid)
-            if self.store.tier[spid] == TIER_COLD:
-                if not self.policy.make_warm_room(self.pool, self.store,
-                                                  protected, cls="state"):
-                    return False
-                self.store.promote_to_warm(spid)
-            else:
-                self.store.commit_page(spid)
-            if self.store.tier[spid] == TIER_WARM:
-                if not self.policy.make_hot_room(self.pool, self.store,
-                                                 protected, cls="state"):
-                    return False
-                self.store.promote_to_hot(spid)
-        need = self.pool.pages_for(st.length + 1)
-        while len(table) < need:
-            if self.pool.n_free < 1 or not self.policy.make_hot_room(
-                    self.pool, self.store, protected):
-                return False
-            pid = self.pool.allocate(rid, 1)[0]
-            self.store.place_hot(pid)
-            protected.add(pid)
+        them can never evict another.
+
+        The whole walk runs as ONE ``store.deferred()`` mover episode
+        (DESIGN.md 16 ownership discipline): the state-slab promotion,
+        the write-page re-promotion and the COW copy coalesce into
+        batched dispatches with whatever the policy's room-making evicts,
+        instead of landing as single-page movers between them.  Tier
+        bookkeeping stays eager inside the episode, so every decision
+        below reads up-to-date tiers; the device copies land at episode
+        exit, before ``step``'s pre-dispatch ``flush_movers``."""
+        with self.store.deferred():
+            st = self.resident[rid]
             table = self.pool.table(rid)
-        cold = [p for p in table if self.store.tier[p] == TIER_COLD]
-        if cold:
-            # swap-in promotion for the whole cold run in ONE batched
-            # episode (the session-resume path can carry a full parked
-            # history here) instead of K blocking unpack+write calls
-            if not self.policy.make_warm_room(self.pool, self.store,
-                                              protected, n=len(cold)):
-                return False
-            if len(self.store.promote_many(cold)) != len(cold):
-                return False
-        for pid in table:
-            if self.store.tier[pid] != TIER_COLD:
-                # page may have been async-promoted THIS tick (after the
-                # tick-start barrier): land it before the gather reads it
-                self.store.commit_page(pid)
-        wp = table[st.length // self.pool.page_size]
-        if self.store.tier[wp] == TIER_WARM:
-            if not self.policy.make_hot_room(self.pool, self.store,
-                                             protected):
-                return False
-            self.store.promote_to_hot(wp)
-        if self.pool.is_shared(wp):
-            # copy-on-write divergence (DESIGN.md 14): this tick WRITES
-            # the incoming token's KV into ``wp``, which other readers
-            # (sibling lanes / the prefix store) see read-only.  Break it
-            # out into a private hot copy first; the shared original
-            # keeps its slot, so no other reader's row dirties.
-            if self.pool.n_free < 1 or not self.policy.make_hot_room(
-                    self.pool, self.store, protected):
-                return False
-            new = self.pool.cow(rid, wp)
-            self.store.place_hot(new)
-            self.store.copy_hot(wp, new)
-            protected.add(new)
-        return True
+            protected.update(table)
+            if self.has_state:
+                spid = self.pool.table(self._state_rid(rid))[0]
+                protected.add(spid)
+                if self.store.tier[spid] == TIER_COLD:
+                    if not self.policy.make_warm_room(self.pool, self.store,
+                                                      protected,
+                                                      cls="state"):
+                        return False
+                    self.store.promote_to_warm(spid)
+                else:
+                    self.store.commit_page(spid)
+                if self.store.tier[spid] == TIER_WARM:
+                    if not self.policy.make_hot_room(self.pool, self.store,
+                                                     protected,
+                                                     cls="state"):
+                        return False
+                    self.store.promote_to_hot(spid)
+            need = self.pool.pages_for(st.length + 1)
+            while len(table) < need:
+                if self.pool.n_free < 1 or not self.policy.make_hot_room(
+                        self.pool, self.store, protected):
+                    return False
+                pid = self.pool.allocate(rid, 1)[0]
+                self.store.place_hot(pid)
+                protected.add(pid)
+                table = self.pool.table(rid)
+            cold = [p for p in table if self.store.tier[p] == TIER_COLD]
+            if cold:
+                # swap-in promotion for the whole cold run in ONE batched
+                # episode (the session-resume path can carry a full parked
+                # history here) instead of K blocking unpack+write calls
+                if not self.policy.make_warm_room(self.pool, self.store,
+                                                  protected, n=len(cold)):
+                    return False
+                if len(self.store.promote_many(cold)) != len(cold):
+                    return False
+            for pid in table:
+                if self.store.tier[pid] != TIER_COLD:
+                    # page may have been async-promoted THIS tick (after
+                    # the tick-start barrier): land it before the gather
+                    # reads it
+                    self.store.commit_page(pid)
+            wp = table[st.length // self.pool.page_size]
+            if self.store.tier[wp] == TIER_WARM:
+                if not self.policy.make_hot_room(self.pool, self.store,
+                                                 protected):
+                    return False
+                self.store.promote_to_hot(wp)
+            if self.pool.is_shared(wp):
+                # copy-on-write divergence (DESIGN.md 14): this tick
+                # WRITES the incoming token's KV into ``wp``, which other
+                # readers (sibling lanes / the prefix store) see
+                # read-only.  Break it out into a private hot copy first;
+                # the shared original keeps its slot, so no other
+                # reader's row dirties.
+                if self.pool.n_free < 1 or not self.policy.make_hot_room(
+                        self.pool, self.store, protected):
+                    return False
+                new = self.pool.cow(rid, wp)
+                self.store.place_hot(new)
+                self.store.copy_hot(wp, new)
+                protected.add(new)
+            return True
 
     def _fill_lanes(self, protected: set[int]):
         for i, rid in enumerate(self.lanes):
@@ -813,20 +828,30 @@ class PagedEngine(EngineBase):
 
         self._push_lane_updates()
         self.store.flush_movers()     # pending tier copies precede the read
+        # stage every host mirror ABOVE the transfer guard: the guarded
+        # region must issue zero implicit h2d copies.  The tick counter is
+        # staged only in strict mode -- a python int (weak type) and an
+        # int32 device scalar hash to different jit cache entries, so
+        # conditional staging keeps one compile per mode
+        lengths = jnp.asarray(self._lengths)
+        state_slots = jnp.asarray(self._state_slots)
+        temps = jnp.asarray(self._temps)
+        tick = (jnp.asarray(self.tick_no, jnp.int32)
+                if self._strict_transfers else self.tick_no)
         probe = self.obs.probe
         t0 = time.perf_counter() if probe is not None else 0.0
-        nxt, pools = self._decode(self.params, self.store.pools,
-                                  self._tokens_dev, self._bt_dev,
-                                  jnp.asarray(self._lengths),
-                                  jnp.asarray(self._state_slots),
-                                  jnp.asarray(self._temps),
-                                  self.rng, self.tick_no)
+        with self._tick_guard():
+            nxt, pools = self._decode(self.params, self.store.pools,
+                                      self._tokens_dev, self._bt_dev,
+                                      lengths, state_slots, temps,
+                                      self.rng, tick)
         if probe is not None:
             probe.record_dispatch(time.perf_counter() - t0)
             if probe.should_fence(self.tick_no):
                 # execution-true sample: drain the device queue through
                 # this tick (dispatch start -> result ready, backlog
                 # included -- it is what a request actually waits)
+                # sync-ok: every-Nth execution-true probe fence
                 jax.block_until_ready(nxt)
                 probe.record_exec(time.perf_counter() - t0)
         self.store.pools = pools
@@ -889,6 +914,7 @@ class PagedEngine(EngineBase):
         if prev is None and not firsts:
             return False
         handles = [t for _, t in firsts] + ([prev[0]] if prev else [])
+        # sync-ok: lagged harvest -- device_get overlaps the in-flight tick
         vals = jax.device_get(handles)
         for (req, _), v in zip(firsts, vals):
             tok = int(np.asarray(v).ravel()[0])

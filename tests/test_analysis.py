@@ -1,0 +1,405 @@
+"""Hot-path sanitizer (DESIGN.md 16): per-rule lint fixtures, pragma
+grammar, baseline semantics, the injected-violation canary against the
+REAL paged engine, and the runtime half (transfer guard + retrace
+sentinel).
+
+The lint fixtures build tiny modules around a fake ``PagedEngine.step``
+root so the call-graph reachability matches the real engines without
+importing them; the canary test then proves the same rules fire on the
+actual ``src/repro/serving/paged_engine.py`` when a ``jax.device_get``
+is injected into ``step`` -- the sanitizer guards the real hot path,
+not just synthetic code.
+"""
+import pathlib
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (ALL_RULES, PRAGMA_NO_REASON, load_baseline,
+                            new_findings, run_checks, save_baseline)
+from repro.analysis.runtime import (RetraceError, RetraceSentinel,
+                                    assert_compile_bound, tick_guard)
+from repro.cache import TierConfig
+from repro.configs import ARCHS, reduced
+from repro.models.model import build_model, n_prompt_buckets
+from repro.obs import Observability, ObsSpec
+from repro.serving.engine import Engine, Request
+from repro.serving.paged_engine import PagedEngine
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+HOT_ONLY = TierConfig(page_size=16, hbm_budget_bytes=1 << 30,
+                      enable_warm=False, enable_cold=False)
+
+
+def lint(tmp_path, source, name="mod.py", rules=None):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_checks([p], root=tmp_path, rules=rules)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+def hot_module(work_body: str) -> str:
+    """A module whose ``work`` is tick scope (reachable from the
+    ``PagedEngine.step`` root through the name-based call graph)."""
+    return ("import jax\nimport jax.numpy as jnp\n\n\n"
+            "class PagedEngine:\n"
+            "    def step(self):\n"
+            "        self.work()\n\n"
+            "    def work(self):\n"
+            + textwrap.indent(textwrap.dedent(work_body), " " * 8))
+
+
+# -- hot-path purity ---------------------------------------------------------
+
+def test_hot_sync_device_get_caught_and_pragma_suppressed(tmp_path):
+    bad = hot_module("""\
+        x = jnp.zeros(3)
+        return jax.device_get(x)
+    """)
+    found = lint(tmp_path, bad)
+    assert rules_of(found) == ["hot-sync"], found
+    assert "device_get" in found[0].message
+    assert found[0].qualname == "PagedEngine.work"
+
+    ok = bad.replace("return jax.device_get(x)",
+                     "# sync-ok: test fixture sanctioned sync\n"
+                     "        return jax.device_get(x)")
+    assert lint(tmp_path, ok) == []
+
+
+def test_hot_sync_host_cast_needs_device_value(tmp_path):
+    found = lint(tmp_path, hot_module("""\
+        x = jnp.sum(jnp.ones(3))
+        return int(x)
+    """))
+    assert rules_of(found) == ["hot-sync"], found
+    assert "int()" in found[0].message
+    # int() of a HOST value is fine -- the taint walk, not a grep
+    assert lint(tmp_path, hot_module("""\
+        x = len([1, 2, 3])
+        return int(x)
+    """)) == []
+    # laundering through device_get makes the int() legal too
+    assert lint(tmp_path, hot_module("""\
+        x = jnp.sum(jnp.ones(3))
+        # sync-ok: test fixture sanctioned sync
+        y = jax.device_get(x)
+        return int(y)
+    """)) == []
+
+
+def test_hot_sync_np_asarray_d2h_read(tmp_path):
+    """np.asarray of a device value: the zero-copy d2h read the runtime
+    transfer guard cannot see on CPU -- the AST rule must cover it."""
+    found = lint(tmp_path, "import numpy as np\n" + hot_module("""\
+        x = jnp.zeros(3)
+        return np.asarray(x)
+    """))
+    assert rules_of(found) == ["hot-sync"], found
+    assert "transfer guard cannot see" in found[0].message
+
+
+def test_hot_sync_outside_tick_scope_is_legal(tmp_path):
+    """The same sync in a function NOT reachable from a step root is not
+    a finding: the rules police the decode loop, not the whole repo."""
+    src = ("import jax\nimport jax.numpy as jnp\n\n\n"
+           "def offline_eval(x):\n"
+           "    return jax.device_get(jnp.sum(x))\n")
+    assert lint(tmp_path, src) == []
+
+
+def test_hot_branch_on_device_value(tmp_path):
+    bad = hot_module("""\
+        x = jnp.zeros(3)
+        if x[0] > 0:
+            return 1
+        return 0
+    """)
+    found = lint(tmp_path, bad)
+    assert rules_of(found) == ["hot-branch"], found
+    ok = bad.replace("if x[0] > 0:",
+                     "# sync-ok: test fixture sanctioned branch\n"
+                     "        if x[0] > 0:")
+    assert lint(tmp_path, ok) == []
+
+
+# -- metrics discipline ------------------------------------------------------
+
+def test_metrics_name_grammar_and_counter_suffix(tmp_path):
+    src = ("REG.counter('requests_count', 'bad suffix')\n"
+           "REG.gauge('bad-name', 'bad grammar')\n"
+           "REG.counter('requests_total', 'fine')\n"
+           "REG.histogram('tick_ms', 'fine', [1, 2])\n")
+    found = lint(tmp_path, src, rules=["metrics-name"])
+    msgs = sorted(f.message for f in found)
+    assert len(found) == 2, found
+    assert "must end in _total" in msgs[0]
+    assert "Prometheus grammar" in msgs[1]
+
+
+def test_metrics_bind_in_tick_scope(tmp_path):
+    bad = hot_module("""\
+        c = self.metrics.counter("ticks_total", "per tick!")
+        c.inc()
+    """)
+    found = lint(tmp_path, bad)
+    assert rules_of(found) == ["metrics-bind"], found
+    ok = bad.replace(
+        'c = self.metrics.counter("ticks_total", "per tick!")',
+        '# lint-ok(metrics-bind): test fixture lazy bind\n'
+        '        c = self.metrics.counter("ticks_total", "per tick!")')
+    assert lint(tmp_path, ok) == []
+
+
+def test_metrics_label_typo_vocabulary(tmp_path):
+    src = ("emit(kind='session')\n"
+           "emit(kind='session')\n"
+           "emit(kind='sesion')\n"
+           "emit(kind='lookahead')\n")          # singleton, not near any
+    found = lint(tmp_path, src, rules=["metrics-label"])
+    assert len(found) == 1, found
+    assert "sesion" in found[0].message and "typo" in found[0].message
+
+
+# -- ownership protocol ------------------------------------------------------
+
+def test_ownership_pair_unreleased_reference(tmp_path):
+    bad = ("class Holder:\n"
+           "    def grab(self, pool, rid, pid):\n"
+           "        self.mine = pool.cow(rid, pid)\n")
+    found = lint(tmp_path, bad, rules=["ownership-pair"])
+    assert rules_of(found) == ["ownership-pair"], found
+    assert found[0].qualname == "Holder"
+    ok = bad + ("\n    def free(self, pool, pid):\n"
+                "        pool.drop_page(pid)\n")
+    assert lint(tmp_path, ok, rules=["ownership-pair"]) == []
+    # the pool itself (defines share/cow) is exempt: it IS the protocol
+    impl = ("class BlockPool:\n"
+            "    def cow(self, rid, pid):\n"
+            "        return self.share(pid)\n"
+            "    def share(self, pid):\n"
+            "        return pid\n")
+    assert lint(tmp_path, impl, rules=["ownership-pair"]) == []
+
+
+def test_ownership_deferred_mover_episode(tmp_path):
+    bare = ("def shuffle(store, pid):\n"
+            "    store.demote_to_warm(pid)\n")
+    found = lint(tmp_path, bare, name="serving/mod.py",
+                 rules=["ownership-deferred"])
+    assert rules_of(found) == ["ownership-deferred"], found
+    wrapped = ("def shuffle(store, pid):\n"
+               "    with store.deferred():\n"
+               "        store.demote_to_warm(pid)\n")
+    assert lint(tmp_path, wrapped, name="serving/mod2.py",
+                rules=["ownership-deferred"]) == []
+    # outside the engine/session layers the batching rule does not apply
+    assert lint(tmp_path, bare, name="cache/mod.py",
+                rules=["ownership-deferred"]) == []
+
+
+# -- jit-boundary hygiene ----------------------------------------------------
+
+DONATE_SRC = """\
+import jax
+
+
+class PagedEngine:
+    def __init__(self, fn):
+        self._decode = jax.jit(fn, donate_argnums=(1,))
+
+    def step(self):
+        nxt, pools = self._decode(self.params, self.pools)
+        self.tokens = nxt
+"""
+
+
+def test_donated_reread_requires_reassignment(tmp_path):
+    found = lint(tmp_path, DONATE_SRC, rules=["donated-reread"])
+    assert rules_of(found) == ["donated-reread"], found
+    assert "self.pools" in found[0].message
+    ok = DONATE_SRC.replace("self.tokens = nxt",
+                            "self.pools = pools\n        self.tokens = nxt")
+    assert lint(tmp_path, ok, rules=["donated-reread"]) == []
+
+
+def test_prefill_bucket_choke_point(tmp_path):
+    bad = ("class Engine:\n"
+           "    def _admit(self, req):\n"
+           "        batch = {'tokens': req.prompt}\n"
+           "        return self._prefill(self.params, batch)\n")
+    found = lint(tmp_path, bad, rules=["prefill-bucket"])
+    assert rules_of(found) == ["prefill-bucket"], found
+    ok = bad.replace("batch = {'tokens': req.prompt}",
+                     "batch = self._pad_prompt(req.prompt, 16)")
+    assert lint(tmp_path, ok, rules=["prefill-bucket"]) == []
+
+
+# -- pragma grammar ----------------------------------------------------------
+
+def test_pragma_without_reason_is_its_own_finding(tmp_path):
+    src = hot_module("""\
+        x = jnp.zeros(3)
+        return jax.device_get(x)
+    """).replace("return jax.device_get(x)",
+                 "return jax.device_get(x)  # sync-ok:")
+    found = lint(tmp_path, src)
+    got = rules_of(found)
+    # the reasonless pragma does NOT suppress, and raises its own finding
+    assert PRAGMA_NO_REASON in got and "hot-sync" in got, found
+
+
+def test_sync_pragma_does_not_cover_non_sync_rules(tmp_path):
+    src = hot_module("""\
+        # sync-ok: wrong pragma kind for this rule
+        c = self.metrics.counter("ticks_total", "hm")
+    """)
+    assert rules_of(lint(tmp_path, src)) == ["metrics-bind"]
+
+
+# -- baseline semantics ------------------------------------------------------
+
+def test_baseline_roundtrip_and_new_finding_detection(tmp_path):
+    src = hot_module("""\
+        x = jnp.zeros(3)
+        return jax.device_get(x)
+    """)
+    found = lint(tmp_path, src)
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, found)
+    fps = load_baseline(bl)
+    assert new_findings(found, fps) == []     # grandfathered
+    # the fingerprint is line-free: the same finding after an unrelated
+    # edit above it still matches the baseline
+    moved = src.replace("import jax\n", "import jax\nimport os\n")
+    assert new_findings(lint(tmp_path, moved), fps) == []
+    # a second, distinct violation IS new
+    two = src.replace("return jax.device_get(x)",
+                      "y = jax.device_get(x)\n"
+                      "        return float(y[0]), jnp.asarray(x).item()")
+    fresh = new_findings(lint(tmp_path, two), fps)
+    assert fresh and all(f.fingerprint() not in fps for f in fresh)
+    assert load_baseline(tmp_path / "absent.json") == set()
+
+
+def test_pragma_no_reason_never_baselines(tmp_path):
+    src = "x = 1  # lint-ok:\n"
+    found = lint(tmp_path, src)
+    assert rules_of(found) == [PRAGMA_NO_REASON]
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, found)                  # excluded from the file
+    assert new_findings(found, load_baseline(bl)) == [found[0]]
+
+
+# -- the canary: injected violation in the REAL engine -----------------------
+
+def test_injected_device_get_in_real_paged_step_is_caught(tmp_path):
+    """Copy the actual paged engine, inject one ``jax.device_get`` into
+    ``PagedEngine.step``, and the sanitizer must name it."""
+    real = (SRC / "serving" / "paged_engine.py").read_text()
+    marker = "        self.tick_no += 1\n"
+    assert marker in real
+    # the pristine copy is clean (the repo's own pragmas travel with it)
+    clean = lint(tmp_path, real, name="serving/paged_engine.py")
+    assert clean == [], clean
+    injected = real.replace(
+        marker, marker + "        bad = jax.device_get(self._tokens_dev)\n")
+    found = lint(tmp_path, injected, name="serving/paged_engine2.py")
+    hits = [f for f in found if f.rule == "hot-sync"
+            and f.qualname == "PagedEngine.step"]
+    assert hits and "device_get" in hits[0].message, found
+
+
+def test_repo_serving_and_cache_are_clean():
+    """The acceptance bar: zero findings (not grandfathered ones) in the
+    serving and cache layers."""
+    found = run_checks([SRC / "serving", SRC / "cache"], root=REPO)
+    assert found == [], [f.render() for f in found]
+
+
+def test_repo_matches_committed_baseline():
+    found = run_checks([SRC], root=REPO)
+    fps = load_baseline(REPO / "analysis_baseline.json")
+    fresh = new_findings(found, fps)
+    assert fresh == [], [f.render() for f in fresh]
+
+
+# -- runtime half: transfer guard + retrace sentinel -------------------------
+
+def test_tick_guard_disabled_is_shared_noop():
+    g = tick_guard(False)
+    assert g() is tick_guard(False)()         # one context, no per-tick alloc
+    with g():
+        pass
+
+
+def test_tick_guard_strict_blocks_implicit_transfer():
+    with pytest.raises(Exception, match="[Dd]isallow"):
+        with tick_guard(True)():
+            jnp.sin(np.arange(3.0))           # implicit h2d of a numpy array
+    # explicit device_get stays legal (the sanctioned lagged harvest)
+    x = jnp.arange(3)
+    with tick_guard(True)():
+        jax.device_get(x)
+
+
+def test_assert_compile_bound():
+    assert_compile_bound("ok", 4, 4)
+    with pytest.raises(RetraceError, match="bucket bound"):
+        assert_compile_bound("scenario", 5, 4)
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(ARCHS["qwen2-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_retrace_sentinel_on_live_engine(served_model, rng):
+    """>= 12 distinct prompt lengths stay within the bucket-ladder
+    compile bound, checked through the sentinel the benchmarks use."""
+    cfg, model, params = served_model
+    max_len, page = 128, 16
+    eng = PagedEngine(model, params, lanes=2, max_len=max_len,
+                      tier=HOT_ONLY, eos_id=0, use_roofline_trigger=False)
+    lens = [7 + 9 * i for i in range(12)]     # 12 distinct lengths
+    for rid, plen in enumerate(lens):
+        eng.submit(Request(rid=rid, prompt=list(rng.integers(2, 400, plen)),
+                           max_new=2))
+    done = eng.run(max_ticks=2000)
+    assert len(done) == len(lens)
+    sentinel = RetraceSentinel("test/paged", n_prompt_buckets(max_len, page))
+    assert sentinel.check(eng) <= sentinel.bound
+    eng.pool.check()
+
+
+def test_strict_transfers_tick_is_token_identical(served_model, rng):
+    """Both engines run under the armed guard (no implicit transfer in
+    the tick) and produce the same tokens as the unguarded run."""
+    cfg, model, params = served_model
+    prompts = [list(rng.integers(2, 400, 5 + 4 * i)) for i in range(5)]
+
+    def serve(engine_cls, strict, **kw):
+        obs = Observability(ObsSpec(strict_transfers=strict))
+        eng = engine_cls(model, params, max_len=64, eos_id=0, obs=obs, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=3))
+        return {r.rid: tuple(r.out) for r in eng.run(max_ticks=1000)}
+
+    paged_kw = dict(lanes=2, tier=HOT_ONLY, use_roofline_trigger=False)
+    assert serve(PagedEngine, True, **paged_kw) == \
+        serve(PagedEngine, False, **paged_kw)
+    dense_kw = dict(batch_slots=2)
+    assert serve(Engine, True, **dense_kw) == \
+        serve(Engine, False, **dense_kw)

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Hot-path sanitizer CLI (DESIGN.md 16).
+
+    python tools/check.py                         # lint src/repro
+    python tools/check.py --compare analysis_baseline.json   # CI gate
+    python tools/check.py --update-baseline analysis_baseline.json
+    python tools/check.py --rules hot-sync,metrics-name src/repro/serving
+    python tools/check.py --list-rules
+
+Exit status: 0 when clean (or when every finding is grandfathered by
+--compare), 1 otherwise.  ``pragma-no-reason`` findings and tracked
+bytecode always fail, baseline or not.
+
+Pure stdlib (no jax): the CI job runs it before installing anything.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import (ALL_RULES, Finding, load_baseline,  # noqa: E402
+                            new_findings, run_checks, save_baseline)
+
+DEFAULT_PATHS = ["src/repro"]
+
+
+def bytecode_findings() -> list:
+    """The tracked-bytecode guard (PR 4 untracked 73 committed .pyc
+    files; never let them back in), folded into the linter so the CI
+    static-analysis job is one command."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--", "*.pyc", "*.pyo", "**/__pycache__/**"],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return []                        # not a checkout: nothing to guard
+    if out.returncode != 0:
+        return []
+    return [Finding("tracked-bytecode", line, 1, "<repo>",
+                    "bytecode file is tracked by git")
+            for line in out.stdout.splitlines() if line.strip()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--compare", metavar="BASELINE_JSON", default=None,
+                    help="fail only on findings NOT in this baseline")
+    ap.add_argument("--update-baseline", metavar="BASELINE_JSON",
+                    default=None,
+                    help="write the current findings as the new baseline")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--no-bytecode-guard", action="store_true",
+                    help="skip the tracked-bytecode git check")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(r)
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        unknown = set(rules) - set(ALL_RULES)
+        if unknown:
+            ap.error(f"unknown rules: {sorted(unknown)} "
+                     f"(see --list-rules)")
+    paths = [REPO_ROOT / p for p in (args.paths or DEFAULT_PATHS)]
+    findings = run_checks(paths, root=REPO_ROOT, rules=rules)
+    if not args.no_bytecode_guard:
+        findings += bytecode_findings()
+
+    if args.update_baseline:
+        save_baseline(REPO_ROOT / args.update_baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to "
+              f"{args.update_baseline}")
+        return 0
+
+    if args.compare:
+        fps = load_baseline(REPO_ROOT / args.compare)
+        fresh = new_findings(findings, fps)
+        grandfathered = len(findings) - len(fresh)
+        for f in fresh:
+            print(f.render())
+        if fresh:
+            print(f"\n{len(fresh)} NEW finding(s) vs {args.compare} "
+                  f"({grandfathered} grandfathered); fix, pragma with a "
+                  f"reason, or regenerate the baseline")
+            return 1
+        print(f"clean: 0 new findings vs {args.compare} "
+              f"({grandfathered} grandfathered, "
+              f"{len(ALL_RULES) if rules is None else len(rules)} "
+              f"rule(s))")
+        return 0
+
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"\n{len(findings)} finding(s)")
+        return 1
+    print("clean: 0 findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
