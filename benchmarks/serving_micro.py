@@ -707,6 +707,236 @@ def run_trace(path: str, smoke: bool = True, seed: int = 0):
     return n_events
 
 
+def run_chaos(smoke: bool = False, seed: int = 0):
+    """Seeded fault storm + kill/restore (ISSUE 10, DESIGN.md 17).
+
+    Leg 1 -- fault storm.  One tiered engine with a bounded admission
+    queue serves a class-tagged burst while a ``FaultSpec`` storm window
+    injects mover dispatch failures (bounded retry + backoff -- the
+    sleeps inflate tick latency past the watchdog threshold, tripping
+    the degraded plan), cold-page corruption (checksum quarantine),
+    allocator exhaustion (admission retried) and NaN logits (quarantine).
+    A fault-free twin decodes the same stream; the invariants:
+
+      * zero cross-request corruption: every request that finishes
+        WITHOUT an error status is token-identical to the twin's;
+      * sheds are exclusively the lowest SLO class (interactive last);
+      * goodput floor: healthy completions stay above a fraction of the
+        submitted burst despite the storm;
+      * hysteresis: the watchdog trips during the storm AND recovers
+        after it (both visible in counters, gauge back to 0).
+
+    Leg 2 -- kill and restore.  A parked multi-turn session is persisted
+    (atomic snapshot), "killed" (a fresh engine is built), restored, and
+    resumed; its second turn must be token-identical to an engine that
+    was never killed.  Page-kind coverage (mla_latent / state_slab) for
+    the same round trip lives in tests/test_resilience.py.
+    """
+    import os
+    import tempfile
+    from repro.serving.resilience import FaultInjector, FaultSpec
+
+    cfg = reduced(ARCHS[ARCH])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = stack_plan(cfg)
+    geom = PageGeometry(len(plan.pattern), plan.n_scan, cfg.n_kv_heads,
+                        PAGE, cfg.head_dim)
+    # GENEROUS budget: the active burst never demotes, so a healthy
+    # request's output is scheduling-independent (hot pages are bf16 and
+    # exact; only the int8 warm edge is lossy, and only explicitly
+    # parked sessions cross it -- identically in both engines)
+    budget = 48 * geom.hot_page_bytes
+    max_len, lanes = 48, 2
+    n_req = 12 if smoke else 16
+    max_queue = n_req // 2
+    max_new = 4 if smoke else 6
+    n_sess = 3
+    aspec = AssistSpec(paged=True, page_size=PAGE, hbm_budget_bytes=budget,
+                       hot_fraction=0.5, enable_warm=True, enable_cold=True,
+                       host_budget_bytes=budget, use_roofline_trigger=False)
+
+    rng = np.random.default_rng(seed)
+    sess_prompts = [[int(t) for t in rng.integers(2, cfg.vocab_size, 24)]
+                    for _ in range(n_sess)]
+    sess_turn2 = [[int(t) for t in rng.integers(2, cfg.vocab_size, 6)]
+                  for _ in range(n_sess)]
+    stream = []
+    for rid in range(n_req):
+        cls = "interactive" if rid % 4 == 0 else "batch"
+        plen = int(rng.integers(18, 33))
+        stream.append((rid, [int(t) for t in
+                             rng.integers(2, cfg.vocab_size, plen)], cls))
+
+    def _drain(e):
+        # run() can break early on a tick where every lane is empty AND
+        # the storm blocks the one admission it tried -- keep driving
+        for _ in range(50):
+            e.run(max_ticks=3000)
+            if not (e.queue or e.resident or e._inflight is not None
+                    or e._pending_first):
+                break
+
+    def _setup(e):
+        """Identical pre-storm history for chaos engine and twin: park
+        ``n_sess`` sessions to the cold tier (the checksum targets),
+        then submit the class-tagged burst (intake sheds are decided
+        here, deterministically) and admit it fully."""
+        hist, hlen = {}, {}
+        for k in range(n_sess):
+            srid = 1000 + k
+            r = Request(rid=srid, prompt=sess_prompts[k], max_new=max_new)
+            e.submit(r)
+            e.park_on_retire(srid)
+            _drain(e)
+            hist[srid] = list(sess_prompts[k]) + list(r.out)
+            hlen[srid] = e.parked_session_len(srid)
+            e.park_session_pages(srid)
+        for rid, prompt, cls in stream:
+            e.submit(Request(rid=rid, prompt=prompt, max_new=max_new,
+                             cls=cls))
+        for _ in range(3):          # admit every survivor pre-storm
+            e.step()
+        return hist, hlen
+
+    def _resume(e, srid, hist, hlen, k):
+        r2 = Request(rid=srid, prompt=hist + sess_turn2[k],
+                     max_new=max_new)
+        e.resume_session(r2, hist[hlen:] + sess_turn2[k])
+        _drain(e)
+        return r2
+
+    scfg = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
+                       max_len=max_len, eos_id=0, assist=aspec,
+                       max_queue=max_queue, obs=_obs_spec())
+
+    # fault-free twin: the expected outputs of every healthy request
+    twin, _, _ = scfg.build(model, params)
+    t_hist, t_hlen = _setup(twin)
+    _drain(twin)
+    twin_out = {r.rid: tuple(r.out) for r in twin.finished
+                if r.error is None}
+    twin_shed = {r.rid for r in twin.finished if r.error == "shed"}
+    twin_sess = {srid: tuple(_resume(twin, srid, t_hist[srid],
+                                     t_hlen[srid], k).out)
+                 for k, srid in enumerate(sorted(t_hist))}
+    twin.pool.check()
+
+    # chaos engine: identical setup, then a 7-tick storm window opens
+    eng, _, _ = scfg.build(model, params)
+    hist, hlen = _setup(eng)
+    assert hlen == t_hlen
+    t0 = eng.tick_no
+    # backoff_base_s must make one storm tick's retry sleeps
+    # (base * (1+2+4) = 7*base) exceed the watchdog's 10 s latency
+    # threshold, or the storm never trips the degraded plan
+    eng.fault = FaultInjector(
+        FaultSpec(seed=seed, mover_fail_rate=1.0, corrupt_rate=0.5,
+                  alloc_fail_rate=0.5, nan_rate=0.2, max_retries=3,
+                  backoff_base_s=1.6, from_tick=t0, until_tick=t0 + 7),
+        metrics=eng.obs.metrics)
+    _drain(eng)
+    # recovery tail: idle ticks are cheap and feed the watchdog
+    for _ in range(16):
+        eng.step()
+    # resume the parked sessions: corrupted cold pages are DETECTED here
+    # (checksum on promotion) and quarantined; clean sessions must match
+    sess_reqs = {srid: _resume(eng, srid, hist[srid], hlen[srid], k)
+                 for k, srid in enumerate(sorted(hist))}
+    eng.pool.check()
+
+    gv = eng.obs.metrics.get_value
+    done = {r.rid: r for r in eng.finished if 0 <= r.rid < n_req}
+    healthy = {rid: r for rid, r in done.items() if r.error is None}
+    shed = [r for r in done.values() if r.error == "shed"]
+    quar = ([r for r in done.values() if r.error in ("checksum", "nan")]
+            + [r for r in sess_reqs.values() if r.error is not None])
+    assert len(done) == n_req, (len(done), n_req)
+    assert {r.rid for r in shed} == twin_shed, "shed set diverged"
+    for rid, r in healthy.items():
+        assert tuple(r.out) == twin_out[rid], \
+            f"rid {rid}: healthy output changed under the fault storm"
+    for srid, r in sess_reqs.items():
+        if r.error is None:
+            assert tuple(r.out) == twin_sess[srid], \
+                f"session {srid}: healthy resume changed under the storm"
+    assert shed and all(r.cls == "batch" for r in shed), \
+        f"shed set not exclusively the lowest SLO class: " \
+        f"{[(r.rid, r.cls) for r in shed]}"
+    floor = 0.25
+    goodput = len(healthy) / n_req
+    assert goodput >= floor, (goodput, floor)
+    trips = gv("engine_watchdog_trips_total", reason="latency") or 0
+    recovers = gv("engine_watchdog_recoveries_total") or 0
+    injected = sum(gv("engine_faults_injected_total", site=s) or 0
+                   for s in ("mover", "cold_payload", "alloc", "nan"))
+    assert injected > 0, "storm injected nothing"
+    assert trips >= 1, "watchdog never tripped under the storm"
+    assert recovers >= 1, "watchdog never recovered after the storm"
+    assert (gv("engine_degraded") or 0) == 0, "still degraded at drain"
+    assert len(quar) >= 1, "no quarantine despite corrupt/nan injection"
+
+    # -- leg 2: kill between ticks, restore, resume ---------------------
+    def _session_engine():
+        e, _, _ = ServeConfig(arch=ARCH, reduced=True, slots=lanes,
+                              max_len=96, eos_id=0, assist=aspec,
+                              obs=_obs_spec()).build(model, params)
+        return e
+    t1 = [int(t) for t in rng.integers(2, cfg.vocab_size, 20)]
+    t2 = [int(t) for t in rng.integers(2, cfg.vocab_size, 6)]
+
+    def _first_turn(e):
+        r = Request(rid=0, prompt=t1, max_new=4)
+        e.submit(r)
+        e.park_on_retire(0)
+        e.run(max_ticks=2000)
+        # park to COLD on both sides: persist parks hot pages down the
+        # ladder anyway (the durable payload is the int8-lossy cold
+        # representation), so the uninterrupted baseline must pay the
+        # same quantization for token identity to be well-defined
+        e.park_session_pages(0)
+        return t1 + r.out, e.parked_session_len(0)
+
+    live = _session_engine()
+    hist, hlen = _first_turn(live)
+
+    killed = _session_engine()
+    hist_k, _ = _first_turn(killed)
+    assert hist_k == hist
+    path = os.path.join(tempfile.mkdtemp(prefix="chaos_store_"), "snap")
+    killed.persist(path)            # ... process dies here ...
+    restored = _session_engine()    # fresh process, same config
+    restored.restore(path)
+    assert restored.parked_session_len(0) == hlen
+
+    outs = []
+    for e in (live, restored):
+        r2 = Request(rid=0, prompt=hist + t2, max_new=4)
+        e.resume_session(r2, hist[hlen:] + t2)
+        e.run(max_ticks=2000)
+        outs.append(tuple(r2.out))
+        e.pool.check()
+    assert outs[0] == outs[1], \
+        "restored session diverged from the uninterrupted one"
+
+    print_table(
+        f"serving_micro chaos: {n_req} requests, storm ticks "
+        f"{t0}..{t0 + 6}, max_queue={max_queue}",
+        ["healthy", "shed", "quarantined", "goodput", "injected",
+         "trips", "recoveries"],
+        [[len(healthy), len(shed), len(quar), round(goodput, 2),
+          int(injected), int(trips), int(recovers)]])
+    print(f"[serving_micro] chaos PASS: {len(healthy)} healthy outputs "
+          f"identical under the storm, {len(shed)} shed (all batch), "
+          f"{len(quar)} quarantined, watchdog tripped and recovered; "
+          f"kill+restore resume token-identical")
+    return {"healthy": len(healthy), "shed": len(shed),
+            "quarantined": len(quar), "goodput": goodput,
+            "faults_injected": int(injected), "watchdog_trips": int(trips),
+            "watchdog_recoveries": int(recovers),
+            "restore_token_identical": True}
+
+
 def main(smoke: bool = False, seed: int = 0,
          strict_transfers: bool = False):
     global STRICT_TRANSFERS
@@ -791,8 +1021,17 @@ def main(smoke: bool = False, seed: int = 0,
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
+    ap.add_argument("scenario", nargs="?", default="all",
+                    choices=["all", "run_chaos"],
+                    help="'all' runs the full benchmark record; "
+                         "'run_chaos' runs only the fault-storm + "
+                         "kill/restore scenario (CI chaos smoke)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--strict-transfers", action="store_true")
     a = ap.parse_args()
-    main(smoke=a.smoke, seed=a.seed, strict_transfers=a.strict_transfers)
+    if a.scenario == "run_chaos":
+        STRICT_TRANSFERS = a.strict_transfers
+        run_chaos(smoke=a.smoke, seed=a.seed)
+    else:
+        main(smoke=a.smoke, seed=a.seed, strict_transfers=a.strict_transfers)

@@ -75,7 +75,7 @@ DEVICE_ATTR_SEEDS = {"pools"}
 
 _METRIC_FACTORIES = {"counter", "gauge", "histogram"}
 _METRIC_READS = {"get_value", "families"}
-_LABEL_KEYS = {"kind", "cls", "to", "tier", "task"}
+_LABEL_KEYS = {"kind", "cls", "to", "tier", "task", "site", "reason"}
 _MOVERS = {"demote_to_warm", "demote_to_cold", "promote_to_hot",
            "promote_to_warm", "copy_hot"}
 _ACQUIRES = {"share", "cow"}

@@ -37,25 +37,38 @@ from repro.assist.tasks import (AssistDecision, CompressTask, RooflineTerms,
 from repro.obs.metrics import NULL_REGISTRY
 
 MIN_HIT_RATE = 0.25       # memoize: disable below this observed hit rate
+DEGRADED_MIN_RATIO = 1.05  # relaxed compression floor under fault pressure
 
 
 class AssistController:
     """Compile-time AWC: one trigger/throttle/priority for all task kinds."""
 
     def __init__(self, registry=None, min_ratio: float = MIN_RATIO,
-                 min_hit_rate: float = MIN_HIT_RATE, metrics=None):
+                 min_hit_rate: float = MIN_HIT_RATE,
+                 degraded_min_ratio: float = DEGRADED_MIN_RATIO,
+                 metrics=None):
         if registry is None:
             from repro.assist.registry import REGISTRY
             registry = REGISTRY
         self.registry = registry
         self.min_ratio = min_ratio
         self.min_hit_rate = min_hit_rate
+        self.degraded_min_ratio = degraded_min_ratio
+        self.degraded = False
         m = metrics if metrics is not None else NULL_REGISTRY
         self._c_decisions = {
             (k, v): m.counter("assist_decisions_total",
                               "controller verdicts per assist kind",
                               kind=k, verdict=v)
             for k in KINDS for v in ("accept", "reject")}
+
+    def set_degraded(self, flag: bool):
+        """The watchdog's degraded plan (paper 4.4 dynamic feedback under
+        fault pressure): speculative assist work (memoize LUT traffic,
+        prefetch promotion) pauses outright, while compression -- which
+        RELIEVES memory pressure -- keeps running under a relaxed
+        profitability floor so eviction storms can still pack pages."""
+        self.degraded = bool(flag)
 
     def _record(self, d: AssistDecision) -> AssistDecision:
         self._c_decisions[(d.kind,
@@ -83,10 +96,12 @@ class AssistController:
             return AssistDecision(site.name, False, "raw", 1.0,
                                   f"{site.term} term is not the bottleneck "
                                   f"({relieved:.3e}s < {terms.step_time:.3e}s)")
-        if measured_ratio < self.min_ratio:
+        floor = (self.degraded_min_ratio if self.degraded
+                 else self.min_ratio)
+        if measured_ratio < floor:
             return AssistDecision(site.name, False, "raw", measured_ratio,
                                   f"compressibility {measured_ratio:.2f}x below "
-                                  f"threshold {self.min_ratio}x (paper 6 rule)")
+                                  f"threshold {floor}x (paper 6 rule)")
         new_terms = self.modeled_terms(terms, site, measured_ratio, task)
         if new_terms.step_time >= terms.step_time * 0.999:
             return AssistDecision(site.name, False, "raw", measured_ratio,
@@ -124,6 +139,11 @@ class AssistController:
         return self._record(self._decide_memoize(terms, site, hit_rate))
 
     def _decide_memoize(self, terms, site, hit_rate):
+        if self.degraded:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "degraded plan: prefix admission paused "
+                                  "until the watchdog recovers",
+                                  kind="memoize")
         if terms.compute < terms.step_time * 0.999:
             return AssistDecision(site.name, False, "none", 1.0,
                                   "compute term is not the bottleneck: "
@@ -165,6 +185,10 @@ class AssistController:
                                                   max_pages))
 
     def _decide_prefetch(self, terms, site, queued, max_pages):
+        if self.degraded:
+            return AssistDecision(site.name, False, "none", 1.0,
+                                  "degraded plan: prefetch off until the "
+                                  "watchdog recovers", kind="prefetch")
         if queued == 0:
             return AssistDecision(site.name, False, "none", 1.0,
                                   "prefetch queue empty", kind="prefetch")

@@ -133,6 +133,7 @@ class CachePolicy:
             enabled = enabled and self.decision.enabled
         self.compression_enabled = enabled
         self.cold_enabled = cfg.enable_cold and enabled
+        self._degraded = False
         # cold-page promotion is the prefetch assist task; ``metrics``
         # (the engine's registry) threads through so prefetch counters,
         # tier counters and engine gauges share one export namespace
@@ -271,12 +272,20 @@ class CachePolicy:
         ``kind`` labels the producer on ``prefetch_issued_total``."""
         self.prefetch.schedule(page_ids, kind=kind)
 
+    def set_degraded(self, flag: bool):
+        """Watchdog degraded plan: speculative prefetch promotion pauses
+        (queued pages stay queued; demand promotion in the decode path
+        still runs -- it is correctness, not speculation)."""
+        self._degraded = bool(flag)
+
     def drain_prefetch(self, pool: BlockPool, store: TieredKVStore,
                        protected: set[int]):
         """Promote queued cold pages up to the controller's page budget.
 
         Class-aware: the queue can carry token pages AND parked state
         slabs (each promotes into its own warm slot space)."""
+        if self._degraded:
+            return
         budget = None
         if self.terms is not None:
             site = SiteDescriptor("kv_cold", store.geom.warm_page_bytes,

@@ -270,6 +270,64 @@ class PrefixStore:
         assert self._n_nodes == 0
         self._g_nodes.set(0)
 
+    def drop_pid(self, pid: int) -> int:
+        """Quarantine support: remove every node backed by ``pid`` AND
+        its whole subtree (descendants memoize suffixes of a prefix whose
+        KV is now unavailable, so they must go too).  Returns the number
+        of nodes removed; freed pages surface via ``drain_released``."""
+        victims = []
+
+        def find(level):
+            for node in level.values():
+                if node.pid == pid:
+                    victims.append(node)
+                else:
+                    find(node.children)
+        find(self._root)
+
+        def drop(node):
+            for child in list(node.children.values()):
+                drop(child)
+            node.children = {}
+            self._remove(node)
+        removed = 0
+        for v in victims:
+            before = self._n_nodes
+            drop(v)
+            removed += before - self._n_nodes
+        return removed
+
+    def export_tree(self) -> list:
+        """Serializable DFS listing for the durable snapshot:
+        ``[(key_tuple, pid, parent_index), ...]`` with parents strictly
+        before children (parent_index is the row of the parent node, -1
+        at the first level)."""
+        out = []
+
+        def walk(level, parent_idx):
+            for node in level.values():
+                idx = len(out)
+                out.append((node.key, node.pid, parent_idx))
+                walk(node.children, idx)
+        walk(self._root, -1)
+        return out
+
+    def adopt_tree(self, nodes) -> None:
+        """Rebuild the tree from an :meth:`export_tree` listing whose pids
+        have ALREADY been re-materialized (the restore path shares each
+        pid under ``PREFIX_RID`` before calling this), onto an empty
+        store."""
+        assert self._n_nodes == 0, "adopt_tree needs an empty store"
+        built = []
+        for key, pid, parent_idx in nodes:
+            parent = built[parent_idx] if parent_idx >= 0 else None
+            node = _Node(tuple(key), pid, parent)
+            level = parent.children if parent is not None else self._root
+            level[node.key] = node
+            built.append(node)
+            self._n_nodes += 1
+        self._g_nodes.set(self._n_nodes)
+
     def drain_released(self) -> list[int]:
         """Pages whose LAST reference dropped inside the store since the
         previous drain; the engine must release their tier storage."""

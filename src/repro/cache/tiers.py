@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Optional
 
 import numpy as np
@@ -70,6 +71,32 @@ from repro.obs.metrics import MetricsRegistry, log_buckets
 from repro.serving.kv_cache import quantize_token
 
 TIER_FREE, TIER_HOT, TIER_WARM, TIER_COLD = -1, 0, 1, 2
+
+
+class ColdPageCorrupt(Exception):
+    """A cold page's payload no longer matches its recorded checksum.
+
+    Raised by :meth:`TieredKVStore.promote_to_warm` BEFORE any state
+    mutates, so the caller can quarantine every reader of ``pid`` and
+    scrub the record without the corruption ever reaching a pool."""
+
+    def __init__(self, pid: int):
+        super().__init__(pid)
+        self.pid = pid
+
+
+def planes_crc(raw_planes) -> int:
+    """CRC32 over a page's RAW planes -- per segment, per plane: the
+    unpacked int8 payload then its f32 scales.  Scheme-independent by
+    construction: a page packed with BDI at demote time verifies after a
+    snapshot restore that re-packs it with FPC."""
+    crc = 0
+    for seg in raw_planes:
+        for x8, sc in seg:
+            crc = zlib.crc32(np.ascontiguousarray(x8).tobytes(), crc)
+            if sc is not None:
+                crc = zlib.crc32(np.ascontiguousarray(sc).tobytes(), crc)
+    return crc
 # cold packing consumes the DEFAULT registry's compress tasks, not the
 # scheme modules directly -- per-block BDI and FPC with RAW fallback.
 # (Bound at import: stores don't take a registry; swap here to retarget.)
@@ -459,6 +486,10 @@ class TieredKVStore:
         self._warm_ids = {"kv": set(), "state": set()}
         self.cold: dict[int, ColdPage] = {}
         self.cold_bytes = 0
+        # checksum of each cold page's RAW planes, recorded at demote and
+        # verified at promote: a flipped bit (or injected fault) surfaces
+        # as ColdPageCorrupt instead of silently poisoning the warm pool
+        self.cold_crc: dict[int, int] = {}
         # async prefetch promotions awaiting the tick-start drain barrier:
         # pid -> (warm_slot, per-segment plane dicts in flight)
         self._pending_warm: dict[int, tuple[int, list]] = {}
@@ -708,6 +739,7 @@ class TieredKVStore:
             self._c_released[("warm", cls)].inc()
         elif t == TIER_COLD:
             rec = self.cold.pop(pid)
+            self.cold_crc.pop(pid, None)
             self.cold_bytes -= rec.nbytes
             self._c_released[("cold", rec.cls)].inc()
         self._hot_ids[cls].discard(pid)
@@ -791,10 +823,10 @@ class TieredKVStore:
         self.flush_movers()                 # packing reads the warm planes
         cls = self._cls(pid)
         ws = int(self.slot[pid])
-        planes, nbytes = [], 0
+        planes, raw, nbytes = [], [], 0
         for j in self._seg_idx[cls]:
             pj = self.pools[j]
-            recs = []
+            recs, raw_seg = [], []
             for _, qname, sname in _plane_triples(pj):
                 # sync-ok: cold packing reads the warm planes on host
                 x8 = np.asarray(pj[qname][:, ws])
@@ -802,12 +834,15 @@ class TieredKVStore:
                 # sync-ok: cold packing reads the warm scales on host
                 sc = np.asarray(pj[sname][:, ws])
                 recs.append((name, obj, sc))
+                raw_seg.append((x8, sc))
                 nbytes += nb + sc.nbytes
             planes.append(recs)
+            raw.append(raw_seg)
         if (self.host_budget_bytes is not None
                 and self.cold_bytes + nbytes > self.host_budget_bytes):
             raise PoolExhausted("cold (host) budget full")
         self.cold[pid] = ColdPage(planes, nbytes, cls)
+        self.cold_crc[pid] = planes_crc(raw)
         self.cold_bytes += nbytes
         self._free_warm[cls].append(ws)
         self.tier[pid], self.slot[pid] = TIER_COLD, 0
@@ -829,25 +864,38 @@ class TieredKVStore:
         cls = rec.cls
         if not self._free_warm[cls]:
             raise PoolExhausted(f"warm {cls} tier full")
-        self.flush_movers()       # a pending promote may read the slot
-        ws = self._free_warm[cls].pop()
-        self.cold.pop(pid)
-        self.cold_bytes -= rec.nbytes
+        # unpack and checksum BEFORE touching any bookkeeping: a corrupt
+        # payload raises with the page still intact in the cold tier, so
+        # the quarantine path sees consistent state
         g = self.geom
-        in_flight = []
+        staged, raw = [], []
         for i, j in enumerate(self._seg_idx[cls]):
             sg = g.seg_geoms[j]
             widths = (sg.k_width, sg.v_width) if sg.v_width \
                 else (sg.k_width,)
-            planes = {}
+            planes, raw_seg = {}, []
             for (name, obj, sc), (_, qname, sname), w in zip(
                     rec.planes[i], _plane_triples(self.pools[j]), widths):
                 shp = (sg.n_stack, sg.heads, sg.rows, w)
                 # sync-ok: cold unpack decodes on host before the upload
-                planes[qname] = np.asarray(_unpack_cold(name, obj, shp),
-                                           np.int8)
+                x8 = np.asarray(_unpack_cold(name, obj, shp), np.int8)
                 # sync-ok: cold unpack restores host scales for the upload
-                planes[sname] = np.asarray(sc, np.float32)
+                scn = np.asarray(sc, np.float32)
+                planes[qname] = x8
+                planes[sname] = scn
+                raw_seg.append((x8, scn))
+            staged.append((j, planes))
+            raw.append(raw_seg)
+        expect = self.cold_crc.get(pid)
+        if expect is not None and planes_crc(raw) != expect:
+            raise ColdPageCorrupt(pid)
+        self.flush_movers()       # a pending promote may read the slot
+        ws = self._free_warm[cls].pop()
+        self.cold.pop(pid)
+        self.cold_crc.pop(pid, None)
+        self.cold_bytes -= rec.nbytes
+        in_flight = []
+        for j, planes in staged:
             if async_:
                 in_flight.append((j, {n: jax.device_put(a)
                                       for n, a in planes.items()}))
@@ -987,3 +1035,81 @@ class TieredKVStore:
                            int(self.slot[dst_pid]))
         self.dirty_pids.add(dst_pid)
         self._c_cow_copies.inc()
+
+    # -- durability / fault hooks (repro.serving.resilience) -----------------
+
+    def corrupt_cold(self, pid: int) -> bool:
+        """Fault-injection hook: invalidate a cold page's recorded
+        checksum so its next promotion raises :class:`ColdPageCorrupt`
+        (models a corrupted payload at the detection layer -- the drill
+        is containment, not the bit flip itself)."""
+        if self.tier[pid] != TIER_COLD:
+            return False
+        self.cold_crc[pid] = self.cold_crc.get(pid, 0) ^ 0xA5A5A5A5
+        return True
+
+    def export_page(self, pid: int) -> list:
+        """Raw (scheme-independent) planes of a WARM or COLD page, for
+        the durable snapshot: per owning segment, a list of per-plane
+        ``(int8_payload, f32_scales)`` numpy pairs in plane-triple order.
+        Hot pages are not exportable -- the persist path parks them down
+        the ladder first, so the durable payload is exactly the (already
+        lossy) representation an uninterrupted cold park would hold."""
+        t = self.tier[pid]
+        if t == TIER_COLD:
+            rec = self.cold[pid]
+            g = self.geom
+            out = []
+            for i, j in enumerate(self._seg_idx[rec.cls]):
+                sg = g.seg_geoms[j]
+                widths = (sg.k_width, sg.v_width) if sg.v_width \
+                    else (sg.k_width,)
+                out.append([(np.asarray(_unpack_cold(
+                    name, obj, (sg.n_stack, sg.heads, sg.rows, w)),
+                    np.int8), np.asarray(sc, np.float32))
+                    for (name, obj, sc), w in zip(rec.planes[i], widths)])
+            return out
+        if t == TIER_WARM:
+            self._commit_one(pid)           # land any in-flight promotion
+            self.flush_movers()             # export reads the warm planes
+            cls = self._cls(pid)
+            ws = int(self.slot[pid])
+            out = []
+            for j in self._seg_idx[cls]:
+                pj = self.pools[j]
+                # sync-ok: snapshot export reads warm planes on host (off
+                # the tick path; persist runs only at graceful drain)
+                out.append([(np.asarray(pj[qname][:, ws], np.int8),
+                             np.asarray(pj[sname][:, ws], np.float32))
+                            for _, qname, sname in _plane_triples(pj)])
+            return out
+        raise ValueError(f"page {pid} not exportable (tier {t}): persist "
+                         f"parks pages to warm/cold first")
+
+    def adopt_cold(self, pid: int, cls: str, raw_planes: list):
+        """Install a page directly into the cold tier from exported raw
+        planes (snapshot restore).  Re-packs with the current scheme
+        registry -- possibly a different winner than at demote time,
+        which is harmless because packing is lossless and the checksum
+        covers the raw planes."""
+        assert self.tier[pid] == TIER_FREE, f"page {pid} already placed"
+        planes, nbytes = [], 0
+        for seg in raw_planes:
+            recs = []
+            for x8, sc in seg:
+                name, obj, nb = _pack_cold(np.asarray(x8, np.int8),
+                                           self.cold_delta)
+                scn = np.asarray(sc, np.float32)
+                recs.append((name, obj, scn))
+                nbytes += nb + scn.nbytes
+            planes.append(recs)
+        if (self.host_budget_bytes is not None
+                and self.cold_bytes + nbytes > self.host_budget_bytes):
+            raise PoolExhausted("cold (host) budget full")
+        self.cold[pid] = ColdPage(planes, nbytes, cls)
+        self.cold_crc[pid] = planes_crc(raw_planes)
+        self.cold_bytes += nbytes
+        self.tier[pid], self.slot[pid] = TIER_COLD, 0
+        self.page_cls[pid] = 1 if cls == "state" else 0
+        self.dirty_pids.add(pid)
+        self._c_demote[("cold", cls)].inc()

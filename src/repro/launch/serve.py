@@ -21,6 +21,9 @@ engine -- one construction path for both.
 from __future__ import annotations
 
 import argparse
+import atexit
+import os
+import signal
 import time
 
 import numpy as np
@@ -115,6 +118,19 @@ def main(argv=None):
     ap.add_argument("--trace", default=None,
                     help="write a Chrome trace-event JSON (Perfetto) of "
                          "the run here")
+    # resilience (repro.serving.resilience, DESIGN.md 17)
+    ap.add_argument("--max-queue", dest="max_queue", type=int, default=None,
+                    help="bounded admission queue: above this depth the "
+                         "lowest-SLO-class submission is shed with error "
+                         "status (interactive sheds last)")
+    ap.add_argument("--harvest-timeout", dest="harvest_timeout_s",
+                    type=float, default=None, metavar="S",
+                    help="surface a hung harvest device_get as a watchdog "
+                         "trip after S seconds instead of a silent hang")
+    ap.add_argument("--session-store", default=None, metavar="PATH",
+                    help="durable session snapshot: restored at startup "
+                         "if present, written on SIGTERM/exit after a "
+                         "graceful drain (paged engine only)")
     ap.add_argument("--strict-transfers", action="store_true",
                     help="wrap the jitted tick dispatch in "
                          "jax.transfer_guard('disallow'): any implicit "
@@ -144,6 +160,37 @@ def main(argv=None):
 
     eng, model, _ = scfg.build(obs=obs)
     cfg = model.cfg
+
+    # crash-safe serving (DESIGN.md 17): restore parked sessions from the
+    # durable store, and drain gracefully on SIGTERM/exit -- stop
+    # admission, finish in-flight ticks, persist, snapshot metrics
+    store_path = args.session_store if scfg.assist.paged else None
+    if store_path and os.path.exists(store_path):
+        eng.restore(store_path)
+        print(f"restored {len(eng._parked_sessions)} parked session(s) "
+              f"from {store_path}")
+    _drained = []
+
+    def _drain(signum=None, frame=None):
+        if _drained:
+            return
+        _drained.append(True)
+        eng.queue.clear()                      # stop admission
+        eng.run()                              # finish in-flight ticks
+        if store_path:
+            from repro.serving.resilience import SnapshotError
+            try:
+                eng.persist(store_path)
+                print(f"sessions persisted -> {store_path}")
+            except SnapshotError as e:
+                print(f"persist skipped: {e}")
+        if writer is not None:
+            writer.stop()                      # final metrics snapshot
+        if signum is not None:
+            raise SystemExit(128 + signum)
+
+    signal.signal(signal.SIGTERM, _drain)
+    atexit.register(_drain)
     rng = np.random.default_rng(scfg.seed)
     t0 = time.time()
     if args.n_sessions is not None:

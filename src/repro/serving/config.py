@@ -71,6 +71,13 @@ class ServeConfig:
     # observability (repro.obs): counters + execution probe on by default,
     # traces off; None folds to the default ObsSpec in __post_init__
     obs: Optional[ObsSpec] = None
+    # resilience (repro.serving.resilience, DESIGN.md 17): bounded
+    # admission queue (None = unbounded, SLO-aware shed above it), a
+    # FaultSpec for the seeded chaos harness, and the harvest readback
+    # stall timeout (None = block forever, the pre-PR behavior)
+    max_queue: Optional[int] = None
+    fault: Optional[object] = None
+    harvest_timeout_s: Optional[float] = None
 
     def __post_init__(self):
         if self.assist is None:

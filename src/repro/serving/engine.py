@@ -52,6 +52,12 @@ class Request:
     temperature: float = 0.0
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # SLO class name ("interactive"/"batch"; None = untagged best-effort)
+    # -- drives bounded-queue shed ordering, lowest class sheds first
+    cls: Optional[str] = None
+    # terminal error status ("shed" / "checksum" / "nan" / ...); a request
+    # retired with an error has no valid output stream
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -97,21 +103,70 @@ class EngineBase:
                 prefix_reuse=spec.prefix_reuse,
                 prefix_max_nodes=spec.prefix_max_nodes,
                 prefix_min_pages=spec.prefix_min_pages,
-                prefix_prefetch=spec.prefix_prefetch, obs=obs)
+                prefix_prefetch=spec.prefix_prefetch,
+                max_queue=getattr(scfg, "max_queue", None),
+                fault=getattr(scfg, "fault", None),
+                harvest_timeout_s=getattr(scfg, "harvest_timeout_s", None),
+                obs=obs)
         return Engine(model, params, batch_slots=scfg.slots,
                       max_len=scfg.max_len, kv_mode=spec.kv,
-                      eos_id=scfg.eos_id, seed=scfg.seed, obs=obs)
+                      eos_id=scfg.eos_id, seed=scfg.seed,
+                      max_queue=getattr(scfg, "max_queue", None), obs=obs)
 
-    def _init_intake(self):
+    #: shed ranking for the bounded admission queue: HIGHER rank sheds
+    #: first.  Mirrors the default SLO classes (sessions/spec.py) without
+    #: importing them; unknown class names shed before any known class,
+    #: untagged requests before those, interactive always last.
+    _SHED_RANK = {"interactive": 0, "batch": 1}
+
+    def _init_intake(self, metrics=None, max_queue: Optional[int] = None):
+        from repro.obs.metrics import NULL_REGISTRY
         self._seen_rids: set[int] = set()
         self._next_rid = 0
+        self.max_queue = max_queue
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self._g_qdepth = m.gauge(
+            "engine_queue_depth", "requests waiting for admission "
+            "(bounded when max_queue is set)")
+        self._c_rejected = {r: m.counter(
+            "engine_admission_rejected_total",
+            "submissions rejected at intake", reason=r)
+            for r in ("shed", "oversize")}
+
+    def _shed_rank(self, req: Request) -> int:
+        cls = getattr(req, "cls", None)
+        if cls is None:
+            return 1 << 30
+        return self._SHED_RANK.get(cls, 1 << 20)
+
+    def _reject(self, req: Request, reason: str):
+        req.error = reason
+        req.done = True
+        self.finished.append(req)
+        self._c_rejected[reason].inc()
 
     def submit(self, req: Request):
         if req.rid in self._seen_rids:      # recycle colliding rids
             req.rid = self._next_rid
         self._seen_rids.add(req.rid)
         self._next_rid = max(self._next_rid, req.rid + 1)
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # SLO-class-aware shed: drop the least-important request among
+            # the queue plus the newcomer (ties shed the newcomer, keeping
+            # FIFO fairness for already-accepted work) -- interactive
+            # sheds last by construction of the rank order
+            victim, worst = req, self._shed_rank(req)
+            for cand in self.queue:
+                r = self._shed_rank(cand)
+                if r > worst:
+                    victim, worst = cand, r
+            self._reject(victim, "shed")
+            if victim is req:
+                self._g_qdepth.set(len(self.queue))
+                return
+            self.queue.remove(victim)
         self.queue.append(req)
+        self._g_qdepth.set(len(self.queue))
 
     #: fold_in tags separating the two in-jit sampling streams -- decode
     #: keys fold (rng, DECODE_STREAM, tick) and prefill (rng,
@@ -158,6 +213,7 @@ class Engine(EngineBase):
                  max_len: int, kv_mode: str = "bf16",
                  eos_id: int = DEFAULT_EOS_ID, seed: int = 0,
                  bucket_prefill: bool = True,
+                 max_queue: Optional[int] = None,
                  obs: Optional[Observability] = None):
         self.model = model
         self.params = params
@@ -189,7 +245,7 @@ class Engine(EngineBase):
         # the (slot, req, remaining-after) snapshot they belong to
         self._inflight: Optional[tuple] = None
         self._pending_first: list = []      # [(req, first-token handle)]
-        self._init_intake()
+        self._init_intake(metrics=m, max_queue=max_queue)
 
         def step_fn(params, state, tokens, temps, rng, tick):
             logits, state = model.decode_step(params, state, tokens)

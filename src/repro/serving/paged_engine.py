@@ -51,6 +51,7 @@ bounded int8 error on parked requests for >= 2x resident-token capacity
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import functools
 import time
@@ -68,6 +69,7 @@ from repro.cache import (BlockPool, CachePolicy, TierConfig,
                          decode_roofline_terms)
 from repro.cache.block_pool import PREFIX_RID, PoolExhausted
 from repro.cache.policy import kv_site, warm_ratio
+from repro.cache.tiers import ColdPageCorrupt
 from repro.configs.base import DEFAULT_EOS_ID
 from repro.models import ssm as SSM
 from repro.models import transformer as T
@@ -75,6 +77,9 @@ from repro.models.model import ModelFns
 from repro.obs import Observability
 from repro.obs.metrics import TOKENS_BUCKETS
 from repro.serving.engine import EngineBase, Request
+from repro.serving.resilience import (FaultInjector, Watchdog, read_snapshot,
+                                      restore_engine, snapshot_engine,
+                                      write_snapshot)
 
 
 @dataclasses.dataclass
@@ -126,6 +131,9 @@ class PagedEngine(EngineBase):
                  prefix_max_nodes: int = 512,
                  prefix_min_pages: int = 1,
                  prefix_prefetch: bool = True,
+                 max_queue: Optional[int] = None,
+                 fault=None,
+                 harvest_timeout_s: Optional[float] = None,
                  obs: Optional[Observability] = None):
         self.obs = obs if obs is not None else Observability()
         # strict mode wraps the jitted tick dispatch in a transfer guard
@@ -298,6 +306,20 @@ class PagedEngine(EngineBase):
         self._g_parked_sessions = metrics.gauge(
             "engine_parked_sessions",
             "sessions parked between turns (pages resident, no request)")
+        # resilience (DESIGN.md 17): seeded fault injection, quarantine
+        # accounting, and the degradation watchdog with hysteresis
+        self.fault = (FaultInjector(fault, metrics=metrics)
+                      if fault is not None else None)
+        self._watchdog = Watchdog(metrics=metrics)
+        self._degraded = False
+        self._alloc_fault = False
+        self.harvest_timeout_s = harvest_timeout_s
+        self._hpool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._c_quarantine = {r: metrics.counter(
+            "engine_quarantines_total",
+            "requests retired with error status and pages scrubbed "
+            "after an unrecoverable fault", reason=r)
+            for r in ("checksum", "nan")}
 
         self.lanes: list[Optional[int]] = [None] * lanes
         self.resident: dict[int, _RState] = {}
@@ -306,8 +328,9 @@ class PagedEngine(EngineBase):
         self.finished: list[Request] = []
         self._park_on_retire: set[int] = set()
         self._parked_sessions: dict[int, int] = {}   # rid -> cached length
+        self._session_history: dict[int, list] = {}  # rid -> full token log
         self.rng = jax.random.PRNGKey(seed)
-        self._init_intake()
+        self._init_intake(metrics=metrics, max_queue=max_queue)
         self.tick_no = 0
         self.peak_resident_tokens = 0
         self.tokens_generated = 0
@@ -378,6 +401,7 @@ class PagedEngine(EngineBase):
         # fail fast at the API boundary: an oversize request can never be
         # admitted, and surfacing it mid-run would strand in-flight work
         if len(req.prompt) + req.max_new > self.max_len:
+            self._c_rejected["oversize"].inc()
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
                 f"({req.max_new}) exceeds max_len ({self.max_len})")
@@ -534,6 +558,12 @@ class PagedEngine(EngineBase):
     # -- admission (preemption-by-demotion, never rejection) -----------------
 
     def _admit_one(self, req: Request, protected: set[int]) -> bool:
+        if self._alloc_fault:
+            # injected allocator exhaustion (FaultSpec "alloc"): surfaces
+            # exactly like real pool pressure -- admission blocks this
+            # tick and is retried on the next (retry is sound here)
+            self._alloc_fault = False
+            raise PoolExhausted("injected allocator exhaustion")
         plen = len(req.prompt)
         ps = self.pool.page_size
         npg = self.pool.pages_for(plen)
@@ -543,7 +573,8 @@ class PagedEngine(EngineBase):
         # position but the last, prefill is skipped outright and the
         # first tick plays the final prompt token as a decode step.
         matched: list[int] = []
-        if self.prefix is not None:
+        if self.prefix is not None and not self._degraded:
+            # (degraded plan pauses prefix admission: no match, no insert)
             matched = self.prefix.match(req.prompt)
             self._release_prefix_pages()
             if self.prefix_prefetch and matched:
@@ -554,8 +585,14 @@ class PagedEngine(EngineBase):
                           if self.store.tier[p] == TIER_COLD]
                 if cold_m:
                     self.policy.schedule_prefetch(cold_m, kind="prefix")
-                    self.policy.drain_prefetch(self.pool, self.store,
-                                               protected)
+                    try:
+                        self.policy.drain_prefetch(self.pool, self.store,
+                                                   protected)
+                    except ColdPageCorrupt as e:
+                        # the matched prefix itself is poisoned: scrub it
+                        # and retry admission next tick with a fresh match
+                        self._quarantine_page(e.pid, "checksum")
+                        return False
                     self.policy.account_swap_in(
                         matched, [p for p in cold_m
                                   if self.store.tier[p] == TIER_COLD])
@@ -621,7 +658,7 @@ class PagedEngine(EngineBase):
             self.resident[req.rid] = _RState(req, plen, tok[0],
                                              req.max_new - 1)
             self._pending_first.append((req, tok))
-        if self.prefix is not None:
+        if self.prefix is not None and not self._degraded:
             # publish this prompt's own full pages for future admissions
             self.prefix.insert(req.prompt, self.pool.table(req.rid))
             self._release_prefix_pages()
@@ -731,6 +768,17 @@ class PagedEngine(EngineBase):
                 protected.add(new)
             return True
 
+    def _try_decodable(self, rid: int, protected: set[int]) -> bool:
+        """``_ensure_decodable`` with checksum-failure containment: a
+        corrupt cold page quarantines every owner of that page (retired
+        with error status, pages scrubbed) instead of propagating -- the
+        fault never reaches peer lanes or the prefix store."""
+        try:
+            return self._ensure_decodable(rid, protected)
+        except ColdPageCorrupt as e:
+            self._quarantine_page(e.pid, "checksum")
+            return False
+
     def _fill_lanes(self, protected: set[int]):
         for i, rid in enumerate(self.lanes):
             if rid is not None:
@@ -749,12 +797,13 @@ class PagedEngine(EngineBase):
                         self._state_rid(cand))[0])
                 cold_before = [p for p in all_pages
                                if self.store.tier[p] == TIER_COLD]
-                if self._ensure_decodable(cand, protected):
+                if self._try_decodable(cand, protected):
                     # account once, on the attempt that actually swaps in
                     self.policy.account_swap_in(all_pages, cold_before)
                     self._assign(i, cand)
                     break
-                skipped.append(cand)               # no room this tick
+                if cand in self.resident:          # no room this tick
+                    skipped.append(cand)           # (vs quarantined: gone)
             self.parked.extendleft(reversed(skipped))
             if self.lanes[i] is not None:
                 continue
@@ -764,12 +813,13 @@ class PagedEngine(EngineBase):
                     ok = self._admit_one(req, protected)
                 except PoolExhausted:
                     ok = False
-                if ok and self._ensure_decodable(req.rid, protected):
+                if ok and self._try_decodable(req.rid, protected):
                     self.queue.popleft()
                     self._assign(i, req.rid)
                 elif ok:
                     self.queue.popleft()
-                    self.parked.append(req.rid)
+                    if req.rid in self.resident:   # not quarantined
+                        self.parked.append(req.rid)
                 else:
                     self.admission_blocked = True
 
@@ -796,13 +846,27 @@ class PagedEngine(EngineBase):
         tokens while this tick executes."""
         self.tick_no += 1
         self.admission_blocked = False
+        t_wall = time.perf_counter()
+        n_comp = self._jit_compiles()
         tr = self.obs.tracer
         t_tick = tr.now_us() if tr is not None else 0.0
+        fi = self.fault
+        if fi is not None:
+            # seeded fault sites drawn once per tick (storm-window gated)
+            if fi.should("alloc", self.tick_no):
+                self._alloc_fault = True
+            if fi.should("cold_payload", self.tick_no) and self.store.cold:
+                pids = sorted(self.store.cold.keys())
+                self.store.corrupt_cold(
+                    pids[fi.pick("cold_payload", len(pids))])
         # drain barrier: land last tick's async prefetch promotions BEFORE
         # anything can read the warm pool this tick (assist prefetch task)
         self.store.commit_promotions()
         protected = self._protected()
-        self.policy.drain_prefetch(self.pool, self.store, protected)
+        try:
+            self.policy.drain_prefetch(self.pool, self.store, protected)
+        except ColdPageCorrupt as e:
+            self._quarantine_page(e.pid, "checksum")
         self._fill_lanes(protected)
         # lane maintenance: boundary page allocation / re-promotion for
         # requests that stayed in their lane across ticks.  A lane whose
@@ -811,7 +875,9 @@ class PagedEngine(EngineBase):
         # next harvest frees -- bounded at one page per EOS-at-boundary,
         # accepted in exchange for never blocking on the token value
         for i, rid in enumerate(self.lanes):
-            if rid is not None and not self._ensure_decodable(rid, protected):
+            if rid is not None and not self._try_decodable(rid, protected):
+                if rid not in self.resident:
+                    continue                  # quarantined: lane vacated
                 self._vacate(i)                    # preempt by demotion
                 self.parked.appendleft(rid)
                 self._c_preempt.inc()
@@ -824,10 +890,12 @@ class PagedEngine(EngineBase):
         self._g_queued.set(len(self.queue))
         if not active:
             prev, self._inflight = self._inflight, None
-            return self._harvest(prev)
+            got = self._harvest(prev)
+            self._feed_watchdog(t_wall, n_comp)
+            return got
 
         self._push_lane_updates()
-        self.store.flush_movers()     # pending tier copies precede the read
+        self._flush_movers_guarded()  # pending tier copies precede the read
         # stage every host mirror ABOVE the transfer guard: the guarded
         # region must issue zero implicit h2d copies.  The tick counter is
         # staged only in strict mode -- a python int (weak type) and an
@@ -904,6 +972,7 @@ class PagedEngine(EngineBase):
                     cold.append(spid)
             if cold:
                 self.policy.schedule_prefetch(cold, kind="lookahead")
+        self._feed_watchdog(t_wall, n_comp)
         return True
 
     def _harvest(self, prev) -> bool:
@@ -914,8 +983,7 @@ class PagedEngine(EngineBase):
         if prev is None and not firsts:
             return False
         handles = [t for _, t in firsts] + ([prev[0]] if prev else [])
-        # sync-ok: lagged harvest -- device_get overlaps the in-flight tick
-        vals = jax.device_get(handles)
+        vals = self._device_get(handles)
         for (req, _), v in zip(firsts, vals):
             tok = int(np.asarray(v).ravel()[0])
             req.out.append(tok)
@@ -924,6 +992,15 @@ class PagedEngine(EngineBase):
                 st.last_tok = tok
         if prev is not None:
             nxt = np.asarray(vals[-1])
+            fi = self.fault
+            if fi is not None and fi.should("nan", self.tick_no):
+                # simulate NaN logits: the fused sampler's argmax over a
+                # NaN row lands out of vocab range -- poison one live lane
+                live = [i for i, rid, _, keep in prev[1]
+                        if keep and rid in self.resident]
+                if live:
+                    nxt = nxt.copy()
+                    nxt[live[fi.pick("nan", len(live))]] = -1
             for i, rid, rem, keep in prev[1]:
                 st = self.resident.get(rid)
                 if st is None:
@@ -931,6 +1008,11 @@ class PagedEngine(EngineBase):
                 if not keep:
                     continue              # replay tick: sample discarded
                 tok = int(nxt[i])
+                if not 0 <= tok < self.cfg.vocab_size:
+                    # unrecoverable (the bad sample is already the next
+                    # tick's input): retire with error, scrub pages
+                    self._quarantine(rid, "nan")
+                    continue
                 st.req.out.append(tok)
                 st.last_tok = tok
                 self.tokens_generated += 1
@@ -959,18 +1041,147 @@ class PagedEngine(EngineBase):
             # (the prompt+output prefix whose KV the store holds).
             self._park_on_retire.discard(rid)
             self._parked_sessions[rid] = st.length
+            # full token log (prompt + outputs across every turn): what a
+            # durable snapshot needs to rebuild the resume replay stream
+            base = self._session_history.pop(rid, None)
+            if base is None:
+                base = list(st.req.prompt)
+            self._session_history[rid] = base + list(st.req.out)
             self._c_parks.inc()
             self._g_parked_sessions.set(len(self._parked_sessions))
             if self.obs.tracer is not None:
                 self.obs.tracer.instant("session_park", tid=1, rid=rid,
                                         cached_len=st.length)
             return
+        self._session_history.pop(rid, None)
         freed = self.pool.free_request(rid)
         if self.has_state:
             freed += self.pool.free_request(self._state_rid(rid))
         for pid in freed:
             self.store.release(pid)
         self.policy.forget_pages(freed)
+
+    # -- resilience (DESIGN.md 17) -------------------------------------------
+
+    def _jit_compiles(self) -> int:
+        return self._prefill._cache_size() + self._decode._cache_size()
+
+    def _feed_watchdog(self, t_wall: float, n_comp: int):
+        """Feed one tick's wall latency to the watchdog -- UNLESS this
+        tick compiled a new jit variant (first-tick decode, a fresh
+        prefill bucket): compile time is a one-off, not load, and must
+        not trip the degraded plan."""
+        if self._jit_compiles() != n_comp:
+            return
+        if self._watchdog.observe(time.perf_counter() - t_wall,
+                                  self.tick_no):
+            self._apply_degraded(self._watchdog.degraded)
+
+    def _flush_movers_guarded(self):
+        """Pre-dispatch mover flush under fault injection: a simulated
+        dispatch failure retries with exponential backoff (sound -- the
+        flush is idempotent until bookkeeping observes it), bounded by
+        the spec.  The backoff sleeps inflate tick wall latency, which is
+        exactly what feeds the watchdog during a dense storm."""
+        fi = self.fault
+        if fi is not None and fi.should("mover", self.tick_no):
+            spec = fi.spec
+            for attempt in range(spec.max_retries):
+                fi.note_retry("mover")
+                if spec.backoff_base_s > 0.0:
+                    time.sleep(spec.backoff_base_s * (2 ** attempt))
+                if not fi.should("mover", self.tick_no):
+                    break
+        self.store.flush_movers()
+
+    def _device_get(self, handles):
+        """The harvest readback, with an optional stall watchdog: when
+        ``harvest_timeout_s`` is set, a hung dispatch surfaces as a
+        watchdog trip carrying the tick id instead of a silent hang --
+        then blocks for the value anyway (integrity over latency)."""
+        if self.harvest_timeout_s is None:
+            # sync-ok: lagged harvest -- overlaps the in-flight tick
+            return jax.device_get(handles)
+        if self._hpool is None:
+            self._hpool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1)
+        fut = self._hpool.submit(jax.device_get, handles)
+        try:
+            return fut.result(timeout=self.harvest_timeout_s)
+        except concurrent.futures.TimeoutError:
+            if self._watchdog.trip(self.tick_no, "harvest_timeout"):
+                self._apply_degraded(True)
+            return fut.result()
+
+    def _apply_degraded(self, flag: bool):
+        """Flip the degraded plan across the assist stack: prefetch off,
+        compression ratio floor relaxed, prefix admission paused."""
+        self._degraded = flag
+        self.policy.set_degraded(flag)
+        self.policy.controller.set_degraded(flag)
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("degraded" if flag else "recovered",
+                                    tid=1, tick=self.tick_no)
+
+    def _quarantine(self, rid: int, reason: str):
+        """Retire ``rid`` with error status and scrub every page it owns:
+        the blast radius of an unrecoverable fault is exactly one rid."""
+        st = self.resident.pop(rid, None)
+        for i, r in enumerate(self.lanes):
+            if r == rid:
+                self._vacate(i)
+        self._park_on_retire.discard(rid)
+        self._parked_sessions.pop(rid, None)
+        self._session_history.pop(rid, None)
+        try:
+            self.parked.remove(rid)
+        except ValueError:
+            pass
+        freed = self.pool.free_request(rid)
+        if self.has_state:
+            freed += self.pool.free_request(self._state_rid(rid))
+        for pid in freed:
+            self.store.release(pid)
+        self.policy.forget_pages(freed)
+        if st is not None:
+            st.req.error = reason
+            st.req.done = True
+            self.finished.append(st.req)
+        self._c_quarantine[reason].inc()
+        self._g_parked_sessions.set(len(self._parked_sessions))
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant("quarantine", tid=1, rid=rid,
+                                    reason=reason)
+
+    def _quarantine_page(self, pid: int, reason: str):
+        """Scrub every reader of a poisoned page: lane/parked rids are
+        quarantined, prefix-store references drop their whole subtree
+        (descendant pages extend past the corrupt prefix)."""
+        rids: set[int] = set()
+        drop_prefix = False
+        for r in list(self.pool.owners_of(pid)):
+            if r == PREFIX_RID:
+                drop_prefix = True
+            else:
+                rids.add(r if r >= 0 else -2 - r)
+        if drop_prefix and self.prefix is not None:
+            self.prefix.drop_pid(pid)
+            self._release_prefix_pages()
+        for r in sorted(rids):
+            self._quarantine(r, reason)
+
+    def persist(self, path: str):
+        """Durable park: serialize every parked session and the prefix
+        tree to ``path`` (atomic write+rename, versioned, per-page CRC).
+        Requires a drained engine -- see ``launch/serve.py``'s SIGTERM
+        handler for the stop-admission / finish-ticks sequence."""
+        write_snapshot(path, snapshot_engine(self))
+
+    def restore(self, path: str):
+        """Rebuild parked sessions, pool refcounts and the prefix tree
+        from a snapshot into this freshly built engine; conservation is
+        re-asserted via ``BlockPool.check()``."""
+        restore_engine(self, read_snapshot(path))
 
     # -- session lifecycle (DESIGN.md 15) ------------------------------------
 
@@ -1031,6 +1242,11 @@ class PagedEngine(EngineBase):
         replay = [int(t) for t in replay]
         if not replay:
             raise ValueError("resume needs >= 1 replay token")
+        hist = self._session_history.pop(rid, None)
+        if hist is not None:
+            # cached positions + everything replayed = full known log;
+            # this turn's sampled tokens append at the next park
+            self._session_history[rid] = hist[:hlen] + replay
         if hlen + len(replay) + req.max_new > self.max_len:
             raise ValueError(
                 f"session {rid}: history ({hlen}) + replay "
@@ -1054,6 +1270,7 @@ class PagedEngine(EngineBase):
     def release_session(self, rid: int):
         """Drop a parked session for good: free every page it holds."""
         self._parked_sessions.pop(rid)
+        self._session_history.pop(rid, None)
         freed = self.pool.free_request(rid)
         if self.has_state:
             freed += self.pool.free_request(self._state_rid(rid))
@@ -1115,6 +1332,15 @@ class PagedEngine(EngineBase):
              "session_parks": gv("engine_session_parks_total") or 0,
              "session_resumes": gv("engine_session_resumes_total") or 0,
              "replayed_tokens": gv("engine_replayed_tokens_total") or 0,
+             "degraded": 1 if self._degraded else 0,
+             "watchdog_trips": ((gv("engine_watchdog_trips_total",
+                                    reason="latency") or 0)
+                                + (gv("engine_watchdog_trips_total",
+                                      reason="harvest_timeout") or 0)),
+             "quarantines": ((gv("engine_quarantines_total",
+                                 reason="checksum") or 0)
+                             + (gv("engine_quarantines_total",
+                                   reason="nan") or 0)),
              "resident_tokens": self.resident_tokens(),
              "peak_resident_tokens": self.peak_resident_tokens,
              "tokens_generated": self.tokens_generated,

@@ -1,0 +1,355 @@
+"""Crash-safe serving: the durable tier below cold, seeded fault
+injection, and the degradation watchdog (DESIGN.md 17).
+
+Three cooperating pieces, all consumed by ``PagedEngine``:
+
+SNAPSHOTS.  ``snapshot_engine`` serializes everything a restart must not
+lose -- parked sessions' pages (all three page kinds, pushed fully down
+the tier ladder first so the payload is the already-lossy int8+scales
+representation an uninterrupted cold park would hold), per-session
+history and ``cached_len``, the prefix-store radix tree, and the rid
+bookkeeping -- into one versioned manifest written atomically
+(tmp + fsync + ``os.replace``).  Every page carries a CRC32 over its RAW
+(unpacked) planes, so the checksum is independent of which cold packing
+scheme (BDI / FPC / delta / raw) won on either side of the round trip.
+``restore_engine`` rebuilds a FRESH engine of identical geometry:
+allocate-or-share per page reference in table order (so ``BlockPool``
+refcounts and the shared-prefix topology come back exactly),
+``adopt_cold`` re-packs the raw planes into the cold tier, the radix
+tree is re-grafted, and ``BlockPool.check()`` re-asserts conservation.
+Disk is thus the tier below cold: restart is a promotion, not a cold
+start, and a resumed conversation is token-identical to an
+uninterrupted one.
+
+FAULTS.  ``FaultSpec`` (nested in ``ServeConfig``) names the injection
+sites and their per-tick probabilities inside a storm window; the
+``FaultInjector`` draws each site from its own seeded stream, so a chaos
+run is bit-reproducible from one integer.  Sites where retry is sound
+(mover dispatch) get bounded retry-with-backoff; sites where it is not
+(checksum mismatch, NaN logits) get quarantine: the poisoned rid is
+retired with an error status and its pages scrubbed, never the peers.
+
+DEGRADATION.  ``Watchdog`` turns tick latency into a hysteresis-gated
+``engine_degraded`` bit: ``trip_after`` consecutive over-threshold ticks
+trip it (prefetch off, compression floor relaxed, prefix admission
+paused -- the AssistController's degraded plan), ``recover_after``
+consecutive healthy ticks re-enable.  The harvest-timeout path calls
+``trip`` directly, so a hung device_get surfaces as a trip with the
+tick id instead of a silent hang.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Optional
+
+import numpy as np
+
+from repro.cache.tiers import planes_crc
+from repro.obs.metrics import NULL_REGISTRY
+
+#: manifest schema version; bumped on any layout change so a stale file
+#: refuses loudly instead of mis-restoring
+SNAPSHOT_VERSION = 1
+
+#: named injection sites, index-stable: each draws from
+#: ``default_rng([seed, index])`` so adding a site never perturbs the
+#: streams of existing ones
+FAULT_SITES = ("mover", "cold_payload", "alloc", "nan")
+
+
+class SnapshotError(RuntimeError):
+    """Snapshot refused: version/geometry/checksum mismatch, in-flight
+    work at persist time, or a tier ladder that cannot express a durable
+    park (hot-only builds have no lossless disk path)."""
+
+
+def write_snapshot(path: str, payload: dict):
+    """Atomic durability: write to ``path + '.tmp'``, fsync, then
+    ``os.replace`` -- a crash mid-write leaves the previous snapshot
+    intact, never a torn manifest."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=4)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def read_snapshot(path: str) -> dict:
+    with open(path, "rb") as f:
+        snap = pickle.load(f)
+    if not isinstance(snap, dict) or snap.get("version") != SNAPSHOT_VERSION:
+        raise SnapshotError(
+            f"{path}: snapshot version {snap.get('version')!r} != "
+            f"{SNAPSHOT_VERSION}")
+    return snap
+
+
+def _geometry_fingerprint(engine) -> tuple:
+    """Everything page layout depends on: a snapshot only restores into
+    an engine whose pools would place the planes identically."""
+    g = engine.store.geom
+    return (engine.pool.page_size,
+            tuple((sg.kind, sg.n_stack, sg.heads, sg.rows,
+                   sg.k_width, sg.v_width) for sg in g.seg_geoms))
+
+
+def snapshot_engine(engine) -> dict:
+    """Build the manifest for everything parked in ``engine``.
+
+    Preconditions: no in-flight tick and no resident requests (the
+    graceful-drain path finishes those first), and the warm+cold ladder
+    enabled -- the durable payload IS the cold representation, so the
+    snapshot costs exactly what an uninterrupted cold park costs
+    (hot->warm int8 is the only lossy edge, paid once either way).
+    """
+    if engine.resident or engine._inflight is not None:
+        raise SnapshotError("drain in-flight work before persisting "
+                            "(resident requests or a pending tick)")
+    policy = engine.policy
+    if not (policy.compression_enabled and policy.cold_enabled):
+        raise SnapshotError("durable persist needs the warm+cold ladder "
+                            "(enable_warm and enable_cold)")
+    pool, store = engine.pool, engine.store
+
+    sessions = {}
+    for rid, cached_len in engine._parked_sessions.items():
+        pids = list(pool.table(rid))
+        spids = list(pool.table(engine._state_rid(rid))) \
+            if engine.has_state else []
+        sessions[rid] = {
+            "cached_len": int(cached_len),
+            "history": list(engine._session_history.get(rid, ())),
+            "pages": pids,
+            "state_pages": spids,
+        }
+
+    prefix_nodes = None
+    if engine.prefix is not None:
+        prefix_nodes = engine.prefix.export_tree()
+
+    # push every referenced page fully down the ladder, one batched
+    # episode, then export the raw planes per unique pid
+    referenced = []
+    seen = set()
+    for rec in sessions.values():
+        for pid in rec["pages"] + rec["state_pages"]:
+            if pid not in seen:
+                seen.add(pid)
+                referenced.append(pid)
+    if prefix_nodes:
+        for _, pid, _ in prefix_nodes:
+            if pid not in seen:
+                seen.add(pid)
+                referenced.append(pid)
+    with store.deferred():
+        policy.park_pages(pool, store, referenced, protected=set())
+    pages = {}
+    for pid in referenced:
+        raw = store.export_page(pid)        # raises for hot/free pages
+        pages[pid] = {"cls": store.cls_of(pid), "planes": raw,
+                      "crc": planes_crc(raw)}
+
+    return {
+        "version": SNAPSHOT_VERSION,
+        "geometry": _geometry_fingerprint(engine),
+        "next_rid": engine._next_rid,
+        "seen_rids": sorted(engine._seen_rids),
+        "sessions": sessions,
+        "pages": pages,
+        "prefix": prefix_nodes,
+    }
+
+
+def restore_engine(engine, snap: dict):
+    """Rebuild pool ownership, cold payloads, parked sessions and the
+    prefix tree from a manifest, onto a FRESHLY BUILT engine of identical
+    configuration.  Ends by re-asserting pool conservation."""
+    from repro.cache.block_pool import PREFIX_RID
+
+    if snap["geometry"] != _geometry_fingerprint(engine):
+        raise SnapshotError("snapshot geometry does not match this "
+                            "engine's page layout")
+    if engine.resident or engine._parked_sessions or engine.queue:
+        raise SnapshotError("restore needs a fresh engine (no resident, "
+                            "parked, or queued requests)")
+    for pid, rec in snap["pages"].items():
+        if planes_crc(rec["planes"]) != rec["crc"]:
+            raise SnapshotError(f"page {pid}: checksum mismatch in "
+                                f"snapshot payload")
+
+    pool, store = engine.pool, engine.store
+    new_pid: dict[int, int] = {}
+
+    def _materialize(old_pid: int, rid: int) -> int:
+        """First reference allocates + adopts the payload; later ones
+        share (rebuilding the exact refcount/reader topology)."""
+        npid = new_pid.get(old_pid)
+        if npid is None:
+            npid = pool.allocate(rid, 1)[0]
+            rec = snap["pages"][old_pid]
+            store.adopt_cold(npid, rec["cls"], rec["planes"])
+            new_pid[old_pid] = npid
+        else:
+            pool.share(npid, rid)
+        return npid
+
+    for rid, rec in sorted(snap["sessions"].items()):
+        for old_pid in rec["pages"]:
+            _materialize(old_pid, rid)
+        for old_pid in rec["state_pages"]:
+            _materialize(old_pid, engine._state_rid(rid))
+        engine._parked_sessions[rid] = rec["cached_len"]
+        engine._session_history[rid] = list(rec["history"])
+
+    if snap["prefix"] is not None and engine.prefix is not None:
+        nodes = [(key, _materialize(old_pid, PREFIX_RID), parent)
+                 for key, old_pid, parent in snap["prefix"]]
+        engine.prefix.adopt_tree(nodes)
+
+    engine._seen_rids.update(snap["seen_rids"])
+    engine._next_rid = max(engine._next_rid, snap["next_rid"])
+    pool.check()
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Deterministic fault-injection plan, nested in ``ServeConfig``.
+
+    Rates are per-tick (per-site) probabilities, active only inside the
+    storm window ``[from_tick, until_tick)``; a spec with
+    ``until_tick <= from_tick`` injects nothing.  ``max_retries`` /
+    ``backoff_base_s`` bound the mover retry loop (exponential backoff,
+    which also inflates tick latency enough to exercise the watchdog
+    when the storm is dense)."""
+
+    seed: int = 0
+    mover_fail_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    alloc_fail_rate: float = 0.0
+    nan_rate: float = 0.0
+    max_retries: int = 3
+    backoff_base_s: float = 0.0
+    from_tick: int = 0
+    until_tick: int = 0
+
+    def rate(self, site: str) -> float:
+        return {"mover": self.mover_fail_rate,
+                "cold_payload": self.corrupt_rate,
+                "alloc": self.alloc_fail_rate,
+                "nan": self.nan_rate}[site]
+
+
+class FaultInjector:
+    """Seeded per-site draw streams + injection/retry counters.
+
+    One ``default_rng([seed, site_index])`` per site keeps every site's
+    sequence independent of how often the others fire -- the chaos storm
+    replays bit-identically from the spec alone."""
+
+    def __init__(self, spec: FaultSpec, metrics=None):
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self.spec = spec
+        self._rngs = {site: np.random.default_rng([spec.seed, i])
+                      for i, site in enumerate(FAULT_SITES)}
+        self._c_injected = {site: m.counter(
+            "engine_faults_injected_total",
+            "faults injected by site (FaultSpec storm window)", site=site)
+            for site in FAULT_SITES}
+        self._c_retries = {site: m.counter(
+            "engine_fault_retries_total",
+            "bounded retry-with-backoff attempts by site", site=site)
+            for site in FAULT_SITES}
+
+    def should(self, site: str, tick: int) -> bool:
+        """Draw this site's stream once; True = inject at this tick.
+        The stream advances ONLY inside the storm window, so the window
+        placement never perturbs the draw sequence."""
+        spec = self.spec
+        if not (spec.from_tick <= tick < spec.until_tick):
+            return False
+        r = spec.rate(site)
+        if r <= 0.0:
+            return False
+        hit = bool(self._rngs[site].random() < r)
+        if hit:
+            self._c_injected[site].inc()
+        return hit
+
+    def pick(self, site: str, n: int) -> int:
+        """Deterministic victim index in [0, n) from the site's stream."""
+        return int(self._rngs[site].integers(n))
+
+    def note_retry(self, site: str):
+        self._c_retries[site].inc()
+
+
+class Watchdog:
+    """Tick-latency watchdog with trip/recover hysteresis.
+
+    ``observe`` feeds one tick's wall latency; ``trip_after`` consecutive
+    over-threshold ticks enter the degraded plan, ``recover_after``
+    consecutive healthy ticks leave it.  Both edges return True from
+    ``observe`` so the engine applies the plan exactly on transitions.
+    ``trip`` is the direct entry for non-latency evidence (the harvest
+    timeout), recording the offending tick id.
+
+    The default threshold must sit well above a HEALTHY tick on the
+    slowest supported substrate: interpret-mode CPU decode ticks run
+    multiple seconds wall-clock, and a watchdog that trips on ordinary
+    ticks silently pauses prefix admission everywhere."""
+
+    def __init__(self, threshold_s: float = 10.0, trip_after: int = 3,
+                 recover_after: int = 8, metrics=None):
+        m = metrics if metrics is not None else NULL_REGISTRY
+        self.threshold_s = threshold_s
+        self.trip_after = trip_after
+        self.recover_after = recover_after
+        self.degraded = False
+        self.trip_tick: Optional[int] = None
+        self._over = 0
+        self._under = 0
+        self._g_degraded = m.gauge(
+            "engine_degraded", "1 while the engine runs the degraded "
+            "assist plan (prefetch off, prefix admission paused)")
+        self._c_trips = {r: m.counter(
+            "engine_watchdog_trips_total",
+            "watchdog trips into the degraded plan", reason=r)
+            for r in ("latency", "harvest_timeout")}
+        self._c_recovers = m.counter(
+            "engine_watchdog_recoveries_total",
+            "hysteresis-gated re-enables after a watchdog trip")
+
+    def observe(self, seconds: float, tick: int) -> bool:
+        """Returns True when the degraded state CHANGED this tick."""
+        if seconds > self.threshold_s:
+            self._over += 1
+            self._under = 0
+        else:
+            self._under += 1
+            self._over = 0
+        if not self.degraded and self._over >= self.trip_after:
+            return self.trip(tick, "latency")
+        if self.degraded and self._under >= self.recover_after:
+            self.degraded = False
+            self._g_degraded.set(0)
+            self._c_recovers.inc()
+            self._over = self._under = 0
+            return True
+        return False
+
+    def trip(self, tick: int, reason: str) -> bool:
+        """Force the degraded plan (returns True if this is a new trip)."""
+        self._over = self._under = 0
+        self.trip_tick = tick
+        self._c_trips[reason].inc()
+        if self.degraded:
+            return False
+        self.degraded = True
+        self._g_degraded.set(1)
+        return True

@@ -112,6 +112,15 @@ class SessionManager:
         for s in self.sessions:
             if s.state not in (DECODING, RESUMING) or not s.req.done:
                 continue
+            if s.req.error is not None:
+                # shed at admission or quarantined mid-decode (DESIGN.md
+                # 17): the turn never completed -- count the violation
+                # and end the session; its pages are already scrubbed
+                s.turns_violated += 1
+                self._c_bad[s.slo.name].inc()
+                s.state = DONE
+                self._by_rid.pop(s.rid, None)
+                continue
             lat = now - s.ready_tick
             s.turn_latencies.append(lat)
             self._h_lat[s.slo.name].observe(lat)
@@ -142,13 +151,15 @@ class SessionManager:
     def _submit_turn(self, s: Session, turn, *, full_prompt: list):
         """Fresh-prefill path (first turn, or re-prefill resume)."""
         req = Request(rid=s.rid if s.rid is not None else s.trace.sid,
-                      prompt=list(full_prompt), max_new=turn.max_new)
+                      prompt=list(full_prompt), max_new=turn.max_new,
+                      cls=s.slo.name)
         self.engine.submit(req)
         if s.rid is not None:
             self._by_rid.pop(s.rid, None)
         s.rid, s.req = req.rid, req            # submit may recycle the rid
         self._by_rid[req.rid] = s
-        if self.spec.park and s.turn_idx + 1 < len(s.trace.turns):
+        if (self.spec.park and not req.done   # done here = shed at intake
+                and s.turn_idx + 1 < len(s.trace.turns)):
             self.engine.park_on_retire(req.rid)
         self.prefilled_prompt_tokens += len(full_prompt)
 
@@ -179,7 +190,7 @@ class SessionManager:
             if mode == "replay":
                 req = Request(rid=s.rid,
                               prompt=s.history + list(turn.tokens),
-                              max_new=turn.max_new)
+                              max_new=turn.max_new, cls=s.slo.name)
                 self.engine.resume_session(req, replay)
                 s.req = req
                 if s.turn_idx + 1 < len(s.trace.turns):

@@ -1,0 +1,450 @@
+"""Crash-safe serving (DESIGN.md 17): durable snapshots, fault
+injection, quarantine containment and graceful degradation.
+
+The core guarantee, per page kind: an engine killed between ticks and
+restored from its durable snapshot resumes a parked session with
+EXACTLY the tokens an uninterrupted engine produces -- where the
+uninterrupted baseline also cold-parks the session, since the durable
+payload is by construction the (int8-lossy at the warm edge, bit-exact
+below it) representation a cold park holds.
+
+Around the core: the cold-page serialize/deserialize round trip is
+bit-exact across the BDI/FPC/delta packing schemes (property-tested)
+and across all three page kinds (attn KV / MLA latent / SSM state
+slab), a corrupted cold page quarantines ONLY its owning request while
+peers decode on unperturbed, the bounded admission queue sheds the
+lowest SLO class first, the watchdog trips and recovers with hysteresis,
+and the seeded fault injector is deterministic per (seed, site).
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import pytest
+
+from repro.cache import TIER_COLD, TierConfig
+from repro.cache.tiers import (ColdPageCorrupt, _pack_cold, _unpack_cold,
+                               planes_crc)
+from repro.configs import ARCHS, reduced
+from repro.models.model import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.engine import Request
+from repro.serving.paged_engine import PagedEngine
+from repro.serving.resilience import (FaultInjector, FaultSpec,
+                                      SnapshotError, Watchdog,
+                                      read_snapshot, write_snapshot)
+
+NO_EOS = 1 << 30
+TIERED = TierConfig(page_size=16, hbm_budget_bytes=1 << 26,
+                    enable_warm=True, enable_cold=True,
+                    host_budget_bytes=1 << 26)
+HOT_ONLY = TierConfig(page_size=16, hbm_budget_bytes=1 << 30,
+                      enable_warm=False, enable_cold=False)
+
+# one arch per page kind: attention KV, MLA latents, SSM state slab
+SESSION_ARCHS = ("qwen2-7b", "deepseek-v2-lite-16b", "zamba2-1.2b")
+
+
+@functools.lru_cache(maxsize=None)
+def _built(arch):
+    cfg = reduced(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module", params=SESSION_ARCHS)
+def served_arch(request):
+    return _built(request.param)
+
+
+def _tiered(model, params, **kw):
+    kw.setdefault("lanes", 2)
+    kw.setdefault("max_len", 96)
+    return PagedEngine(model, params, tier=TIERED, eos_id=NO_EOS,
+                      use_roofline_trigger=False, **kw)
+
+
+# -- cold-page serialize/deserialize: bit-exact round trip ------------------
+
+
+def _roundtrip(x8: np.ndarray, use_delta: bool):
+    name, obj, _ = _pack_cold(x8, use_delta)
+    back = _unpack_cold(name, obj, x8.shape)
+    np.testing.assert_array_equal(back, x8)
+    return name
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                         # gated: no pip install here
+    HAVE_HYPOTHESIS = False
+
+_PATTERNS = ("random", "constant", "ramp", "sparse", "smooth")
+_SHAPES = ((2, 2, 16, 8), (1, 1, 16, 16), (3, 1, 4, 32))
+
+
+def _check_pack_roundtrip(seed, pattern, use_delta, shape):
+    """Whatever scheme the packer picks (delta/BDI/FPC/raw -- steered by
+    the payload's structure), unpack restores the int8 planes bit-exactly
+    and the raw-plane checksum is invariant across pack/unpack."""
+    r = np.random.default_rng(seed)
+    if pattern == "random":
+        x8 = r.integers(-128, 128, shape).astype(np.int8)
+    elif pattern == "constant":
+        x8 = np.full(shape, int(r.integers(-128, 128)), np.int8)
+    elif pattern == "ramp":
+        x8 = (np.arange(int(np.prod(shape))) % 251
+              ).astype(np.int8).reshape(shape)
+    elif pattern == "sparse":
+        x8 = np.zeros(shape, np.int8)
+        flat = x8.reshape(-1)
+        idx = r.integers(0, flat.size, max(1, flat.size // 16))
+        flat[idx] = r.integers(-128, 128, idx.size).astype(np.int8)
+    else:                                   # smooth: small deltas
+        steps = r.integers(-2, 3, int(np.prod(shape)))
+        x8 = np.cumsum(steps).astype(np.int8).reshape(shape)
+    _roundtrip(x8, use_delta)
+    sc = r.random((shape[0], shape[1], shape[2])).astype(np.float32)
+    planes = [[(x8, sc)]]
+    assert planes_crc(planes) == planes_crc(
+        [[(np.asarray(x8, np.int8).copy(), sc.copy())]])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           pattern=st.sampled_from(_PATTERNS),
+           use_delta=st.booleans(),
+           shape=st.sampled_from(_SHAPES))
+    def test_cold_pack_roundtrip_property(seed, pattern, use_delta,
+                                          shape):
+        _check_pack_roundtrip(seed, pattern, use_delta, shape)
+else:
+    # deterministic grid fallback: same property, fixed seeds
+    @pytest.mark.parametrize("pattern", _PATTERNS)
+    @pytest.mark.parametrize("use_delta", (False, True))
+    @pytest.mark.parametrize("shape", _SHAPES)
+    def test_cold_pack_roundtrip_property(pattern, use_delta, shape):
+        for seed in range(4):
+            _check_pack_roundtrip(seed, pattern, use_delta, shape)
+
+
+def test_cold_export_adopt_roundtrip_all_page_kinds(served_arch, rng):
+    """Store-level snapshot round trip per page kind: export a COLD
+    page's raw planes, adopt them into a FRESH engine's store (the
+    restore path), and the re-export is bit-identical with the same
+    checksum."""
+    cfg, model, params = served_arch
+    eng = _tiered(model, params)
+    prompt = [int(t) for t in rng.integers(2, 400, 24)]
+    eng.submit(Request(rid=1, prompt=prompt, max_new=4))
+    eng.park_on_retire(1)
+    eng.run()
+    eng.park_session_pages(1)
+    cold = [p for p in eng.session_pages(1)
+            if eng.store.tier[p] == TIER_COLD]
+    assert cold, "park_session_pages left nothing cold"
+
+    fresh = _tiered(model, params)
+    for pid in cold:
+        raw = eng.store.export_page(pid)
+        crc = planes_crc(raw)
+        cls = eng.store.cls_of(pid)
+        fresh.store.adopt_cold(pid, cls, raw)
+        raw2 = fresh.store.export_page(pid)
+        assert planes_crc(raw2) == crc
+        for seg, seg2 in zip(raw, raw2):
+            for (x8, sc), (x8b, scb) in zip(seg, seg2):
+                np.testing.assert_array_equal(x8, x8b)
+                np.testing.assert_array_equal(sc, scb)
+
+
+# -- kill between ticks -> restore: token identity per page kind ------------
+
+
+def test_kill_restore_token_identity(served_arch, rng, tmp_path):
+    """Engine killed after parking a session and restored from the
+    snapshot resumes with EXACTLY the tokens an uninterrupted engine
+    (same cold park) produces, for attn_kv / mla_latent / state_slab
+    pages alike -- and the restored pool drains clean."""
+    cfg, model, params = served_arch
+    t1 = [int(t) for t in rng.integers(2, 400, 24)]
+    t2 = [int(t) for t in rng.integers(2, 400, 5)]
+    path = str(tmp_path / "snap")
+
+    def first_turn(e):
+        r = Request(rid=3, prompt=list(t1), max_new=4)
+        e.submit(r)
+        e.park_on_retire(3)
+        e.run()
+        e.park_session_pages(3)
+        return t1 + r.out, e.parked_session_len(3)
+
+    def resume(e, hist, hlen):
+        r2 = Request(rid=3, prompt=hist + t2, max_new=4)
+        e.resume_session(r2, hist[hlen:] + t2)
+        e.run()
+        return r2.out
+
+    live = _tiered(model, params)
+    hist, hlen = first_turn(live)
+
+    killed = _tiered(model, params)
+    hist_k, hlen_k = first_turn(killed)
+    assert (hist_k, hlen_k) == (hist, hlen)
+    killed.persist(path)                    # ... the process dies here ...
+
+    restored = _tiered(model, params)
+    restored.restore(path)
+    assert restored.parked_session_len(3) == hlen
+    assert restored.stats()["parked_sessions"] == 1
+
+    out_live = resume(live, hist, hlen)
+    out_restored = resume(restored, list(hist), hlen)
+    assert out_restored == out_live
+    for e in (live, restored):
+        e.pool.check()
+        assert e.pool.n_free == e.pool.num_pages
+
+
+def test_persist_refuses_resident_and_restore_refuses_dirty(
+        served_arch, tmp_path):
+    """persist() only runs at a drained engine; restore() only into a
+    fresh one; a tampered payload fails the checksum gate."""
+    cfg, model, params = served_arch
+    path = str(tmp_path / "snap")
+    eng = _tiered(model, params)
+    eng.submit(Request(rid=1, prompt=list(range(2, 20)), max_new=8))
+    eng.step()
+    with pytest.raises(SnapshotError):
+        eng.persist(path)                   # in-flight work: refused
+    eng.run()
+    r = Request(rid=2, prompt=list(range(2, 26)), max_new=4)
+    eng.submit(r)
+    eng.park_on_retire(2)
+    eng.run()
+    eng.park_session_pages(2)
+    eng.persist(path)                       # drained + parked: fine
+
+    dirty = _tiered(model, params)
+    dirty.submit(Request(rid=1, prompt=list(range(2, 20)), max_new=8))
+    dirty.step()
+    with pytest.raises(SnapshotError):
+        dirty.restore(path)                 # resident work: refused
+
+    snap = read_snapshot(path)
+    assert snap["pages"], "parked session produced no durable pages"
+    pid = next(iter(snap["pages"]))
+    snap["pages"][pid]["crc"] ^= 1
+    write_snapshot(path, snap)
+    with pytest.raises(SnapshotError):
+        _tiered(model, params).restore(path)
+
+
+# -- quarantine containment -------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served_qwen():
+    return _built("qwen2-7b")
+
+
+def test_corrupt_cold_page_quarantines_only_owner(served_qwen, rng):
+    """A cold page failing its checksum retires ONLY the owning session
+    (error status, pages scrubbed); a peer decoding concurrently is
+    token-identical to an undisturbed run, and the pool drains clean."""
+    cfg, model, params = served_qwen
+    t1 = [int(t) for t in rng.integers(2, 400, 24)]
+    peer_prompt = [int(t) for t in rng.integers(2, 400, 18)]
+
+    def drive(corrupt):
+        eng = _tiered(model, params)
+        r1 = Request(rid=1, prompt=list(t1), max_new=4)
+        eng.submit(r1)
+        eng.park_on_retire(1)
+        eng.run()
+        eng.park_session_pages(1)
+        cold = [p for p in eng.session_pages(1)
+                if eng.store.tier[p] == TIER_COLD]
+        assert cold
+        if corrupt:
+            assert eng.store.corrupt_cold(cold[0])
+        peer = Request(rid=2, prompt=list(peer_prompt), max_new=6)
+        eng.submit(peer)
+        eng.step()                          # peer decoding mid-quarantine
+        hist = t1 + r1.out
+        r2 = Request(rid=1, prompt=hist + [5, 6, 7], max_new=3)
+        eng.resume_session(r2, hist[eng.parked_session_len(1):] + [5, 6, 7])
+        eng.run()
+        return eng, peer, r2
+
+    eng, peer_ok, r2_ok = drive(corrupt=False)
+    assert r2_ok.error is None and len(r2_ok.out) == 3
+
+    eng2, peer, r2 = drive(corrupt=True)
+    assert r2.error == "checksum" and r2.done
+    assert peer.error is None
+    assert peer.out == peer_ok.out, "peer perturbed by quarantine"
+    gv = eng2.obs.metrics.get_value
+    assert (gv("engine_quarantines_total", reason="checksum") or 0) >= 1
+    eng2.pool.check()
+    assert eng2.pool.n_free == eng2.pool.num_pages
+    assert eng2.stats()["parked_sessions"] == 0
+
+
+def test_nan_logit_quarantine(served_qwen, rng):
+    """An injected NaN/garbage logit retires the victim with error
+    status 'nan'; the surviving lane finishes with the same tokens as a
+    fault-free run."""
+    cfg, model, params = served_qwen
+    prompts = [[int(t) for t in rng.integers(2, 400, 16 + 4 * i)]
+               for i in range(2)]
+
+    def drive(spec):
+        eng = _tiered(model, params, fault=spec)
+        reqs = [Request(rid=i, prompt=list(p), max_new=6)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        eng.pool.check()
+        return eng, reqs
+
+    _, clean = drive(None)
+    eng, reqs = drive(FaultSpec(seed=7, nan_rate=1.0, from_tick=3,
+                                until_tick=4))
+    bad = [r for r in reqs if r.error == "nan"]
+    good = [r for r in reqs if r.error is None]
+    assert len(bad) == 1 and len(good) == 1
+    assert good[0].out == clean[good[0].rid].out
+    gv = eng.obs.metrics.get_value
+    assert (gv("engine_quarantines_total", reason="nan") or 0) == 1
+
+
+# -- bounded admission queue: SLO-class-aware shed --------------------------
+
+
+def test_bounded_queue_sheds_lowest_class_first(served_qwen):
+    cfg, model, params = served_qwen
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      max_queue=2)
+    p = list(range(2, 12))
+    ri = Request(rid=0, prompt=p, max_new=2, cls="interactive")
+    rb = Request(rid=1, prompt=p, max_new=2, cls="batch")
+    eng.submit(ri)
+    eng.submit(rb)
+    # queue full: an arriving interactive sheds the queued BATCH request
+    ri2 = Request(rid=2, prompt=p, max_new=2, cls="interactive")
+    eng.submit(ri2)
+    assert rb.done and rb.error == "shed" and rb.out == []
+    assert not ri.done and not ri2.done
+    # queue full of interactive: an arriving batch sheds ITSELF
+    rb2 = Request(rid=3, prompt=p, max_new=2, cls="batch")
+    eng.submit(rb2)
+    assert rb2.done and rb2.error == "shed"
+    assert not ri.done and not ri2.done
+    # untagged ranks below every named class: sheds before interactive
+    run = Request(rid=4, prompt=p, max_new=2)
+    eng.submit(run)                          # sheds itself (untagged)
+    assert run.done and run.error == "shed"
+    gv = eng.obs.metrics.get_value
+    assert gv("engine_admission_rejected_total", reason="shed") == 3
+    assert gv("engine_queue_depth") == 2
+    done = eng.run()
+    assert {r.rid for r in done if r.error is None} >= {0, 2}
+    # oversize rejection keeps its own labeled count
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=9, prompt=list(range(2, 99)), max_new=9))
+    assert gv("engine_admission_rejected_total", reason="oversize") == 1
+
+
+# -- watchdog hysteresis ----------------------------------------------------
+
+
+def test_watchdog_trip_and_recover_hysteresis():
+    m = MetricsRegistry()
+    w = Watchdog(threshold_s=0.5, trip_after=2, recover_after=3,
+                 metrics=m)
+    assert not w.observe(0.1, tick=0)
+    assert not w.observe(0.9, tick=1)       # 1 slow tick: not yet
+    assert not w.observe(0.1, tick=2)       # streak broken
+    assert not w.observe(0.9, tick=3)
+    assert w.observe(0.9, tick=4)           # 2nd consecutive: TRIP
+    assert w.degraded and w.trip_tick == 4
+    assert not w.observe(0.9, tick=5)       # still degraded: no change
+    assert not w.observe(0.1, tick=6)
+    assert not w.observe(0.1, tick=7)
+    assert not w.observe(0.9, tick=8)       # healthy streak broken
+    assert not w.observe(0.1, tick=9)
+    assert not w.observe(0.1, tick=10)
+    assert w.observe(0.1, tick=11)          # 3rd consecutive: RECOVER
+    assert not w.degraded
+    assert m.get_value("engine_watchdog_trips_total",
+                       reason="latency") == 1
+    assert m.get_value("engine_watchdog_recoveries_total") == 1
+    assert m.get_value("engine_degraded") == 0
+    # direct trip entry (harvest timeout) uses its own reason label
+    assert w.trip(tick=12, reason="harvest_timeout")
+    assert w.degraded
+    assert m.get_value("engine_watchdog_trips_total",
+                       reason="harvest_timeout") == 1
+
+
+def test_degraded_plan_pauses_assist_not_correctness(served_qwen):
+    """Tripping the watchdog pauses prefix admission and prefetch but
+    decode stays correct; recovery re-enables them (hysteresis visible
+    in the counters)."""
+    cfg, model, params = served_qwen
+    eng = PagedEngine(model, params, lanes=1, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False,
+                      prefix_reuse=True)
+    ref = PagedEngine(model, params, lanes=1, max_len=96, tier=HOT_ONLY,
+                      eos_id=NO_EOS, use_roofline_trigger=False)
+    eng._watchdog.trip(eng.tick_no, "latency")
+    eng._apply_degraded(True)
+    assert eng.policy.controller.degraded and eng.policy._degraded
+    prompt = list(range(2, 34))
+    r = Request(rid=0, prompt=list(prompt), max_new=4)
+    eng.submit(r)
+    eng.run()
+    rr = Request(rid=0, prompt=list(prompt), max_new=4)
+    ref.submit(rr)
+    ref.run()
+    assert r.out == rr.out                  # degraded != wrong
+    assert eng.stats()["prefix"]["nodes"] == 0   # admission paused
+    eng._apply_degraded(False)
+    assert not eng.policy.controller.degraded and not eng.policy._degraded
+    r2 = Request(rid=1, prompt=list(prompt), max_new=4)
+    eng.submit(r2)
+    eng.run()
+    assert eng.stats()["prefix"]["nodes"] > 0    # admission resumed
+
+
+# -- seeded fault injector: deterministic per (seed, site) ------------------
+
+
+def test_fault_injector_deterministic():
+    spec = FaultSpec(seed=11, mover_fail_rate=0.5, corrupt_rate=0.5,
+                     alloc_fail_rate=0.5, nan_rate=0.5, from_tick=2,
+                     until_tick=12)
+    a, b = FaultInjector(spec), FaultInjector(spec)
+    seq_a = [(s, t, a.should(s, t), a.pick(s, 7))
+             for t in range(16) for s in ("mover", "cold_payload",
+                                          "alloc", "nan")]
+    seq_b = [(s, t, b.should(s, t), b.pick(s, 7))
+             for t in range(16) for s in ("mover", "cold_payload",
+                                          "alloc", "nan")]
+    assert seq_a == seq_b
+    assert any(fired for (_, _, fired, _) in seq_a)
+    # outside the window nothing fires and streams do not advance
+    assert all(not fired for (_, t, fired, _) in seq_a
+               if not 2 <= t < 12)
+    c = FaultInjector(dataclasses.replace(spec, seed=12))
+    seq_c = [(s, t, c.should(s, t), c.pick(s, 7))
+             for t in range(16) for s in ("mover", "cold_payload",
+                                          "alloc", "nan")]
+    assert seq_c != seq_a                   # a different seed differs
